@@ -1,0 +1,204 @@
+"""Paper experiments E1-E8 (one function per paper figure/table).
+
+Scale note: the paper's cluster is 40 nodes x 24 cores = 960 cores; its task
+counts are 4.6k-23.4k. We run the same task counts with the same worker x
+thread topology; task compute is virtual time, store ops are measured (see
+simkit). Where the container is the limit (one CPU), counts are optionally
+scaled by ``scale`` with proportional workloads — ratios, not absolute
+seconds, are the reproduction target.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.simkit import SimResult, run_centralized, run_distributed
+from repro.configs import risers_workflow as RW
+
+PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
+                                 # concurrency (calibrated to Fig. 11's
+                                 # short-task saturation; see EXPERIMENTS)
+PAPER_MASTER_RTT_S = 0.010       # Chiron: MPI hop + PostgreSQL transaction
+
+
+def exp1_strong_scaling(scale: float = 0.1) -> List[Dict]:
+    """Fig. 9a: fixed 13k-task workload, 120->960 cores, threads sweep."""
+    n_tasks = int(13_000 * scale)
+    rows = []
+    base: Dict[int, float] = {}
+    for threads in (12, 24, 48):
+        for nodes in (5, 10, 20, 40):
+            r = run_distributed(nodes, threads, n_tasks, 60.0)
+            key = threads
+            if nodes == 5:
+                base[key] = r.makespan_s
+            linear = base[key] * 5 / nodes
+            rows.append({
+                "exp": "e1", "nodes": nodes, "cores": nodes * 24,
+                "threads": threads, "makespan_s": round(r.makespan_s, 2),
+                "linear_s": round(linear, 2),
+                "efficiency": round(linear / r.makespan_s, 3),
+            })
+    return rows
+
+
+def exp2_weak_scaling(scale: float = 0.1) -> List[Dict]:
+    """Fig. 9b: workload grows with cores (6k/12k/23.4k on 10/20/39 nodes)."""
+    rows = []
+    base = None
+    for nodes, n_tasks in ((10, 6_000), (20, 12_000), (39, 23_400)):
+        r = run_distributed(nodes, 24, int(n_tasks * scale), 60.0)
+        if base is None:
+            base = r.makespan_s
+        rows.append({
+            "exp": "e2", "nodes": nodes, "cores": nodes * 24,
+            "tasks": int(n_tasks * scale),
+            "makespan_s": round(r.makespan_s, 2),
+            "vs_linear": round(r.makespan_s / base - 1.0, 3),
+        })
+    return rows
+
+
+def exp3_workload_tasks(scale: float = 0.1) -> List[Dict]:
+    """Fig. 10a: fixed duration (5s / 60s), varying #tasks, 39 nodes."""
+    rows = []
+    for mode, lat in (("paper", PAPER_ACCESS_LATENCY_S), ("adapted", 0.0)):
+        for dur in (5.0, 60.0):
+            base = None
+            for n_tasks in RW.EXP3_TASK_COUNTS:
+                n = int(n_tasks * scale)
+                r = run_distributed(39, 24, n, dur, access_latency_s=lat)
+                if base is None:
+                    base = (r.makespan_s, n)
+                linear = base[0] * n / base[1]
+                rows.append({
+                    "exp": "e3", "mode": mode, "task_dur_s": dur, "tasks": n,
+                    "makespan_s": round(r.makespan_s, 2),
+                    "linear_s": round(linear, 2),
+                    "gap": round(r.makespan_s / linear - 1.0, 4),
+                })
+    return rows
+
+
+def exp4_workload_duration(scale: float = 0.1) -> List[Dict]:
+    """Fig. 10b: fixed #tasks (4.6k / 23.4k), varying duration."""
+    rows = []
+    for mode, lat in (("paper", PAPER_ACCESS_LATENCY_S), ("adapted", 0.0)):
+        for n_tasks in RW.EXP4_TASK_COUNTS:
+            n = int(n_tasks * scale)
+            base = None
+            for dur in sorted(RW.EXP4_DURATIONS, reverse=True):
+                r = run_distributed(39, 24, n, dur, access_latency_s=lat)
+                if base is None:
+                    base = (r.makespan_s, dur)
+                linear = base[0] * dur / base[1]
+                rows.append({
+                    "exp": "e4", "mode": mode, "tasks": n, "task_dur_s": dur,
+                    "makespan_s": round(r.makespan_s, 2),
+                    "linear_s": round(linear, 2),
+                    "gap": round(r.makespan_s / max(linear, 1e-9) - 1.0, 4),
+                })
+    return rows
+
+
+def exp5_dbms_overhead(scale: float = 0.1) -> List[Dict]:
+    """Fig. 11: DBMS access time vs total, 23.4k tasks, dur 1..60s.
+
+    Two regimes per duration: "paper" charges the calibrated per-access
+    latency of the paper's stack; "adapted" charges only our measured
+    in-memory store ops (the TPU adaptation's real overhead).
+    """
+    rows = []
+    n = int(RW.EXP5_TASKS * scale)
+    for dur in RW.EXP5_DURATIONS:
+        for mode, lat in (("paper", PAPER_ACCESS_LATENCY_S), ("adapted", 0.0)):
+            r = run_distributed(39, 24, n, dur, access_latency_s=lat)
+            rows.append({
+                "exp": "e5", "mode": mode, "task_dur_s": dur,
+                "dbms_max_node_s": round(r.dbms_time_s, 4),
+                "dbms_total_s": round(r.dbms_total_s, 4),
+                "total_s": round(r.makespan_s, 2),
+                "dbms_frac": round(
+                    r.dbms_time_s * 39 / max(r.makespan_s * 39, 1e-9), 4),
+            })
+    return rows
+
+
+def exp6_access_breakdown(scale: float = 0.1) -> List[Dict]:
+    """Fig. 12: time share per DBMS access kind (10s workload)."""
+    n = int(RW.EXP5_TASKS * scale)
+    r = run_distributed(39, 24, n, 10.0, activities=3, steer_every_s=0.0)
+    total = sum(r.op_time.values())
+    return [{
+        "exp": "e6", "op": k,
+        "time_s": round(v, 4),
+        "share": round(v / total, 4),
+        "count": r.op_count[k],
+    } for k, v in sorted(r.op_time.items(), key=lambda kv: -kv[1])]
+
+
+def exp7_steering_overhead(scale: float = 0.1) -> List[Dict]:
+    """Fig. 13: wall time with vs without 15s-interval steering queries."""
+    n = int(RW.EXP5_TASKS * scale)
+    r0 = run_distributed(39, 24, n, 5.0, steer_every_s=0.0,
+                         access_latency_s=PAPER_ACCESS_LATENCY_S)
+    r1 = run_distributed(39, 24, n, 5.0, steer_every_s=15.0,
+                         access_latency_s=PAPER_ACCESS_LATENCY_S)
+    return [{
+        "exp": "e7", "steering": s, "makespan_s": round(r.makespan_s, 2),
+        "overhead": round(r.makespan_s / r0.makespan_s - 1.0, 4),
+        "queries_run": r.op_count.get("steering(Q1..Q6)", 0),
+    } for s, r in (("off", r0), ("on", r1))]
+
+
+def exp8_centralized_vs_distributed(scale: float = 0.1) -> List[Dict]:
+    """Fig. 14: Chiron (centralized) vs d-Chiron (SchalaDB) on 39 nodes."""
+    rows = []
+    for name, n_tasks, dur in RW.EXP8_WORKLOADS:
+        n = int(n_tasks * scale)
+        for mode, lat, rtt in (("paper", PAPER_ACCESS_LATENCY_S,
+                                PAPER_MASTER_RTT_S),
+                               ("adapted", 0.0, 0.0)):
+            rd = run_distributed(39, 24, n, dur, access_latency_s=lat)
+            rc = run_centralized(39, 24, n, dur, request_overhead_s=rtt)
+            rows.append({
+                "exp": "e8", "mode": mode, "workload": name, "tasks": n,
+                "task_dur_s": dur,
+                "distributed_s": round(rd.makespan_s, 2),
+                "centralized_s": round(rc.makespan_s, 2),
+                "speedup": round(rc.makespan_s / max(rd.makespan_s, 1e-9), 2),
+                "central_sched_s": round(rc.dbms_time_s, 3),
+                "distrib_sched_s": round(rd.dbms_total_s, 3),
+                "central_msgs": rc.messages,
+            })
+    return rows
+
+
+def exp_kernel_claim() -> List[Dict]:
+    """On-device claim op (wq_claim kernel semantics) latency vs store size."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.wq_claim.ref import wq_claim_ref
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (1 << 12, 1 << 15, 1 << 18):
+        for w in (64, 936):
+            status = jnp.asarray(
+                rng.choice([0, 2, 3, 4], n, p=[.1, .5, .2, .2]).astype(
+                    np.int32))
+            worker = jnp.asarray(rng.integers(0, w, n).astype(np.int32))
+            fn = jax.jit(lambda s, wk: wq_claim_ref(s, wk, num_workers=w,
+                                                    k=1))
+            fn(status, worker)[0].block_until_ready()
+            t0 = time.perf_counter()
+            reps = 20
+            for _ in range(reps):
+                out = fn(status, worker)
+            out[0].block_until_ready()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            rows.append({"exp": "claim_kernel", "rows": n, "workers": w,
+                         "us_per_claim_all": round(us, 1),
+                         "us_per_task": round(us / max(w, 1), 3)})
+    return rows

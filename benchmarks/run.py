@@ -1,0 +1,90 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per harness contract) and
+writes the full records to results/bench/*.json.
+
+``--scale`` scales the paper's task counts (default 0.1 => 1.3k-2.3k tasks
+per run; the paper's ratios are scale-invariant here because store-op cost
+is measured at true partition sizes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import experiments as E
+
+    runs = {
+        "e1_strong_scaling": lambda: E.exp1_strong_scaling(args.scale),
+        "e2_weak_scaling": lambda: E.exp2_weak_scaling(args.scale),
+        "e3_workload_tasks": lambda: E.exp3_workload_tasks(args.scale),
+        "e4_workload_duration": lambda: E.exp4_workload_duration(args.scale),
+        "e5_dbms_overhead": lambda: E.exp5_dbms_overhead(args.scale),
+        "e6_access_breakdown": lambda: E.exp6_access_breakdown(args.scale),
+        "e7_steering_overhead": lambda: E.exp7_steering_overhead(args.scale),
+        "e8_centralized_vs_distributed":
+            lambda: E.exp8_centralized_vs_distributed(args.scale),
+        "claim_kernel": E.exp_kernel_claim,
+    }
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in runs.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        (out_dir / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        derived = _headline(name, rows)
+        print(f"{name},{dt_us / max(len(rows), 1):.1f},{derived}")
+
+
+def _headline(name: str, rows) -> str:
+    try:
+        if name.startswith("e1"):
+            best = max(r["efficiency"] for r in rows if r["nodes"] == 40)
+            return f"efficiency@960cores={best}"
+        if name.startswith("e2"):
+            return f"vs_linear@39nodes={rows[-1]['vs_linear']}"
+        if name.startswith("e3"):
+            worst = max(r["gap"] for r in rows)
+            return f"max_gap={worst}"
+        if name.startswith("e4"):
+            worst = max(r["gap"] for r in rows)
+            return f"max_gap={worst}"
+        if name.startswith("e5"):
+            fr = {(r["mode"], r["task_dur_s"]): r["dbms_frac"] for r in rows}
+            return (f"paper@1s={fr.get(('paper',1.0))};"
+                    f"paper@60s={fr.get(('paper',60.0))};"
+                    f"adapted@1s={fr.get(('adapted',1.0))}")
+        if name.startswith("e6"):
+            top = rows[0]
+            return f"top_op={top['op']}:{top['share']}"
+        if name.startswith("e7"):
+            return f"steering_overhead={rows[-1]['overhead']}"
+        if name.startswith("e8"):
+            p = max(r["speedup"] for r in rows if r["mode"] == "paper")
+            a = max(r["speedup"] for r in rows if r["mode"] == "adapted")
+            return f"paper_speedup={p}x;adapted={a}x"
+        if name == "claim_kernel":
+            return f"us_per_task_min={min(r['us_per_task'] for r in rows)}"
+    except Exception as e:  # noqa: BLE001
+        return f"err:{e}"
+    return ""
+
+
+if __name__ == "__main__":
+    main()

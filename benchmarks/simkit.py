@@ -1,0 +1,212 @@
+"""Benchmark engine: event-driven workflow simulation over the REAL store.
+
+Methodology (EXPERIMENTS.md §Benchmarks): scheduler/store operations are
+MEASURED (wall time of the real ColumnStore/WorkQueue ops at true partition
+sizes); task *compute* advances a virtual clock (the paper itself uses
+synthetic workloads with configured durations — its tasks are external
+simulations we have no reason to re-run). Wall-clock results are therefore
+"simulated seconds" composed of measured scheduling latency + virtual task
+time, with worker/thread parallelism modeled exactly like the paper's
+cluster: W workers x T threads each.
+
+The paper's experiments map 1:1 (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.risers_workflow import WorkflowConfig
+from repro.core.centralized import CentralizedMaster
+from repro.core.schema import Status
+from repro.core.steering import SteeringEngine
+from repro.core.supervisor import Supervisor
+from repro.core.workqueue import WorkQueue
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan_s: float               # simulated wall time
+    dbms_time_s: float              # max per-node accumulated DBMS time
+    dbms_total_s: float             # sum of all DBMS access time
+    op_time: Dict[str, float]       # measured time by op kind
+    op_count: Dict[str, int]
+    tasks_done: int
+    messages: int = 0
+
+
+def run_distributed(num_workers: int, threads: int, num_tasks: int,
+                    mean_dur_s: float, *, activities: int = 1,
+                    seed: int = 0, steer_every_s: float = 0.0,
+                    batch_claim: int = 1,
+                    access_latency_s: float = 0.0) -> SimResult:
+    """d-Chiron-style run: partitioned WQ, workers pull from own partition.
+
+    ``access_latency_s`` reproduces the PAPER's hardware regime: per-access
+    wall latency of MySQL Cluster over Gigabit Ethernet under 936-thread
+    concurrency (the paper's Fig. 11 shows DBMS time ~ total wall for <=3 s
+    tasks on 23.4k tasks; that implies ~10 ms effective latency per access —
+    we use 12 ms, see EXPERIMENTS §Benchmarks). With the default 0.0 the sim
+    charges only OUR measured in-memory store op times — i.e., the
+    TPU-adapted system — which removes that bottleneck entirely.
+    """
+    rng = np.random.default_rng(seed)
+    wf = WorkflowConfig(activities=tuple(f"a{i}" for i in range(activities)))
+    wq = WorkQueue(num_workers=num_workers,
+                   capacity=max(1 << 16, 2 * num_tasks * activities))
+    sup = Supervisor(wq, wf)
+    per_act = num_tasks // activities
+    sup.seed(per_act, duration_s=mean_dur_s, rng=rng)
+    steer = SteeringEngine(wq)
+
+    op_time: Dict[str, float] = {}
+    op_count: Dict[str, int] = {}
+    dbms_by_worker = np.zeros(num_workers)
+
+    def timed(kind: str, fn, worker: Optional[int] = None):
+        t0 = time.perf_counter()
+        out = fn()
+        # access multiplicity mirrors the paper's Fig. 12 op inventory:
+        # claim = getREADYtasks + updateToRUNNING (2 round trips);
+        # finish = updateToFINISHED + store outputs + getFileFields (3)
+        mult = {"getREADYtasks+toRUNNING": 2, "updateToFINISHED": 3}.get(kind, 1)
+        dt = time.perf_counter() - t0 + access_latency_s * mult
+        op_time[kind] = op_time.get(kind, 0.0) + dt
+        op_count[kind] = op_count.get(kind, 0) + 1
+        if worker is not None:
+            dbms_by_worker[worker] += dt
+        else:
+            dbms_by_worker[:] = dbms_by_worker + dt / num_workers
+        return dt, out
+
+    # event loop: (finish_time, worker, row)
+    clock = 0.0
+    events: List[Tuple[float, int, int]] = []
+    free_threads = {w: threads for w in range(num_workers)}
+    done = 0
+    next_steer = steer_every_s if steer_every_s else np.inf
+
+    def try_fill(w: int):
+        nonlocal clock
+        while free_threads[w] > 0:
+            t_claim, rows = timed("getREADYtasks+toRUNNING",
+                                  lambda: wq.claim(w,
+                                                   k=min(batch_claim,
+                                                         free_threads[w]),
+                                                   now=clock,
+                                                   allow_steal=True),
+                                  worker=w)
+            if len(rows) == 0:
+                return
+            for row in rows:
+                dur = float(wq.store.col("duration_est")[row]) or \
+                    rng.exponential(mean_dur_s)
+                # CPU oversubscription: threads beyond the 24 cores/node
+                # time-share (the paper's 48-thread curve degrades this way)
+                if threads > 24:
+                    dur *= (threads / 24.0) * 1.08   # + contention
+                # the claim access blocks the thread before the task starts
+                heapq.heappush(events, (clock + t_claim + dur, w, int(row)))
+                free_threads[w] -= 1
+
+    for w in range(num_workers):
+        try_fill(w)
+
+    while events:
+        clock, w, row = heapq.heappop(events)
+        out = rng.normal(0.5, 0.3, (1, 3))
+        t_fin, _ = timed("updateToFINISHED",
+                         lambda: wq.finish(np.asarray([row]), now=clock,
+                                           domain_out=out), worker=w)
+        clock += t_fin                    # completion access blocks the thread
+        free_threads[w] += 1
+        done += 1
+        if activities > 1 and done % num_workers == 0:
+            # batched expansion: the supervisor inserts dependents in bulk,
+            # off the workers' claim path (paper Fig. 2: supervisor is not a
+            # proxy between workers and their tasks)
+            timed("supervisor.expand", lambda: sup.expand(now=clock))
+        if clock >= next_steer:
+            # steering queries run on a separate analyst session — they do
+            # NOT block workers (in-memory store, paper Experiment 7)
+            timed("steering(Q1..Q6)", lambda: steer.run_all(clock))
+            next_steer += steer_every_s
+        try_fill(w)
+        if not events:
+            # supervisor may have inserted new READY tasks
+            for w2 in range(num_workers):
+                try_fill(w2)
+
+    dbms_total = float(dbms_by_worker.sum())
+    return SimResult(
+        makespan_s=clock,
+        dbms_time_s=float(dbms_by_worker.max()),
+        dbms_total_s=dbms_total,
+        op_time=op_time, op_count=op_count, tasks_done=done)
+
+
+def run_centralized(num_workers: int, threads: int, num_tasks: int,
+                    mean_dur_s: float, *, seed: int = 0,
+                    request_overhead_s: float = 0.0) -> SimResult:
+    """Chiron-style run: ONE master serializes every claim over one queue.
+
+    The master is a serial resource: claim/finish requests queue behind each
+    other (the paper's Fig. 6-B bottleneck). Simulated time accounts for the
+    serialized master occupancy; op costs are measured on the real store.
+    """
+    rng = np.random.default_rng(seed)
+    master = CentralizedMaster(capacity=max(1 << 16, 2 * num_tasks))
+    master.add_tasks(0, num_tasks)
+    clock = 0.0
+    master_free_at = 0.0
+    events: List[Tuple[float, int, int]] = []
+    free_threads = {w: threads for w in range(num_workers)}
+    done = 0
+    op_time: Dict[str, float] = {}
+    op_count: Dict[str, int] = {}
+
+    def master_op(kind: str, fn) -> Tuple[float, object]:
+        """Serialize through the master; returns (completion_time, result)."""
+        nonlocal master_free_at
+        t0 = time.perf_counter()
+        out = fn()
+        # request_overhead_s models Chiron's per-request cost: MPI round trip
+        # + centralized PostgreSQL transaction (paper Fig. 6-B), serialized
+        # at the single master
+        dt = time.perf_counter() - t0 + request_overhead_s
+        op_time[kind] = op_time.get(kind, 0.0) + dt
+        op_count[kind] = op_count.get(kind, 0) + 1
+        start = max(clock, master_free_at)
+        master_free_at = start + dt
+        return master_free_at, out
+
+    def try_fill(w: int):
+        while free_threads[w] > 0:
+            t_done, rows = master_op("master.claim",
+                                     lambda: master.claim(w, 1, now=clock))
+            if len(rows) == 0:
+                return
+            dur = rng.exponential(mean_dur_s)
+            heapq.heappush(events, (t_done + dur, w, int(rows[0])))
+            free_threads[w] -= 1
+
+    for w in range(num_workers):
+        try_fill(w)
+    while events:
+        clock, w, row = heapq.heappop(events)
+        master_op("master.finish",
+                  lambda: master.finish(np.asarray([row]), now=clock))
+        free_threads[w] += 1
+        done += 1
+        try_fill(w)
+
+    return SimResult(
+        makespan_s=max(clock, master_free_at),
+        dbms_time_s=master.busy_s,
+        dbms_total_s=master.busy_s,
+        op_time=op_time, op_count=op_count, tasks_done=done,
+        messages=master.total_messages)

@@ -1,0 +1,57 @@
+"""Fault-tolerance drill: worker death, supervisor failover, checkpoint
+resume, straggler cloning — the paper's availability story end to end.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig
+from repro.runtime.executor import TrainExecutor
+from repro.runtime.fault import HeartbeatMonitor
+
+
+def main():
+    cfg = smoke_config("qwen2-0.5b")
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_write=False)
+        ex = TrainExecutor(cfg, num_workers=3, checkpointer=ck,
+                           checkpoint_every=6,
+                           data_cfg=DataConfig(vocab_size=cfg.vocab_size,
+                                               seq_len=32, batch_size=4))
+        mon = HeartbeatMonitor(ex.wq, timeout_s=5.0, now=0.0)
+        ex.submit_steps(18)
+        print("18 tasks, 3 workers, checkpoint every 6 steps")
+
+        for i in range(4):
+            ex.tick()
+        print(f"[t=4] progress: {ex.wq.counts()['FINISHED']} finished")
+
+        n = ex.fail_worker(1)
+        print(f"[t=4] WORKER 1 DIES -> {n} RUNNING tasks requeued+rehashed")
+        ex.promote_secondary()
+        print("[t=4] SUPERVISOR DIES -> secondary promoted "
+              f"(generation {ex.supervisor.state.generation})")
+
+        ex.run()
+        ck.save(ex.step, ex.state, ex.wq)
+        print(f"[done] finished={ex.wq.counts()['FINISHED']}; "
+              f"fail_trials recorded: "
+              f"{int(ex.wq.store.col('fail_trials').sum())}")
+
+        # crash-restart: restore from the atomic checkpoint
+        step, state, wq = ck.restore(jax.device_get(ex.state))
+        print(f"[restart] restored step {step}, store rows {wq.store.n_rows},"
+              f" counts {wq.counts()}")
+        assert wq.counts()["FINISHED"] == 18
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: WQ-driven training of a small LM with live steering queries.
+
+The SchalaDB work queue schedules training tasks across (simulated) workers,
+captures provenance (loss / grad-norm / timing) into the same store, and the
+steering engine answers the paper's Q1/Q4/Q5-style queries WHILE training.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 60]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig
+from repro.runtime.executor import TrainExecutor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    ex = TrainExecutor(
+        cfg, num_workers=args.workers, base_lr=3e-3,
+        data_cfg=DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                            batch_size=8))
+    ex.submit_steps(args.steps)
+    print(f"workflow: {args.steps} train tasks over {args.workers} workers "
+          f"(partitioned work queue)")
+
+    t0 = time.time()
+    while ex.steering.q4_tasks_left() > 0:
+        m = ex.tick()
+        if m and m["step"] % 10 == 0:
+            q1 = ex.steering.q1_recent_status_by_node(time.time())
+            done = sum(v["finished"] for v in q1.values())
+            print(f"step {m['step']:4d} loss {m['loss']:.4f} "
+                  f"grad {m['grad_norm']:.3f} | Q4 left: "
+                  f"{ex.steering.q4_tasks_left():3d} | Q1 finished/node: "
+                  f"{ {k: v['finished'] for k, v in q1.items()} }")
+    hist = ex.history
+    print(f"\ndone in {time.time()-t0:.1f}s; "
+          f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    mon = ex.steering.device_monitor()
+    print(f"on-device monitor (HTAP mirror): {mon}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Parse collective ops + byte counts out of compiled/lowered HLO text.
+
+``cost_analysis`` has no collective-bytes entry, so we regex the (post-SPMD)
+HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and sum their result-shape bytes.
+
+Per-chip link-bytes model (ring algorithms on a 1D/2D torus):
+  all-reduce:        2 * S * (n-1)/n   bytes through each chip
+  all-gather:        S * (n-1)/n       (S = full gathered size)
+  reduce-scatter:    S * (n-1)/n
+  all-to-all:        S * (n-1)/n       (S = per-chip payload * n)
+  collective-permute: S                (one hop)
+Caveat: while-loop (scan) bodies appear ONCE in HLO text; the roofline module
+scales scanned-body collectives by trip count via the two-point depth probe.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[16,512,128]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+# tuple-result variants: (bf16[..], bf16[..]) all-reduce(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    total_bytes: int = 0
+
+    def add(self, kind: str, nbytes: int):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + nbytes
+        self.total_bytes += nbytes
+
+    def link_bytes(self, n_devices: int) -> float:
+        """Per-chip bytes through the busiest link under ring algorithms."""
+        f = (n_devices - 1) / max(n_devices, 1)
+        total = 0.0
+        for kind, b in self.bytes_by_kind.items():
+            if kind == "all-reduce":
+                total += 2.0 * b * f
+            elif kind == "collective-permute":
+                total += float(b)
+            else:
+                total += b * f
+        return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            # async pairs: count only the -start op
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            stats.add(kind, _shape_bytes(dtype, dims))
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(shapes))
+            stats.add(kind, nbytes)
+    return stats

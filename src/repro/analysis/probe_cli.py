@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Roofline depth-probe CLI: one (arch x shape) cell per process (single-pod
+# mesh — the roofline table is single-pod per the assignment).
+import argparse
+import json
+import pathlib
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+
+    from repro.analysis.roofline import analyze_cell
+    from repro.configs import SHAPES, cell_status, get_config
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh_name = "multipod_2x16x16" if args.multi else "pod_16x16"
+    cell = f"{args.arch}__{args.shape}__{mesh_name}"
+    status = cell_status(get_config(args.arch), SHAPES[args.shape])
+    if status != "run":
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+               "status": status}
+    else:
+        try:
+            rec = analyze_cell(args.arch, args.shape, args.multi)
+            rec["status"] = "ok"
+            t = rec["terms"]
+            print(f"[roofline] {cell}: compute {t['compute_s']*1e3:.2f}ms "
+                  f"memory {t['memory_s']*1e3:.2f}ms "
+                  f"collective {t['collective_s']*1e3:.2f}ms "
+                  f"-> {t['bottleneck']}; "
+                  f"MFU {rec['roofline_fraction']*100:.1f}% "
+                  f"useful {rec['useful_ratio']*100:.1f}%")
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+                   "status": f"error: {type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[roofline] {cell}: FAILED {e}")
+    (out_dir / f"{cell}.json").write_text(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Roofline analysis per (arch x shape x mesh) from compiled dry-run cells.
+
+Three terms (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute    = HLO_FLOPs        / (chips * peak_flops)
+  memory     = HLO_bytes        / (chips * hbm_bw)
+  collective = link_bytes/chip  / link_bw
+
+FLOP/byte counting caveat + remedy: ``cost_analysis`` counts a while-loop
+(scan) body ONCE regardless of trip count. We therefore run a *two-point
+depth probe*: the same step is lowered at depth d1 and d2 layers with every
+model scan fully unrolled (flags.unrolled_scans) and microbatches=1 (token
+count — and hence FLOPs — are batch-linear, so accumulation doesn't change
+totals). Then
+
+  per_layer = (cost(d2) - cost(d1)) / (d2 - d1)
+  total     = cost(d1) + per_layer * (L_real - d1)
+
+The same scaling applies to collective bytes. The gradient all-reduce bytes
+DO scale with microbatch count; we add the analytic correction
+(mb-1) * grad_sync_bytes on top of the probe (documented per cell).
+
+MODEL_FLOPS (the "useful" numerator for the efficiency ratio) is the standard
+analytic count: 6*N_active*T for training (2*N_active*T forward) plus the
+attention term 12*L*B*S^2*H*Dh*(0.5 causal) (4*... for forward-only), and the
+family-specific mixer terms for SSD / RG-LRU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import (FAMILY_ENCDEC, FAMILY_HYBRID, FAMILY_MOE,
+                                FAMILY_SSM, HardwareConfig, ModelConfig,
+                                ShapeConfig, V5E)
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+def analytic_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count
+    hd = cfg.resolved_head_dim
+    if shape.kind == "train":
+        tokens = shape.tokens
+        base = 6.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.global_batch, shape.seq_len,
+                           mult=12.0)
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = shape.tokens
+        base = 2.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.global_batch, shape.seq_len, mult=4.0)
+        return base + attn
+    # decode: one token per sequence
+    b = shape.global_batch
+    base = 2.0 * n_active * b
+    # attention over the cache: 4*B*L_attn*Hq*Dh*S_kv (QK^T + PV)
+    l_attn, _ = _attn_layer_count(cfg)
+    skv = shape.seq_len
+    if cfg.family == FAMILY_HYBRID:
+        skv = min(skv, cfg.rglru.window)
+    if cfg.family == FAMILY_SSM:
+        attn = 2.0 * b * cfg.num_layers * _ssd_state_flops(cfg)
+    else:
+        attn = 4.0 * b * l_attn * cfg.num_heads * hd * skv
+    if cfg.family == FAMILY_ENCDEC:
+        attn += 4.0 * b * cfg.num_layers * cfg.num_heads * hd \
+            * cfg.cross_kv_len
+    return base + attn
+
+
+def _attn_layer_count(cfg: ModelConfig) -> Tuple[int, float]:
+    """(#self-attention layers, causal factor)."""
+    if cfg.family == FAMILY_SSM:
+        return 0, 1.0
+    if cfg.family == FAMILY_HYBRID:
+        plen = len(cfg.rglru.pattern)
+        n_attn = (cfg.num_layers // plen) * sum(
+            1 for p in cfg.rglru.pattern if p == "attn")
+        return n_attn, 1.0
+    if cfg.family == FAMILY_ENCDEC:
+        return cfg.num_layers + cfg.num_encoder_layers, 1.0
+    return cfg.num_layers, 0.5     # causal
+
+
+def _attn_flops(cfg: ModelConfig, b: int, s: int, mult: float) -> float:
+    l_attn, causal = _attn_layer_count(cfg)
+    hd = cfg.resolved_head_dim
+    if cfg.family == FAMILY_HYBRID:
+        # local attention: each query sees at most `window` keys
+        w = cfg.rglru.window
+        span = min(w, s)
+        per = mult * b * s * span * cfg.num_heads * hd * 0.5
+        rec_layers = cfg.num_layers - l_attn
+        ssd = 0.0
+        return l_attn * per + rec_layers * mult / 2.0 * b * s \
+            * (cfg.rglru.lru_width or cfg.d_model)   # recurrence ~ elementwise
+    if cfg.family == FAMILY_SSM:
+        return cfg.num_layers * mult / 2.0 * b * s * _ssd_chunk_flops(cfg)
+    if cfg.family == FAMILY_ENCDEC:
+        enc = cfg.num_encoder_layers * mult * b * s * s \
+            * cfg.num_heads * hd
+        dec_s = max(cfg.loss_chunk, s // 8)
+        dec = cfg.num_layers * mult * b * dec_s * dec_s * cfg.num_heads \
+            * hd * 0.5
+        cross = cfg.num_layers * mult * b * dec_s * min(s, cfg.cross_kv_len) \
+            * cfg.num_heads * hd
+        return enc + dec + cross
+    return l_attn * mult * b * s * s * cfg.num_heads * hd * causal
+
+
+def _ssd_chunk_flops(cfg: ModelConfig) -> float:
+    """Per-token SSD dual-form flops (intra-chunk quadratic + states)."""
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    nh = d_in // s_cfg.head_dim
+    q = s_cfg.chunk
+    n, p = s_cfg.state_dim, s_cfg.head_dim
+    # per token: scores row q*n + y_diag q*p per head group + states n*p
+    return nh * (q * n / nh + q * p + 2 * n * p)
+
+
+def _ssd_state_flops(cfg: ModelConfig) -> float:
+    s_cfg = cfg.ssm
+    d_in = s_cfg.expand * cfg.d_model
+    nh = d_in // s_cfg.head_dim
+    return nh * s_cfg.head_dim * s_cfg.state_dim * 2
+
+
+# ---------------------------------------------------------------------------
+# probe
+# ---------------------------------------------------------------------------
+def probe_depths(cfg: ModelConfig) -> Tuple[int, int]:
+    """Never probe with a trip-count-1 layer scan: GSPMD lowers single-trip
+    scans with degraded (replicated) sharding, inflating per-device costs
+    ~16x (measured on recurrentgemma prefill_32k)."""
+    if cfg.family == FAMILY_HYBRID:
+        plen = len(cfg.rglru.pattern)
+        return 2 * plen, 3 * plen        # 2 and 3 pattern groups
+    return 2, 3
+
+
+def layer_units(cfg: ModelConfig) -> float:
+    """Real depth in probe units (hybrid: groups incl. fractional tail)."""
+    if cfg.family == FAMILY_HYBRID:
+        plen = len(cfg.rglru.pattern)
+        return cfg.num_layers / plen
+    return float(cfg.num_layers)
+
+
+def probe_cfg(cfg: ModelConfig, depth: int) -> ModelConfig:
+    upd = dict(num_layers=depth, microbatches=1, q_chunk=2048,
+               loss_chunk=2048, attn_impl="chunked")
+    if cfg.family == FAMILY_ENCDEC:
+        plen = 1
+        upd["num_encoder_layers"] = depth
+    return dataclasses.replace(cfg, **upd)
+
+
+def run_probe(arch: str, shape_name: str, multi_pod: bool = False
+              ) -> Dict[str, float]:
+    """Lower the cell at two unrolled depths; return per-layer + base costs."""
+    from repro import flags
+    from repro.analysis.hlo_collectives import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import shape_cells
+
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    d1, d2 = probe_depths(cfg0)
+    out: Dict[str, Dict[str, float]] = {}
+    for d in (d1, d2):
+        cfg = probe_cfg(cfg0, d)
+        with flags.unrolled_scans(True):
+            lowered = shape_cells(cfg, shape, mesh)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text())
+        out[d] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "link_bytes": coll.link_bytes(mesh.size),
+        }
+    units = layer_units(cfg0)
+    # per-unit delta: non-hybrid probes step layers; hybrid probes step whole
+    # (rec,rec,attn) groups
+    plen = len(cfg0.rglru.pattern) if cfg0.family == FAMILY_HYBRID else 1
+    unit_span = (d2 - d1) / plen
+    per_unit = {k: (out[d2][k] - out[d1][k]) / unit_span for k in out[d1]}
+    base_units = d1 / plen
+    total = {k: out[d1][k] + per_unit[k] * (units - base_units)
+             for k in out[d1]}
+    # microbatch gradient-sync correction (train only): each extra microbatch
+    # re-syncs gradients once
+    mb = cfg0.microbatches
+    if shape.kind == "train" and mb > 1:
+        grad_bytes = cfg0.param_count * 2.0    # bf16 grads
+        n = mesh.size
+        total["link_bytes"] += (mb - 1) * 2.0 * grad_bytes * (n - 1) / n / n
+    return {"d1": out[d1], "d2": out[d2], "per_unit": per_unit,
+            "total": total, "units": units}
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+def roofline_terms(total: Dict[str, float], n_chips: int,
+                   hw: HardwareConfig = V5E) -> Dict[str, float]:
+    """cost_analysis on the SPMD-partitioned module reports PER-DEVICE costs;
+    link_bytes is already per-chip."""
+    compute_s = total["flops"] / hw.peak_flops_bf16
+    memory_s = total["bytes"] / hw.hbm_bandwidth
+    coll_s = total["link_bytes"] / hw.ici_bandwidth
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "bottleneck": dom}
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 hw: HardwareConfig = V5E) -> Dict[str, object]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    probe = run_probe(arch, shape_name, multi_pod)
+    n_chips = 512 if multi_pod else 256
+    terms = roofline_terms(probe["total"], n_chips, hw)
+    model_flops = analytic_model_flops(cfg, shape)
+    hlo_flops_global = probe["total"]["flops"] * n_chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    step_s = max(terms["compute_s"], terms["memory_s"],
+                 terms["collective_s"])
+    mfu = (model_flops / n_chips / hw.peak_flops_bf16) / step_s \
+        if step_s > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod_2x16x16" if multi_pod else "pod_16x16",
+        "terms": terms,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu,
+        "probe": probe,
+    }

@@ -1,0 +1,8 @@
+"""SchalaDB core: distributed in-memory data management for workflow
+executions (the paper's primary contribution, adapted to JAX/TPU — see
+DESIGN.md §2)."""
+from repro.core.schema import Status, wq_schema  # noqa: F401
+from repro.core.store import ColumnStore  # noqa: F401
+from repro.core.workqueue import WorkQueue  # noqa: F401
+from repro.core.supervisor import SecondarySupervisor, Supervisor  # noqa: F401
+from repro.core.steering import SteeringEngine  # noqa: F401

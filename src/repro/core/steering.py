@@ -1,0 +1,176 @@
+"""Steering engine: the paper's runtime analytical queries (Table 2) + the
+dynamic adaptations they enable (Q8 / data reduction).
+
+Q1-Q6 analyze execution metadata, Q7 joins execution + provenance + domain
+data, Q8 *adapts* the workflow (patches inputs of READY tasks). All queries
+are vectorized reductions over the live column store — the HTAP design the
+paper argues for: same store, transactional claims + analytical scans.
+
+``device_qN`` variants run the same reduction with jnp on the device mirror
+(used by the benchmark that measures steering overhead on-accelerator).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.schema import Status
+from repro.core.workqueue import WorkQueue
+
+
+class SteeringEngine:
+    def __init__(self, wq: WorkQueue):
+        self.wq = wq
+
+    # --------------------------------------------------------------- helpers
+    def _cols(self, *names):
+        return tuple(self.wq.store.col(n) for n in names)
+
+    # Q1: per-node task status counts within the last minute
+    def q1_recent_status_by_node(self, now: float, horizon: float = 60.0
+                                 ) -> Dict[int, Dict[str, int]]:
+        st, wid, t0 = self._cols("status", "worker_id", "start_time")
+        recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
+        out: Dict[int, Dict[str, int]] = {}
+        for w in np.unique(wid[recent]):
+            m = recent & (wid == w)
+            out[int(w)] = {
+                "started": int(m.sum()),
+                "finished": int((st[m] == int(Status.FINISHED)).sum()),
+                "failures": int(self.wq.store.col("fail_trials")[m].sum()),
+            }
+        return out
+
+    # Q2: per-task bytes consumed on a node, finished in last minute
+    def q2_bytes_by_task(self, worker: int, now: float, horizon: float = 60.0
+                         ) -> np.ndarray:
+        st, wid, te, bi = self._cols("status", "worker_id", "end_time",
+                                     "bytes_in")
+        m = (wid == worker) & (st == int(Status.FINISHED)) \
+            & (te >= now - horizon)
+        idx = np.nonzero(m)[0]
+        order = np.lexsort((st[idx], -bi[idx]))
+        return idx[order]
+
+    # Q3: node(s) with most aborted/failed in last minute
+    def q3_worst_nodes(self, now: float, horizon: float = 60.0) -> np.ndarray:
+        st, wid, te = self._cols("status", "worker_id", "end_time")
+        m = (st == int(Status.FAILED)) & (te >= now - horizon)
+        if not m.any():
+            return np.empty(0, np.int64)
+        counts = np.bincount(wid[m], minlength=self.wq.num_workers)
+        return np.nonzero(counts == counts.max())[0]
+
+    # Q4: tasks left
+    def q4_tasks_left(self) -> int:
+        st = self.wq.store.col("status")
+        return int(np.isin(st, [int(Status.READY), int(Status.RUNNING),
+                                int(Status.BLOCKED)]).sum())
+
+    # Q5: activity with most unfinished tasks
+    def q5_worst_activity(self) -> Tuple[int, int]:
+        st, act = self._cols("status", "activity_id")
+        m = np.isin(st, [int(Status.READY), int(Status.RUNNING),
+                         int(Status.BLOCKED)])
+        if not m.any():
+            return -1, 0
+        counts = np.bincount(act[m])
+        return int(np.argmax(counts)), int(counts.max())
+
+    # Q6: avg/max exec time per unfinished activity
+    def q6_activity_times(self) -> Dict[int, Tuple[float, float]]:
+        st, act, t0, t1 = self._cols("status", "activity_id", "start_time",
+                                     "end_time")
+        fin = st == int(Status.FINISHED)
+        open_acts = np.unique(act[np.isin(
+            st, [int(Status.READY), int(Status.RUNNING)])])
+        out = {}
+        for a in open_acts:
+            m = fin & (act == a)
+            if m.any():
+                d = t1[m] - t0[m]
+                out[int(a)] = (float(d.mean()), float(d.max()))
+        return dict(sorted(out.items(), key=lambda kv: -kv[1][0]))
+
+    # Q7: provenance join — outputs of activity A where activity B's f1 > thr
+    # and B's task took longer than B's average
+    def q7_provenance_join(self, act_a: int = 0, act_b: int = 2,
+                           thr: float = 0.5) -> np.ndarray:
+        st, act, t0, t1 = self._cols("status", "activity_id", "start_time",
+                                     "end_time")
+        f1 = self.wq.store.col("out0")
+        parent = self.wq.store.col("parent_task")
+        tid = self.wq.store.col("task_id")
+        fin_b = (st == int(Status.FINISHED)) & (act == act_b)
+        if not fin_b.any():
+            return np.empty(0, np.int64)
+        dur = t1 - t0
+        slow = dur > np.nanmean(dur[fin_b])
+        hits = np.nonzero(fin_b & (f1 > thr) & slow)[0]
+        # walk provenance edges back to activity A
+        out = []
+        id_to_row = {int(t): i for i, t in enumerate(tid[: len(st)])}
+        for row in hits:
+            r = int(row)
+            while act[r] > act_a and parent[r] >= 0:
+                r = id_to_row.get(int(parent[r]), -1)
+                if r < 0:
+                    break
+            if r >= 0 and act[r] == act_a:
+                out.append(r)
+        return np.asarray(out, np.int64)
+
+    # Q8: ADAPT — patch inputs of READY tasks of an activity (user steering)
+    def q8_patch_ready(self, activity: int, col: str, value: float,
+                       predicate: Optional[Callable[[np.ndarray], np.ndarray]]
+                       = None) -> int:
+        st, act = self._cols("status", "activity_id")
+        m = (st == int(Status.READY)) & (act == activity)
+        if predicate is not None:
+            m &= predicate(self.wq.store.col(col))
+        idx = np.nonzero(m)[0]
+        if len(idx):
+            self.wq.store.update(idx, **{col: value})
+            self.wq.log.append("steer_patch", {"activity": activity,
+                                               "col": col, "n": len(idx)})
+        return len(idx)
+
+    # data reduction (paper [49]): prune READY/BLOCKED tasks by predicate
+    def prune(self, predicate_col: str, lo: float, hi: float) -> int:
+        st = self.wq.store.col("status")
+        vals = self.wq.store.col(predicate_col)
+        m = np.isin(st, [int(Status.READY), int(Status.BLOCKED)]) \
+            & (vals >= lo) & (vals <= hi)
+        idx = np.nonzero(m)[0]
+        if len(idx):
+            self.wq.store.update(idx, status=int(Status.PRUNED))
+            self.wq.log.append("steer_prune", {"n": len(idx)})
+        return len(idx)
+
+    # ------------------------------------------------------------ on-device
+    def device_monitor(self) -> Dict[str, float]:
+        """Same aggregations with jnp over the device mirror (HTAP on-chip)."""
+        import jax.numpy as jnp
+        dv = self.wq.store.device_view(["status", "worker_id", "start_time",
+                                        "end_time"])
+        st = dv["status"]
+        fin = (st == int(Status.FINISHED))
+        run = (st == int(Status.RUNNING))
+        dur = jnp.where(fin, dv["end_time"] - dv["start_time"], 0.0)
+        return {
+            "finished": int(fin.sum()),
+            "running": int(run.sum()),
+            "mean_task_s": float(dur.sum() / jnp.maximum(fin.sum(), 1)),
+        }
+
+    def run_all(self, now: float) -> Dict[str, object]:
+        """One steering sweep (the paper runs the full set every 15 s)."""
+        return {
+            "q1": self.q1_recent_status_by_node(now),
+            "q3": self.q3_worst_nodes(now).tolist(),
+            "q4": self.q4_tasks_left(),
+            "q5": self.q5_worst_activity(),
+            "q6": self.q6_activity_times(),
+        }

@@ -1,0 +1,104 @@
+"""In-memory columnar store (struct-of-arrays) with partition views.
+
+The TPU-native adaptation of the paper's MySQL-Cluster data nodes: execution /
+domain / provenance columns live in ONE preallocated SoA region, hash-
+partitioned by ``worker_id``. The authoritative copy is host-resident (the
+control plane mutates it transactionally); hot columns mirror to the device
+for analytical steering reductions and for the vectorized / Pallas claim ops.
+
+Updates go through ``apply`` with a transaction record so the txn log
+(transactions.py) can replay them on replicas and after restarts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.schema import Column, Status, wq_schema
+
+
+class ColumnStore:
+    def __init__(self, schema: Optional[List[Column]] = None,
+                 capacity: int = 1 << 16):
+        self.schema = schema or wq_schema()
+        self.capacity = capacity
+        self.cols: Dict[str, np.ndarray] = {
+            c.name: np.full(capacity, c.default, dtype=c.dtype)
+            for c in self.schema}
+        self.n_rows = 0
+        self.version = 0          # bumped per committed transaction
+        self.blobs: Dict[int, Dict[str, Any]] = {}   # task_id -> raw pointers
+
+    # ------------------------------------------------------------------ rows
+    def insert(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        n = len(next(iter(rows.values())))
+        if self.n_rows + n > self.capacity:
+            self._grow(max(self.capacity * 2, self.n_rows + n))
+        idx = np.arange(self.n_rows, self.n_rows + n)
+        for name, vals in rows.items():
+            self.cols[name][idx] = vals
+        self.n_rows += n
+        self.version += 1
+        return idx
+
+    def _grow(self, new_cap: int):
+        for c in self.schema:
+            new = np.full(new_cap, c.default, dtype=c.dtype)
+            new[: self.n_rows] = self.cols[c.name][: self.n_rows]
+            self.cols[c.name] = new
+        self.capacity = new_cap
+
+    def update(self, idx: np.ndarray, **values) -> None:
+        for name, vals in values.items():
+            self.cols[name][idx] = vals
+        self.version += 1
+
+    # --------------------------------------------------------------- queries
+    def col(self, name: str) -> np.ndarray:
+        return self.cols[name][: self.n_rows]
+
+    def where(self, **eq) -> np.ndarray:
+        """Row indices matching all column==value predicates."""
+        mask = np.ones(self.n_rows, bool)
+        for name, val in eq.items():
+            mask &= self.col(name) == val
+        return np.nonzero(mask)[0]
+
+    def partition(self, worker_id: int) -> np.ndarray:
+        """The paper's 'WHERE worker_id = i' partition view."""
+        return self.where(worker_id=worker_id)
+
+    # ------------------------------------------------------------ device I/O
+    def device_view(self, names: Sequence[str]):
+        """jnp mirror of selected columns (for steering / claim kernels)."""
+        import jax.numpy as jnp
+        return {n: jnp.asarray(self.col(n)) for n in names}
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "n_rows": self.n_rows,
+            "version": self.version,
+            "cols": {n: self.cols[n][: self.n_rows].copy()
+                     for n in self.cols},
+            "blobs": dict(self.blobs),
+        }
+
+    @classmethod
+    def restore(cls, snap: Dict[str, Any],
+                schema: Optional[List[Column]] = None) -> "ColumnStore":
+        st = cls(schema, capacity=max(1 << 10, int(snap["n_rows"] * 2)))
+        n = snap["n_rows"]
+        for name, vals in snap["cols"].items():
+            st.cols[name][:n] = vals
+        st.n_rows = n
+        st.version = snap["version"]
+        st.blobs = dict(snap["blobs"])
+        return st
+
+    # ------------------------------------------------------------- integrity
+    def stats(self) -> Dict[str, int]:
+        status = self.col("status")
+        return {int(s): int(np.sum(status == int(s))) for s in Status}

@@ -1,0 +1,45 @@
+"""Append-only transaction log: replication feed + crash recovery delta.
+
+Every WorkQueue mutation appends a record; replicas (replication.py) consume
+the tail; checkpoints persist (snapshot, log-offset) so restart = restore
+snapshot + replay tail — the paper's in-memory-DBMS durability story
+("in-memory data nodes with occasional on-disk checkpoints").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Txn:
+    version: int
+    op: str
+    payload: Dict[str, Any]
+    wall_time: float
+
+
+class TxnLog:
+    def __init__(self):
+        self.records: List[Txn] = []
+
+    def append(self, op: str, payload: Dict[str, Any]) -> int:
+        v = len(self.records)
+        self.records.append(Txn(v, op, _freeze(payload), time.time()))
+        return v
+
+    def tail(self, since: int) -> List[Txn]:
+        return self.records[since:]
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+def _freeze(payload: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in payload.items():
+        out[k] = np.array(v, copy=True) if isinstance(v, np.ndarray) else v
+    return out

@@ -1,0 +1,223 @@
+"""Distributed Work Queue on the column store (paper Sections 3.2-3.3).
+
+Passive multi-master semantics: workers *claim* from their own partition
+(``WHERE worker_id = i AND status = READY ORDER BY task_id LIMIT k``); the
+partition-private access removes write conflicts, exactly the paper's
+argument. ``claim_all`` is the batched SPMD form: one vectorized operation
+claims the next task for every worker at once — this is what the executor
+uses per training step and what the ``wq_claim`` Pallas kernel implements
+on-device.
+
+Work stealing (straggler mitigation) claims from the most-loaded sibling
+partition when the own partition is dry (paper: "more partitions than data
+nodes gives flexibility ... load balancing").
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.partition import assign_workers, partition_sizes, rehash
+from repro.core.schema import Status, TRANSITIONS
+from repro.core.store import ColumnStore
+from repro.core.transactions import TxnLog
+
+
+class WorkQueue:
+    def __init__(self, num_workers: int, store: Optional[ColumnStore] = None,
+                 txn_log: Optional[TxnLog] = None, capacity: int = 1 << 16):
+        self.store = store or ColumnStore(capacity=capacity)
+        self.num_workers = num_workers
+        self.log = txn_log or TxnLog()
+        self._next_task_id = int(self.store.n_rows)
+
+    # -------------------------------------------------------------- inserts
+    def add_tasks(self, activity_id: int, n: int, *,
+                  status: Status = Status.READY,
+                  duration_est: float = 0.0,
+                  domain_in: Optional[np.ndarray] = None,
+                  parent_task: Optional[np.ndarray] = None,
+                  now: float = 0.0) -> np.ndarray:
+        ids = np.arange(self._next_task_id, self._next_task_id + n,
+                        dtype=np.int64)
+        self._next_task_id += n
+        rows = {
+            "task_id": ids,
+            "activity_id": np.full(n, activity_id, np.int32),
+            "worker_id": assign_workers(ids, self.num_workers),
+            "status": np.full(n, int(status), np.int32),
+            "submit_time": np.full(n, now, np.float64),
+            "duration_est": (np.full(n, 0.0) if duration_est == 0.0
+                             else np.full(n, duration_est)),
+        }
+        if domain_in is not None:
+            for i in range(domain_in.shape[1]):
+                rows[f"in{i}"] = domain_in[:, i]
+        if parent_task is not None:
+            rows["parent_task"] = parent_task
+        idx = self.store.insert(rows)
+        self.log.append("insert", {"activity_id": activity_id, "n": n,
+                                   "ids": ids})
+        return ids
+
+    # ---------------------------------------------------------------- claim
+    def claim(self, worker_id: int, k: int = 1, *,
+              now: float = 0.0, allow_steal: bool = False) -> np.ndarray:
+        """getREADYtasks + updateToRUNNING for one worker (partition-private).
+
+        Returns claimed row indices (== task ids here).
+        """
+        status = self.store.col("status")
+        wid = self.store.col("worker_id")
+        mask = (status == int(Status.READY)) & (wid == worker_id)
+        idx = np.nonzero(mask)[0][:k]
+        if len(idx) == 0 and allow_steal:
+            idx = self._steal(worker_id, k)
+        if len(idx):
+            self.store.update(idx, status=int(Status.RUNNING),
+                              start_time=now, worker_id=worker_id,
+                              core_id=worker_id)
+            self.log.append("claim", {"worker": worker_id,
+                                      "ids": self.store.col("task_id")[idx]})
+        return idx
+
+    def _steal(self, thief: int, k: int) -> np.ndarray:
+        """Claim from the most-loaded sibling partition."""
+        status = self.store.col("status")
+        wid = self.store.col("worker_id")
+        ready = status == int(Status.READY)
+        if not ready.any():
+            return np.empty(0, np.int64)
+        sizes = np.bincount(wid[ready], minlength=self.num_workers)
+        victim = int(np.argmax(sizes))
+        if sizes[victim] == 0 or victim == thief:
+            return np.empty(0, np.int64)
+        idx = np.nonzero(ready & (wid == victim))[0][:k]
+        return idx
+
+    def claim_all(self, k: int = 1, *, now: float = 0.0,
+                  steal: bool = True) -> Dict[int, np.ndarray]:
+        """Batched claim: next k READY tasks for EVERY worker in one pass.
+
+        This is the SPMD form the executor uses (and the semantics of the
+        wq_claim kernel): one vectorized scan over the store instead of W
+        separate queries.
+        """
+        status = self.store.col("status")
+        wid = self.store.col("worker_id")
+        ready = status == int(Status.READY)
+        out: Dict[int, np.ndarray] = {}
+        claimed_rows: List[np.ndarray] = []
+        for w in range(self.num_workers):
+            idx = np.nonzero(ready & (wid == w))[0][:k]
+            out[w] = idx
+            claimed_rows.append(idx)
+        if steal:
+            leftovers = np.nonzero(ready)[0]
+            taken = set(np.concatenate(claimed_rows).tolist())
+            pool = [i for i in leftovers if i not in taken]
+            for w in range(self.num_workers):
+                need = k - len(out[w])
+                if need > 0 and pool:
+                    extra = np.asarray(pool[:need], dtype=np.int64)
+                    pool = pool[need:]
+                    out[w] = np.concatenate([out[w], extra])
+                    claimed_rows.append(extra)
+        all_idx = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if len(all_idx):
+            self.store.update(all_idx, status=int(Status.RUNNING),
+                              start_time=now)
+            self.log.append("claim_all", {"n": len(all_idx)})
+        return out
+
+    # ------------------------------------------------------------- complete
+    def finish(self, idx: np.ndarray, *, now: float = 0.0,
+               domain_out: Optional[np.ndarray] = None) -> None:
+        self._check_transition(idx, Status.FINISHED)
+        upd = {"status": int(Status.FINISHED), "end_time": now}
+        self.store.update(np.asarray(idx), **upd)
+        if domain_out is not None:
+            cols = {f"out{i}": domain_out[:, i]
+                    for i in range(domain_out.shape[1])}
+            self.store.update(np.asarray(idx), **cols)
+        self.log.append("finish", {"ids": np.asarray(idx)})
+
+    def fail(self, idx: np.ndarray, *, now: float = 0.0,
+             max_trials: int = 3) -> None:
+        """Failure handling: retry (back to READY) until fail_trials exhausts."""
+        idx = np.asarray(idx)
+        trials = self.store.col("fail_trials")[idx] + 1
+        retry = idx[trials < max_trials]
+        dead = idx[trials >= max_trials]
+        self.store.update(idx, fail_trials=trials)
+        if len(retry):
+            self.store.update(retry, status=int(Status.READY))
+        if len(dead):
+            self.store.update(dead, status=int(Status.FAILED), end_time=now)
+        self.log.append("fail", {"retry": retry, "dead": dead})
+
+    def requeue_worker(self, worker_id: int, *, reassign: bool = True) -> int:
+        """Node failure: return the dead worker's RUNNING tasks to READY and
+        (optionally) rehash them to live partitions."""
+        idx = self.store.where(worker_id=worker_id,
+                               status=int(Status.RUNNING))
+        if len(idx) == 0:
+            return 0
+        self.store.update(idx, status=int(Status.READY))
+        trials = self.store.col("fail_trials")[idx] + 1
+        self.store.update(idx, fail_trials=trials)
+        if reassign and self.num_workers > 1:
+            live = [w for w in range(self.num_workers) if w != worker_id]
+            new_w = np.asarray(live, np.int32)[
+                self.store.col("task_id")[idx] % len(live)]
+            self.store.update(idx, worker_id=new_w)
+        self.log.append("requeue_worker", {"worker": worker_id,
+                                           "n": len(idx)})
+        return len(idx)
+
+    # --------------------------------------------------------------- elastic
+    def resize(self, new_workers: int) -> int:
+        """Elastic scaling: re-hash non-terminal tasks to W' partitions."""
+        status = self.store.col("status")
+        movable = np.isin(status, [int(Status.READY), int(Status.BLOCKED)])
+        idx = np.nonzero(movable)[0]
+        tids = self.store.col("task_id")[idx]
+        new_assign = assign_workers(tids, new_workers)
+        moved = int(np.sum(new_assign !=
+                           self.store.col("worker_id")[idx]))
+        self.store.update(idx, worker_id=new_assign)
+        self.num_workers = new_workers
+        self.log.append("resize", {"workers": new_workers, "moved": moved})
+        return moved
+
+    # ------------------------------------------------------------ invariants
+    def _check_transition(self, idx: np.ndarray, to: Status) -> None:
+        cur = self.store.col("status")[np.asarray(idx)]
+        for c in np.unique(cur):
+            if to not in TRANSITIONS[Status(int(c))]:
+                raise ValueError(
+                    f"illegal transition {Status(int(c)).name} -> {to.name}")
+
+    def check_invariants(self) -> None:
+        """Property-test hooks: every task in exactly one status; RUNNING
+        tasks have start_time; FINISHED have end >= start; partition ids in
+        range."""
+        st = self.store.col("status")
+        assert ((st >= int(Status.EMPTY)) & (st <= int(Status.PRUNED))).all()
+        wid = self.store.col("worker_id")
+        used = st != int(Status.EMPTY)
+        assert (wid[used] >= 0).all() and (wid[used] < self.num_workers).all()
+        running = st == int(Status.RUNNING)
+        assert not np.isnan(self.store.col("start_time")[running]).any()
+        fin = st == int(Status.FINISHED)
+        ok = (self.store.col("end_time")[fin]
+              >= self.store.col("start_time")[fin])
+        assert ok.all()
+
+    # ------------------------------------------------------------- counters
+    def counts(self) -> Dict[str, int]:
+        st = self.store.col("status")
+        return {s.name: int(np.sum(st == int(s))) for s in Status}

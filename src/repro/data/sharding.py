@@ -1,0 +1,18 @@
+"""Host->device batch placement with the step's input shardings."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def place_batch(batch: Dict[str, np.ndarray], shardings: Dict[str, Any]
+                ) -> Dict[str, jax.Array]:
+    """device_put each field with its NamedSharding (multi-host would use
+    jax.make_array_from_process_local_data — same call signature here)."""
+    out = {}
+    for k, v in batch.items():
+        sh = shardings.get(k)
+        out[k] = jax.device_put(v, sh) if sh is not None else jax.device_put(v)
+    return out

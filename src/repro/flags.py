@@ -1,0 +1,35 @@
+"""Process-wide lowering flags.
+
+``scan_unroll()`` — when True, every model-level ``lax.scan`` fully unrolls.
+Used ONLY by the roofline depth probe: XLA's ``cost_analysis`` counts a
+while-loop body ONCE regardless of trip count, so faithful FLOP/byte counts
+require unrolled lowering of shallow (1-2 layer) probe configs; the roofline
+module then scales per-layer deltas to the real depth (see analysis/roofline).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_SCAN_UNROLL = contextvars.ContextVar("repro_scan_unroll", default=False)
+
+
+def scan_unroll() -> bool:
+    return _SCAN_UNROLL.get()
+
+
+@contextlib.contextmanager
+def unrolled_scans(on: bool = True):
+    tok = _SCAN_UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL.reset(tok)
+
+
+def scan(body, init, xs, **kw):
+    """lax.scan wrapper honoring the unroll flag (model code uses this)."""
+    import jax
+    if scan_unroll():
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(body, init, xs, **kw)

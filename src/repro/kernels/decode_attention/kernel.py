@@ -1,0 +1,96 @@
+"""Decode attention kernel: 1 query token against a long KV cache.
+
+Memory-bound: the job is to stream K/V blocks HBM->VMEM exactly once while
+the online-softmax state rides in VMEM scratch. Grid = (batch*q_heads,
+num_kv_blocks), kv innermost/sequential. The valid cache length (kv_len) is a
+scalar-prefetch operand (SMEM) used to mask the tail block — this is what the
+serving path uses where caches fill incrementally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, kb: int, scale: float, nk: int):
+    ki = pl.program_id(1)
+    kv_len = kvlen_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * kb
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # [1, DH]
+        k = k_ref[0].astype(jnp.float32)               # [KB, DH]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array, *, sm_scale: float = None,
+                         kv_block: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B,1,Hq,DH]; k/v: [B,Smax,Hkv,DH]; kv_len: scalar int32."""
+    b, _, hq, dh = q.shape
+    smax, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kb = min(kv_block, smax)
+    nk = smax // kb
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+
+    qr = q.reshape(b, hq, dh).reshape(b * hq, 1, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, smax, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, smax, dh)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (1,))
+
+    kernel = functools.partial(_dec_kernel, kb=kb, scale=scale, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda h, j, *_: (h, 0, 0)),
+            pl.BlockSpec((1, kb, dh), lambda h, j, *_, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, kb, dh), lambda h, j, *_, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda h, j, *_: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, dh), q.dtype),
+        interpret=interpret,
+    )(kvl, qr, kr, vr)
+    return out.reshape(b, hq, 1, dh).transpose(0, 2, 1, 3)

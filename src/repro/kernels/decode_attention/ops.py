@@ -1,0 +1,30 @@
+"""Jit'd dispatcher for decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _pad_dh(x, target):
+    pad = target - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, *, kv_len=None, interpret: bool = False):
+    dh = q.shape[-1]
+    if kv_len is None:
+        kv_len = k.shape[1]
+    target = max(128, ((dh + 127) // 128) * 128)
+    scale = dh ** -0.5
+    qp, kp, vp = (_pad_dh(t, target) for t in (q, k, v))
+    out = decode_attention_fwd(qp, kp, vp, jnp.asarray(kv_len, jnp.int32),
+                               sm_scale=scale, interpret=interpret)
+    return out[..., :dh]

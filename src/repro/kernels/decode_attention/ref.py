@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for decode attention (1 token vs cache of kv_len)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, kv_len, *, sm_scale=None):
+    b, _, hq, dh = q.shape
+    smax, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+    qg = q.reshape(b, 1, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(smax)[None, None, None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)

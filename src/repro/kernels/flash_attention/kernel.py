@@ -1,0 +1,113 @@
+"""Flash attention forward kernel (TPU, pl.pallas_call + BlockSpec).
+
+Tiling: grid = (batch*q_heads, num_q_blocks, num_kv_blocks); the kv dim is the
+innermost (sequential) grid axis, so the online-softmax state (m, l, acc)
+lives in VMEM scratch and persists across kv steps. Block shapes keep the MXU
+fed: q block [QB, DH], kv block [KB, DH] with DH padded to a multiple of 128
+lanes by ops.py (the softmax scale uses the TRUE head dim). GQA is handled in
+the index map: q head h reads kv head h // (Hq // Hkv).
+
+Causal/window masking is per-element inside a block; fully-masked kv blocks
+are skipped with @pl.when (no MXU work issued for the upper triangle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, window: int, qb: int, kb: int, scale: float,
+               nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * qb
+    k_start = ki * kb
+    run = jnp.bool_(True)
+    if causal:                       # skip blocks above the diagonal
+        run = jnp.logical_and(run, k_start <= q_start + qb - 1)
+    if window:                       # skip blocks left of the window
+        run = jnp.logical_and(run, k_start + kb - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [QB, DH]
+        k = k_ref[0].astype(jnp.float32)              # [KB, DH]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        mask = jnp.ones((qb, kb), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                            # [QB, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        sm_scale: float = None,
+                        q_block: int = 256, kv_block: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """q: [B,S,Hq,DH]; k/v: [B,Skv,Hkv,DH]; DH 128-aligned (ops.py pads)."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nq, nk = sq // qb, skv // kb
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+
+    # layout: fold heads into the leading grid dim
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh)
+
+    kernel = functools.partial(_fa_kernel, causal=causal, window=window,
+                               qb=qb, kb=kb, scale=scale, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kb, dh), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, kb, dh), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),   # m
+            pltpu.VMEM((qb, 1), jnp.float32),   # l
+            pltpu.VMEM((qb, dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Jit'd dispatcher for flash attention: head-dim padding + kernel call."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _pad_dh(x, target):
+    pad = target - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    """q: [B,S,Hq,DH]; pads DH up to a 128 multiple (zero pads are exact:
+    extra q/k lanes contribute 0 to logits, extra v lanes are sliced off)."""
+    dh = q.shape[-1]
+    target = max(128, ((dh + 127) // 128) * 128)
+    scale = dh ** -0.5
+    qp, kp, vp = (_pad_dh(t, target) for t in (q, k, v))
+    out = flash_attention_fwd(qp, kp, vp, causal=causal, window=window,
+                              sm_scale=scale, interpret=interpret)
+    return out[..., :dh]

@@ -1,0 +1,41 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``pallas_enabled()`` gates kernel use: on TPU backends kernels run compiled;
+on CPU they run ``interpret=True`` (used by the test suite); models default to
+the reference/chunked paths unless ``cfg.attn_impl == "pallas"``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+_FORCE = os.environ.get("REPRO_PALLAS", "")
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def pallas_enabled() -> bool:
+    if _FORCE == "0":
+        return False
+    return _FORCE == "1" or backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Run kernels in interpret mode (CPU correctness validation)."""
+    return backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    from repro.kernels.flash_attention.ops import flash_attention as fa
+    return fa(q, k, v, causal=causal, window=window,
+              interpret=interpret_mode())
+
+
+def decode_attention(q, k, v, *, kv_len=None, window: int = 0):
+    from repro.kernels.decode_attention.ops import decode_attention as da
+    return da(q, k, v, kv_len=kv_len, interpret=interpret_mode())

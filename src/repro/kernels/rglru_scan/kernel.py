@@ -1,0 +1,57 @@
+"""RG-LRU linear-recurrence kernel (RecurrentGemma mixer).
+
+h_t = a_t * h_{t-1} + u_t, elementwise over channels. Grid = (batch,
+channel_blocks, time_blocks) with time innermost/sequential; the carry h
+[1, CB] lives in VMEM scratch. Inside a block the recurrence runs as an
+unrolled loop over the block's TB steps — pure VPU work on [1, CB] vectors
+(channels on the 128-lane axis), which is the TPU-native layout for a
+first-order scan: lanes carry independent recurrences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, u_ref, o_ref, h_ref, *, tb: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # [TB, CB]
+    u = u_ref[0].astype(jnp.float32)
+    h = h_ref[...]                        # [1, CB]
+    out = jnp.zeros_like(a)
+    for t in range(tb):                   # unrolled in-block scan (VPU)
+        h = a[t:t + 1] * h + u[t:t + 1]
+        out = jax.lax.dynamic_update_slice(out, h, (t, 0))
+    h_ref[...] = h
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def rglru_scan_fwd(a: jax.Array, u: jax.Array, *, time_block: int = 128,
+                   ch_block: int = 512, interpret: bool = False) -> jax.Array:
+    """a, u: [B, S, C] -> h: [B, S, C] (first-order linear recurrence)."""
+    b, s, c = a.shape
+    tb = min(time_block, s)
+    cb = min(ch_block, c)
+    nt, ncb = s // tb, c // cb
+    kernel = functools.partial(_rglru_kernel, tb=tb)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, ncb, nt),
+        in_specs=[
+            pl.BlockSpec((1, tb, cb), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, tb, cb), lambda bi, ci, ti: (bi, ti, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, tb, cb), lambda bi, ci, ti: (bi, ti, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, s, c), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, cb), jnp.float32)],
+        interpret=interpret,
+    )(a, u)

@@ -1,0 +1,14 @@
+"""Dispatcher for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_fwd
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, u, *, interpret: bool = False):
+    return rglru_scan_fwd(a, u, interpret=interpret)

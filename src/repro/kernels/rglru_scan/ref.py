@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (associative scan form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, u):
+    """a, u: [B,S,C]; h_t = a_t h_{t-1} + u_t, h_0 = 0."""
+    def combine(e1, e2):
+        a1, u1 = e1
+        a2, u2 = e2
+        return a1 * a2, a2 * u1 + u2
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), u.astype(jnp.float32)), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunked kernel (state-space duality, TPU-native form).
+
+Per (batch, head) the sequence is processed chunk-by-chunk on the innermost
+(sequential) grid axis with the running state S [P, N] in VMEM scratch:
+
+  intra-chunk (MXU):  scores = C B^T ; y_diag = (scores * L) (dt * x)
+  inter-chunk (MXU):  y_off = C S_prev^T * decay_in ; S = g S + (dt B d_end)^T x
+
+ops.py precomputes the elementwise decay terms (da cumsums) — cheap VPU work
+kept outside so the kernel feeds the MXU with clean [Q,N]x[N,P] matmuls.
+Chunk layout: Q = chunk length (256), N = state dim, P = head dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, dacum_ref, o_ref, s_ref, *,
+                q: int, n: int, p: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # [Q, P]
+    bmat = b_ref[0].astype(jnp.float32)    # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)    # [Q, N]
+    dt = dt_ref[0].astype(jnp.float32)     # [Q, 1]
+    dacum = dacum_ref[0].astype(jnp.float32)   # [Q, 1] inclusive cumsum of da
+
+    # intra-chunk: L[i,j] = exp(dacum_i - dacum_j) for j <= i
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # [Q,Q]
+    li = dacum - dacum.reshape(1, q)           # [Q, Q] via broadcast
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(jj <= ii, jnp.exp(li), 0.0)
+    att = scores * lmat                         # [Q, Q]
+    y_diag = jax.lax.dot_general(att, dt * x, (((1,), (0,)), ((), ())))
+
+    # inter-chunk: contribution of the incoming state
+    decay_in = jnp.exp(dacum)                   # [Q, 1]
+    y_off = decay_in * jax.lax.dot_general(
+        cmat, s_ref[...], (((1,), (1,)), ((), ())))     # [Q,N]x[P,N]->[Q,P]
+
+    o_ref[0] = (y_diag + y_off).astype(o_ref.dtype)
+
+    # state update: S' = g * S + sum_k dt_k decay(end,k) x_k B_k^T
+    g = jnp.exp(dacum[q - 1, 0])
+    w = dt * jnp.exp(dacum[q - 1, 0] - dacum)   # [Q,1] dt * decay-to-end
+    s_new = jax.lax.dot_general(w * x, bmat, (((0,), (0,)), ((), ())))
+    s_ref[...] = g * s_ref[...] + s_new         # [P, N]
+
+
+def ssd_scan_fwd(x, bmat, cmat, dt, dacum, *, chunk: int = 256,
+                 interpret: bool = False):
+    """x: [BH, S, P]; bmat/cmat: [BH, S, N]; dt/dacum: [BH, S, 1].
+
+    dacum = per-(b,h) inclusive cumsum of da = dt*a RESET per chunk
+    (ops.py computes it). Returns y: [BH, S, P].
+    """
+    bh, s, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    kernel = functools.partial(_ssd_kernel, q=q, n=n, p=p, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, q, n), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, q, n), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, q, 1), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, q, 1), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, bmat, cmat, dt, dacum)

@@ -1,0 +1,31 @@
+"""Dispatcher: precompute decay cumsums, call the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, bmat, cmat, dt, da, *, chunk: int = 256,
+             interpret: bool = False):
+    """Same signature as the oracle. da: [BH,S,1] log-decay (dt*a).
+
+    Computes the per-chunk inclusive cumsum of da (the only sequential
+    elementwise prep) and runs the chunked dual-form kernel.
+
+    NOTE kernel state carry: state entering chunk c is decayed by the chunk's
+    OWN cumulative decay inside the kernel (decay_in) — so dacum must reset
+    at chunk boundaries, and the cross-chunk decay g is exp(dacum[-1]).
+    """
+    bh, s, _ = x.shape
+    q = min(chunk, s)
+    nc = s // q
+    dac = da.reshape(bh, nc, q)
+    dacum = jnp.cumsum(dac, axis=-1).reshape(bh, s, 1)
+    return ssd_scan_fwd(x, bmat, cmat, dt, dacum, chunk=chunk,
+                        interpret=interpret)

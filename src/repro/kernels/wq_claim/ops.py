@@ -1,0 +1,25 @@
+"""Dispatcher for the work-queue claim kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wq_claim.kernel import wq_claim_fwd
+from repro.kernels.wq_claim.ref import wq_claim_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_workers", "k", "interpret"))
+def wq_claim(status, worker, *, num_workers: int, k: int = 1,
+             interpret: bool = False):
+    n = status.shape[0]
+    pad = (-n) % 1024 if n > 1024 else 0
+    if pad:
+        status = jnp.pad(status, (0, pad))          # pads are EMPTY(0)
+        worker = jnp.pad(worker, (0, pad), constant_values=-1)
+    new_status, claimed = wq_claim_fwd(
+        status, worker, num_workers=num_workers, k=k,
+        row_block=min(1024, status.shape[0]), interpret=interpret)
+    return new_status[:n], claimed[:n]

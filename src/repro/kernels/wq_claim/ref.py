@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the work-queue claim op."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+READY = 2
+RUNNING = 3
+
+
+def wq_claim_ref(status, worker, *, num_workers: int, k: int):
+    """For each worker: claim its first k READY rows (by row order)."""
+    ready = status == READY
+    onehot = jax.nn.one_hot(worker, num_workers, dtype=jnp.int32) \
+        * ready[:, None].astype(jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot           # exclusive per worker
+    myrank = jnp.sum(rank * onehot, axis=1)
+    claim = ready & (myrank < k)
+    return jnp.where(claim, RUNNING, status), claim.astype(jnp.int32)

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Each invocation handles one cell and writes a JSON
+# record (memory analysis, cost analysis, collective bytes) consumed by
+# EXPERIMENTS.md §Dry-run / §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+#       --shape train_4k --mesh single   [--out results/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all  # full grid, sequential
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_status, get_config
+from repro.launch.mesh import make_production_mesh
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    from repro.configs import SHAPES, get_config
+    from repro.models.registry import (decode_input_specs,
+                                       prefill_input_specs,
+                                       train_input_specs)
+    cfg, shape = get_config(arch), SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    return prefill_input_specs(cfg, shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path, *, packed_causal: bool = False,
+             tag: str = "") -> dict:
+    from repro.configs import SHAPES, get_config
+    from repro.launch.steps import shape_cells
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "tag": tag, "status": None}
+
+    status = cell_status(cfg, shape)
+    if status != "run":
+        rec["status"] = status
+        _write(out_dir, cell_id, rec)
+        return rec
+
+    # large-shape-safe attention + loss chunking for the production lowering
+    cfg = dataclasses.replace(cfg, attn_impl="chunked",
+                              packed_causal=packed_causal)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        lowered = shape_cells(cfg, shape, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        from repro.analysis.hlo_collectives import parse_collectives
+        coll = parse_collectives(compiled.as_text())
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": _mem_dict(mem),
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            "collectives": {
+                "counts": coll.counts,
+                "bytes_by_kind": coll.bytes_by_kind,
+                "total_bytes": coll.total_bytes,
+                "link_bytes_per_chip": coll.link_bytes(mesh.size),
+            },
+            "num_devices": mesh.size,
+        })
+        print(f"[dryrun] {cell_id}: OK "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s, "
+              f"flops {rec['flops']:.3e})")
+        print(f"[dryrun] {cell_id} memory: {rec['memory']}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep the grid
+        rec["status"] = f"error: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {cell_id}: FAILED {type(e).__name__}: {e}")
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        per_dev = (out["argument_size_in_bytes"] + out["temp_size_in_bytes"]
+                   + out.get("output_size_in_bytes", 0)
+                   - out.get("alias_size_in_bytes", 0))
+        out["per_device_total"] = int(per_dev)
+    return out
+
+
+def _write(out_dir: pathlib.Path, cell_id: str, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--packed-causal", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    if args.all:
+        for mp in (False, True):
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    run_cell(arch, shape, mp, out)
+        return
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    run_cell(args.arch, args.shape, args.mesh == "multi", out,
+             packed_causal=args.packed_causal, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""Per-(arch x shape x mesh) sharding strategy.
+
+Strategy selection (DESIGN.md §4):
+- <2B dense-ish archs: pure DP — params replicated, batch over every divisible
+  axis; ZeRO-1 shards optimizer moments over spare axes.
+- >=2B: TP over "model" (Megatron col/row pairs), DP batch over ("pod","data").
+- fsdp archs (>=9B): params additionally sharded over "data" (ZeRO-3 by GSPMD).
+- MoE: experts over "model" (EP); kimi additionally FSDP on the expert matrices.
+- KV heads: sharded over "model" only when divisible; otherwise replicated
+  (GQA-TP practice: KV weights are small, Q/O carry the TP split).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (FAMILY_ENCDEC, FAMILY_MOE, FAMILY_SSM,
+                                ModelConfig, ShapeConfig)
+from repro.sharding import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    tp: bool
+    fsdp: bool
+    ep: bool
+    dp_only: bool
+
+    @staticmethod
+    def for_arch(cfg: ModelConfig) -> "Strategy":
+        big = cfg.param_count >= 2e9
+        ep = cfg.moe is not None
+        # §Perf iteration (granite): hypothesis was that TP of attention would
+        # cut the 48.6 s memory term (idle "model" axis). REFUTED: measured
+        # terms identical — the bytes come from the MoE dispatch
+        # scatter/gather path, which TP does not touch (see EXPERIMENTS
+        # §Perf). TP kept on: it shards attention params at zero cost.
+        tp = big
+        return Strategy(tp=tp, fsdp=cfg.fsdp, ep=ep,
+                        dp_only=not big and not ep)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    try:
+        return mesh.shape[name]
+    except (KeyError, TypeError):
+        return 1
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Rules:
+    st = Strategy.for_arch(cfg)
+    axes = mesh.axis_names
+    has_pod = "pod" in axes
+    dp_axes: Tuple[str, ...] = (("pod", "data") if has_pod else ("data",))
+    total_dp = int(np.prod([_axis_size(mesh, a) for a in dp_axes]))
+    model_size = _axis_size(mesh, "model")
+
+    # batch mapping: fold "model" into DP when unused by TP and divisible
+    batch_axes = dp_axes
+    if (st.dp_only and shape.global_batch % (total_dp * model_size) == 0):
+        batch_axes = dp_axes + ("model",)
+    elif shape.global_batch % total_dp != 0:
+        batch_axes = ("data",) if shape.global_batch % \
+            _axis_size(mesh, "data") == 0 else ()
+
+    table: Dict[str, Any] = {
+        "batch": batch_axes,
+        "seq": None,
+        "model_ff": "model" if st.tp else None,
+        "model_heads": "model" if st.tp else None,
+        "model_kv": "model" if (st.tp and cfg.num_kv_heads % model_size == 0)
+                    else None,
+        # decode KV-cache sequence sharding: when KV heads can't split over
+        # "model", split the cache on the sequence dim instead (partial-softmax
+        # attention; GSPMD inserts small logit all-reduces instead of
+        # replicating the multi-GB cache per chip)
+        "model_kvseq": None if (st.tp and cfg.num_kv_heads % model_size == 0)
+                       else "model",
+        "model_vocab": "model" if (st.tp or st.dp_only is False) else None,
+        # must mirror the embed-table D sharding in param_spec (embed/table)
+        "model_embed": "model" if st.tp else None,
+        "model_expert": "model" if st.ep else None,
+        "fsdp": "data" if st.fsdp else None,
+    }
+    return Rules(mesh, table)
+
+
+def fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop spec axes whose dim isn't divisible by the axis-size product —
+    jit in_shardings (unlike internal GSPMD propagation) require exact
+    divisibility. Dropped axes mean that tensor dim stays replicated."""
+    dims = list(spec) + [None] * (len(shape) - len(list(spec)))
+    out = []
+    for dim_size, ax in zip(shape, dims):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        out.append(ax if dim_size % prod == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (path-based)
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_spec(cfg: ModelConfig, rules: Rules, path: str, leaf) -> P:
+    st = Strategy.for_arch(cfg)
+    mdl = rules.physical("model_ff")          # "model" or None
+    fsdp = rules.physical("fsdp")             # "data" or None
+    vocab = "model" if rules.physical("model_vocab") else None
+    ep = rules.physical("model_expert")
+    # stacked layer params carry a leading [L] (or [groups]) axis
+    stacked = bool(re.match(
+        r"(layers|groups|tail|encoder|decoder)(/|$)", path))
+    lead: Tuple = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*(lead + dims + (None,) * (leaf.ndim - len(lead) - len(dims))))
+
+    if re.search(r"head/table$", path):
+        # untied LM head: vocab-sharded -> loss logits stay local per shard
+        return P(vocab, fsdp)
+    if re.search(r"embed/table$", path):
+        # d_model-sharded -> token lookup is a local gather (a vocab-sharded
+        # table makes XLA all-gather all V x D bytes per microbatch: measured
+        # +16.6 GB/device on command-r train_4k, see EXPERIMENTS §Perf).
+        # Tied archs pay a per-chunk logit all-reduce instead (hillclimb item).
+        return P(fsdp, mdl)
+    if re.search(r"moe/router$", path):
+        return spec(None, None)
+    if re.search(r"moe/(up|gate)$", path):
+        return spec(ep, fsdp, None)
+    if re.search(r"moe/down$", path):
+        return spec(ep, None, fsdp)
+    if re.search(r"(attn|self_attn|cross_attn)/(q|k|v)/w$", path):
+        kv = re.search(r"/(k|v)/w$", path) and rules.physical("model_kv") is None
+        return spec(fsdp, None if kv else mdl)
+    if re.search(r"(attn|self_attn|cross_attn)/(q|k|v)/b$", path):
+        kv = re.search(r"/(k|v)/b$", path) and rules.physical("model_kv") is None
+        return spec(None if kv else mdl)
+    if re.search(r"(attn|self_attn|cross_attn)/o/w$", path):
+        return spec(mdl, fsdp)
+    if re.search(r"mlp/(up|gate)/w$", path):
+        return spec(fsdp, mdl)
+    if re.search(r"mlp/down/w$", path):
+        return spec(mdl, fsdp)
+    if re.search(r"mlp/(up|gate|down)/b$", path):
+        return spec(mdl)
+    # SSM / RG-LRU mixers
+    if re.search(r"mixer/(in|gate)/w$", path):          # rglru in/gate
+        return spec(fsdp, mdl)
+    if re.search(r"mixer/out/w$", path):
+        return spec(mdl, fsdp)
+    if re.search(r"mixer/(wa|wx)/w$", path):      # block-diag [nb, c, c]
+        return spec(mdl, None, None)
+    if re.search(r"mixer/(wa|wx)/b$", path):      # [nb, c]
+        return spec(mdl, None)
+    if re.search(r"mixer/lam$", path):
+        return spec(mdl)
+    if re.search(r"mixer/conv_w$", path):
+        return spec(None, mdl)
+    if re.search(r"mixer/(in_proj|out_proj)/w$", path):  # mamba2: dp-only
+        return spec(None, None)
+    return spec()  # norms, scalars, biases: replicated
+
+
+def param_shardings(cfg: ModelConfig, rules: Rules, params) -> Any:
+    def one(path, leaf):
+        spec = param_spec(cfg, rules, _path_str(path), leaf)
+        return NamedSharding(rules.mesh, fit_spec(rules.mesh, spec,
+                                                  leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def zero1_spec(rules: Rules, pspec: P, shape: Tuple[int, ...]) -> P:
+    """ZeRO-1: shard large replicated optimizer moments over the data axis."""
+    if any(s is not None for s in pspec) or int(np.prod(shape)) < (1 << 20):
+        return pspec
+    data = _axis_size(rules.mesh, "data")
+    dims = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, s in enumerate(shape):
+        if s % data == 0:
+            dims[i] = "data"
+            return P(*dims)
+    return pspec
+
+
+def opt_shardings(cfg: ModelConfig, rules: Rules, params, opt_state) -> Any:
+    """Moments follow their param's sharding (+ ZeRO-1 for replicated ones).
+
+    State paths: adamw ``inner/{m,v}/<param-path>``; adafactor
+    ``inner/<param-path>/{v,vr,vc}`` (vr drops the last dim, vc the
+    second-to-last).
+    """
+    pshard: Dict[str, P] = {}
+
+    def record(path, leaf):
+        pshard[_path_str(path)] = param_spec(cfg, rules, _path_str(path), leaf)
+        return leaf
+    jax.tree_util.tree_map_with_path(record, params)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        base, kind = None, None
+        m = re.match(r"inner/(m|v)/(.*)$", ps)
+        if m:
+            base, kind = m.group(2), "moment"
+        else:
+            m = re.match(r"inner/(.*)/(v|vr|vc)$", ps)
+            if m:
+                base, kind = m.group(1), m.group(2)
+        spec = pshard.get(base, P()) if base else P()
+        dims = list(spec) + [None] * max(0, leaf.ndim - len(list(spec)))
+        if kind == "vr":                 # [..., R] stats: drop last param dim
+            dims = dims[:-1] if dims else dims
+        elif kind == "vc":               # drop second-to-last param dim
+            if len(dims) >= 2:
+                dims = dims[:-2] + dims[-1:]
+        dims = dims[: leaf.ndim] + [None] * (leaf.ndim - len(dims[: leaf.ndim]))
+        spec = zero1_spec(rules, P(*dims), leaf.shape)
+        dims = list(spec)[: leaf.ndim]
+        dims += [None] * (leaf.ndim - len(dims))
+        return NamedSharding(rules.mesh,
+                             fit_spec(rules.mesh, P(*dims), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+def batch_shardings(cfg: ModelConfig, rules: Rules, specs: Dict[str, Any]
+                    ) -> Dict[str, Any]:
+    out = {}
+    for name, sds in specs.items():
+        if name == "mrope_positions":          # [3,B,S]
+            spec = rules.spec(None, "batch", None)
+        elif name == "cache":
+            out[name] = cache_shardings(cfg, rules, sds)
+            continue
+        else:
+            spec = rules.spec(*(["batch"] + [None] * (len(sds.shape) - 1)))
+        out[name] = NamedSharding(rules.mesh,
+                                  fit_spec(rules.mesh, spec, sds.shape))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, rules: Rules, cache_spec) -> Any:
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("idx"):
+            spec = rules.spec()
+        elif re.search(r"(^|/)(k|v)$", ps):     # [L,B,S,Hkv,Dh]
+            if leaf.shape[2] >= 4096:           # long cache: shard seq
+                spec = rules.spec(None, "batch", "model_kvseq",
+                                  "model_kv", None)
+            else:
+                spec = rules.spec(None, "batch", None, "model_kv", None)
+        elif ps.endswith("enc_out"):            # [B,S,D]
+            spec = rules.spec("batch", None, None)
+        elif re.search(r"conv$", ps):           # [L,B,W,C]
+            spec = rules.spec(None, "batch", None, "model_ff")
+        elif re.search(r"ssm$", ps):            # [L,B,H,P,N]
+            spec = rules.spec(None, "batch", "model_heads", None, None)
+        elif re.search(r"lru$", ps):            # [L,B,W]
+            spec = rules.spec(None, "batch", "model_ff")
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(rules.mesh,
+                             fit_spec(rules.mesh, spec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache_spec)

@@ -1,0 +1,62 @@
+"""Training entrypoint: WQ-driven trainer for any --arch.
+
+On TPU pods this builds the production mesh, shards state per
+launch/shardrules, and runs the SchalaDB executor; on CPU use --smoke for a
+reduced config (the 100M+ configuration is exercised structurally by the
+dry-run + smoke tests; real-silicon runs use the same code path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import DataConfig
+from repro.runtime.executor import TrainExecutor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU)")
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    seq = args.seq_len or (64 if args.smoke else 4096)
+    batch = args.batch or (8 if args.smoke else 256)
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    ex = TrainExecutor(cfg, num_workers=args.workers, base_lr=args.lr,
+                       checkpointer=ck, checkpoint_every=50,
+                       data_cfg=DataConfig(vocab_size=cfg.vocab_size,
+                                           seq_len=seq, batch_size=batch))
+    if args.resume and ck and ck.latest_step() is not None:
+        step, state, wq = ck.restore(jax.device_get(ex.state))
+        ex.state, ex.step = state, step
+        if wq is not None:
+            ex.wq = wq
+        print(f"resumed from step {step}")
+    ex.submit_steps(args.steps)
+    hist = ex.run()
+    if hist:
+        print(f"trained {len(hist)} steps; "
+              f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    if ck:
+        ck.save(ex.step, ex.state, ex.wq)
+        ck.wait()
+
+
+if __name__ == "__main__":
+    main()

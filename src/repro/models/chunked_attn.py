@@ -1,0 +1,144 @@
+"""Memory-sane chunked attention (pure JAX "flash" — scan over query chunks).
+
+Used for large shapes (train_4k .. prefill_32k) where materializing [B,H,S,S]
+logits is infeasible. The scan keeps the HLO small and the peak memory bounded
+by one (q_chunk x S_kv) logits block per head shard.
+
+Baseline schedule is *rectangular*: every q-chunk scans the full KV with causal
+masking (2x FLOP waste on causal attention). The *triangle-packed* schedule
+(``packed=True``) pairs q-chunk i with q-chunk N-1-i so each pair covers a
+constant number of KV chunks — exact causal FLOPs with static shapes. The
+packed schedule is a §Perf hillclimb deliverable; both are kept selectable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+from repro.flags import scan as _flags_scan
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attend_block(qg, k, v, *, scale, mask):
+    """qg: [B,Q,Hkv,G,Dh]; k/v: [B,K,Hkv,Dh]; mask: [Q,K] bool.
+    Returns (out_unnorm [B,Q,Hkv,G,Dh] f32, lse-parts (m, l))."""
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                              # [B,H,G,Q]
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)                                   # [B,H,G,Q]
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return out, m, l
+
+
+def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: int = 0, q_chunk: int = 1024,
+                 packed: bool = False) -> jax.Array:
+    """q: [B,Sq,Hq,Dh]; k/v: [B,Skv,Hkv,Dh]; Sq == Skv (train/prefill)."""
+    if packed and causal and not window:
+        return _packed_causal(q, k, v, q_chunk=q_chunk)
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    nq = sq // q_chunk
+    qg = q.reshape(b, nq, q_chunk, hkv, g, dh)
+
+    kpos = jnp.arange(skv)
+
+    def body(_, args):
+        qi, i = args
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        out, m, l = _attend_block(qi, k, v, scale=scale, mask=mask)
+        out = out / jnp.maximum(l, 1e-30)[..., None]
+        # [B,H,G,Q,D] -> [B,Q,H,G,D]
+        return None, jnp.moveaxis(out, 3, 1)
+
+    # flash-attention backward semantics: recompute the chunk's logits in the
+    # backward pass instead of saving [B,H,Q,Skv] softmax residuals per chunk
+    _, outs = _flags_scan(jax.checkpoint(body), None,
+                           (jnp.moveaxis(qg, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def _packed_causal(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   q_chunk: int) -> jax.Array:
+    """Triangle-packed causal schedule.
+
+    Pair q-chunk i (needs kv[0:(i+1)c]) with q-chunk n-1-i (needs kv[0:(n-i)c]).
+    Each pair is served from a single KV slab kv[0:(n-i)c], statically padded to
+    the worst case but *masked per pair*, then the scan carries only the pair
+    index — XLA sees (n/2) x (2 q-chunks x full-slab) rectangles whose total
+    masked-out fraction is ~0 instead of ~1/2.
+
+    Exactness: both chunks use per-element causal masks; packing changes only
+    the iteration space. FLOPs halve because the slab for pair i is sliced to
+    length (n-i)c — the dominant (early-i) slabs pair a short row with a long
+    row. Static shape: we keep the full slab but split it in two halves and
+    skip the second half for the short row via a zero-multiplier — see below.
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    n = sq // q_chunk
+    if n % 2 != 0:
+        return chunked_sdpa(q, k, v, causal=True, q_chunk=q_chunk)
+    qg = q.reshape(b, n, q_chunk, hkv, g, dh)
+    half = skv // 2
+    kpos_lo, kpos_hi = jnp.arange(half), half + jnp.arange(half)
+    k_lo, v_lo = k[:, :half], v[:, :half]
+    k_hi, v_hi = k[:, half:], v[:, half:]
+
+    def pair_body(_, i):
+        j = n - 1 - i
+        qi = jax.lax.dynamic_index_in_dim(qg, i, 1, keepdims=False)
+        qj = jax.lax.dynamic_index_in_dim(qg, j, 1, keepdims=False)
+        qpos_i = i * q_chunk + jnp.arange(q_chunk)
+        qpos_j = j * q_chunk + jnp.arange(q_chunk)
+        # low half serves both rows; high half serves only the long row j
+        qc = jnp.concatenate([qi, qj], axis=1)             # [B,2Q,H,G,D]
+        qpos = jnp.concatenate([qpos_i, qpos_j])
+        mask_lo = kpos_lo[None, :] <= qpos[:, None]
+        out_lo, m_lo, l_lo = _attend_block(qc, k_lo, v_lo, scale=scale,
+                                           mask=mask_lo)
+        mask_hi = kpos_hi[None, :] <= qpos_j[:, None]
+        out_hi, m_hi, l_hi = _attend_block(qj, k_hi, v_hi, scale=scale,
+                                           mask=mask_hi)
+        # combine row j (softmax merge of two partials)
+        m_lo_j = m_lo[..., q_chunk:]
+        l_lo_j = l_lo[..., q_chunk:]
+        out_lo_j = out_lo[..., q_chunk:, :]
+        m_j = jnp.maximum(m_lo_j, m_hi)
+        a1 = jnp.exp(m_lo_j - m_j)[..., None]
+        a2 = jnp.exp(m_hi - m_j)[..., None]
+        out_j = (out_lo_j * a1 + out_hi * a2)
+        l_j = l_lo_j * a1[..., 0] + l_hi * a2[..., 0]
+        out_i = out_lo[..., :q_chunk, :] / jnp.maximum(
+            l_lo[..., :q_chunk], 1e-30)[..., None]
+        out_j = out_j / jnp.maximum(l_j, 1e-30)[..., None]
+        # [B,H,G,Q,D] -> [B,Q,H,G,D]
+        return None, (jnp.moveaxis(out_i, 3, 1), jnp.moveaxis(out_j, 3, 1),
+                      i, j)
+
+    _, (outs_i, outs_j, idx_i, idx_j) = _flags_scan(
+        jax.checkpoint(pair_body), None, jnp.arange(n // 2))
+    # stitch chunks back into order
+    outs = jnp.concatenate([outs_i, outs_j], axis=0)       # [n, B,Q,H,G,D]
+    order = jnp.concatenate([idx_i, idx_j])
+    inv = jnp.argsort(order)
+    outs = outs[inv]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)

@@ -1,0 +1,173 @@
+"""Encoder-decoder backbone (SeamlessM4T-v2 style) with audio-frame stub.
+
+Encoder: bidirectional transformer over precomputed frame embeddings (the
+modality frontend is a stub per the assignment). Decoder: causal self-attn +
+cross-attn + FFN. Decode keeps a self-KV cache plus precomputed cross-K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+from repro.flags import scan as _flags_scan
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import _maybe_ckpt, chunked_xent
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _enc_layer_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": L.norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": A.attn_init(k1, cfg, dtype),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def _dec_layer_init(rng, cfg, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"ln1": L.norm_init(cfg.d_model, cfg.norm, dtype),
+            "self_attn": A.attn_init(k1, cfg, dtype),
+            "ln_x": L.norm_init(cfg.d_model, cfg.norm, dtype),
+            "cross_attn": A.attn_init(k2, cfg, dtype),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)   # master params; steps cast to cfg.dtype
+    ke, kd, kemb, kh = jax.random.split(rng, 4)
+    return {
+        "embed": L.embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "head": L.embed_init(kh, cfg.vocab_size, cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda r: _enc_layer_init(r, cfg, dtype))(
+            jax.random.split(ke, cfg.num_encoder_layers)),
+        "decoder": jax.vmap(lambda r: _dec_layer_init(r, cfg, dtype))(
+            jax.random.split(kd, cfg.num_layers)),
+        "enc_norm": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: [B,Senc,D] precomputed embeddings (stub frontend)."""
+    x = shard(frames.astype(_dtype(cfg)), "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, lp):
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm)
+        out, _ = A.attention(lp["attn"], hn, cfg, positions=positions,
+                             causal=False)
+        h = h + out
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm)
+        return h + L.mlp(lp["mlp"], hn, cfg.act, cfg.glu), None
+
+    x, _ = _flags_scan(_maybe_ckpt(cfg, body), x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _decoder_stack(cfg, params, x, enc_out, positions, caches=None, idx=None):
+    with_cache = caches is not None
+
+    def run_layer(lp, h, lc):
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm)
+        cache = None if lc is None else (lc["k"], lc["v"])
+        out, new_kv = A.attention(lp["self_attn"], hn, cfg,
+                                  positions=positions, causal=True,
+                                  cache_kv=cache, cache_idx=idx)
+        h = h + out
+        hn = L.apply_norm(lp["ln_x"], h, cfg.norm)
+        enc_kv = A.encode_cross_kv(lp["cross_attn"], enc_out, cfg)
+        h = h + A.cross_attention(lp["cross_attn"], hn, enc_kv, cfg)
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm)
+        h = h + L.mlp(lp["mlp"], hn, cfg.act, cfg.glu)
+        return h, new_kv
+
+    if with_cache:
+        def body(h, layer):
+            lp, lc = layer
+            h, kv = run_layer(lp, h, lc)
+            return h, {"k": kv[0], "v": kv[1]}
+        x, new_caches = _flags_scan(_maybe_ckpt(cfg, body), x,
+                                     (params["decoder"], caches))
+    else:
+        def body(h, lp):
+            h, kv = run_layer(lp, h, None)
+            return h, {"k": kv[0], "v": kv[1]}
+        x, new_caches = _flags_scan(_maybe_ckpt(cfg, body), x,
+                                     params["decoder"])
+    return x, new_caches
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _decoder_stack(cfg, params, x, enc_out, positions)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    loss = chunked_xent(cfg, x, params["head"]["table"], batch["labels"])
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    enc = (batch, cfg.cross_kv_len, cfg.d_model)
+    return {"layers": {"k": jnp.zeros(shape, dtype),
+                       "v": jnp.zeros(shape, dtype)},
+            "enc_out": jnp.zeros(enc, dtype),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            max_len: int) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Encode frames; prefill the decoder with the prompt tokens."""
+    enc_out = encode(cfg, params, batch["frames"])
+    # keep only cross_kv_len frames for decode cross-attention (fixed budget)
+    enc_keep = enc_out[:, : cfg.cross_kv_len]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(s)[None, :]
+    x, fresh = _decoder_stack(cfg, params, x, enc_out, positions)
+    cache = init_cache(cfg, b, max_len)
+    ck = jax.lax.dynamic_update_slice(cache["layers"]["k"],
+                                      fresh["k"].astype(_dtype(cfg)),
+                                      (0, 0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["layers"]["v"],
+                                      fresh["v"].astype(_dtype(cfg)),
+                                      (0, 0, 0, 0, 0))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = x[:, -1:] @ params["head"]["table"].T
+    pad = cfg.cross_kv_len - enc_keep.shape[1]
+    if pad > 0:
+        enc_keep = jnp.pad(enc_keep, ((0, 0), (0, pad), (0, 0)))
+    return logits, {"layers": {"k": ck, "v": cv},
+                    "enc_out": enc_keep.astype(_dtype(cfg)),
+                    "idx": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = L.embed(params["embed"], tokens)
+    idx = cache["idx"]
+    positions = idx[None, None] * jnp.ones((x.shape[0], 1), jnp.int32)
+    x, new_caches = _decoder_stack(cfg, params, x, cache["enc_out"],
+                                   positions, caches=cache["layers"], idx=idx)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = x[:, -1:] @ params["head"]["table"].T
+    return logits, {"layers": new_caches, "enc_out": cache["enc_out"],
+                    "idx": idx + 1}

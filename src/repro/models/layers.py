@@ -1,0 +1,156 @@
+"""Shared neural layers: norms, MLPs, embeddings, RoPE / M-RoPE.
+
+Functional style: params are plain dict pytrees; every layer is
+``f(params, x, ...) -> y``. Initializers return the param subtree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, dtype, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": jax.random.normal(rng, (in_dim, out_dim), dtype) * jnp.asarray(scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(dim: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+def mlp_init(rng, d_model: int, d_ff: int, glu: bool, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    p: Params = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+                 "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if glu:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str, glu: bool) -> jax.Array:
+    h = dense(p["up"], x)
+    if glu:
+        h = act_fn(act)(dense(p["gate"], x)) * h
+    else:
+        h = act_fn(act)(h)
+    h = shard(h, "batch", None, "model_ff")
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def embed_init(rng, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": jax.random.normal(rng, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Logits; used with tied or untied head table."""
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                           # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    angles = angles[..., None, :]                            # [..., S, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
+                sections: Tuple[int, int, int] = (16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, Dh]; positions_3d: [3, B, S] (t/h/w position ids). The rotary
+    half-dim is split into ``sections`` (t,h,w); each section rotates with its
+    own position stream. sections must sum to Dh/2.
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                           # [Dh/2]
+    # pick, per frequency slot, which of the 3 position streams drives it
+    sel = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                     total_repeat_length=dh // 2)           # [Dh/2]
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),                   # [3,B,S]
+        sel[:, None, None] * jnp.ones((1,) + positions_3d.shape[1:], jnp.int32),
+        axis=0)                                             # [Dh/2,B,S]
+    angles = jnp.moveaxis(pos, 0, -1) * freqs               # [B,S,Dh/2]
+    angles = angles[..., None, :]                           # [B,S,1,Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits [..., V] fp32-stable."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,97 @@
+"""Model registry: uniform build API + dry-run input specs per (arch, shape).
+
+``build_model(cfg)`` returns a ``Model`` bundle of pure functions; the launch
+layer jits them with shardings, the executor invokes them per task.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FAMILY_ENCDEC, ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[[Any, Dict[str, Any]], Tuple[jax.Array, Dict]]
+    prefill: Callable[[Any, Dict[str, Any], int], Tuple[jax.Array, Any]]
+    decode_step: Callable[[Any, jax.Array, Any], Tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == FAMILY_ENCDEC:
+        return Model(
+            cfg=cfg,
+            init=lambda rng: ED.init_params(cfg, rng),
+            train_loss=lambda p, b: ED.train_loss(cfg, p, b),
+            prefill=lambda p, b, m: ED.prefill(cfg, p, b, m),
+            decode_step=lambda p, t, c: ED.decode_step(cfg, p, t, c),
+            init_cache=lambda b, m: ED.init_cache(cfg, b, m),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda rng: T.init_params(cfg, rng),
+        train_loss=lambda p, b: T.train_loss(cfg, p, b),
+        prefill=lambda p, b, m: T.prefill(cfg, p, b, m),
+        decode_step=lambda p, t, c: T.decode_step(cfg, p, t, c),
+        init_cache=lambda b, m: T.init_cache(cfg, b, m),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == FAMILY_ENCDEC:
+        # enc frames seq = s; decoder tokens = s // 8 (speech:text ratio)
+        dec = max(cfg.loss_chunk, s // 8)
+        return {"frames": sds((b, s, cfg.d_model), dt),
+                "tokens": sds((b, dec), i32),
+                "labels": sds((b, dec), i32)}
+    batch: Dict[str, Any] = {"labels": sds((b, s), i32)}
+    if cfg.embed_stub:
+        batch["embeds"] = sds((b, s, cfg.d_model), dt)
+    else:
+        batch["tokens"] = sds((b, s), i32)
+    if cfg.mrope:
+        batch["mrope_positions"] = sds((3, b, s), i32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Specs for serve_step: one new token given a cache of seq_len."""
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    tokens = sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: (ED.init_cache(cfg, b, shape.seq_len)
+                 if cfg.family == FAMILY_ENCDEC
+                 else T.init_cache(cfg, b, shape.seq_len)))
+    return {"tokens": tokens, "cache": cache}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == FAMILY_ENCDEC:
+        return {"frames": sds((b, s, cfg.d_model), dt),
+                "tokens": sds((b, max(64, s // 8)), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    if cfg.embed_stub:
+        batch["embeds"] = sds((b, s, cfg.d_model), dt)
+    else:
+        batch["tokens"] = sds((b, s), jnp.int32)
+    if cfg.mrope:
+        batch["mrope_positions"] = sds((3, b, s), jnp.int32)
+    return batch

@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) mixer.
+
+Chunked dual form (Dao & Gu, 2024): within a chunk the recurrence is evaluated
+as a masked quadratic attention-like matmul (MXU-friendly); across chunks the
+state is carried by an associative scan. ``jax.lax.associative_scan`` keeps the
+HLO a log-depth tree so compiled FLOP accounting stays faithful (a sequential
+while-loop would hide the cost from `cost_analysis`).
+
+Decode keeps an O(1) recurrent state per layer: {"conv": [B,W-1,Cin],
+"ssm": [B,H,P,N]} — this is what makes mamba2 runnable at long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim     # x, B, C go through the conv
+    return s, d_in, nheads, conv_ch
+
+
+def ssd_init(rng, cfg: ModelConfig, dtype) -> Params:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    proj_out = 2 * d_in + 2 * s.state_dim + nh   # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(k1, d, proj_out, dtype),
+        "conv_w": jax.random.normal(k2, (s.conv_width, conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": L.norm_init(d_in, "rmsnorm", dtype),
+        "out_proj": L.dense_init(k3, d_in, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_in, nh, _ = _dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.state_dim,
+                 2 * d_in + 2 * s.state_dim], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: [B,S,C]; w: [W,C]. Returns (y, new_state)."""
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(wlen)) + b
+    return jax.nn.silu(y), xp[:, -(wlen - 1):]
+
+
+def _segsum(da: jax.Array) -> jax.Array:
+    """Stable 'segment-sum' trick: [..., Q] -> [..., Q, Q] lower-tri cumulative
+    sums L[i,j] = sum(da[j+1..i]) for j < i, -inf above diagonal."""
+    q = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD dual form.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (negative);
+    bmat/cmat: [B,S,N]. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+    da = dtc * a[None, None, None, :]                    # [B,NC,Q,H] log-decay
+
+    # --- intra-chunk (quadratic, masked) ---
+    lmat = jnp.exp(_segsum(jnp.moveaxis(da, -1, 2)))     # [B,NC,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)       # [B,NC,Q,Q]
+    att = scores[:, :, None] * lmat                      # [B,NC,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", att, dtc, xc)
+
+    # --- chunk states ---
+    dacum = jnp.cumsum(da, axis=2)                       # [B,NC,Q,H]
+    decay_to_end = jnp.exp(dacum[:, :, -1:, :] - dacum)  # [B,NC,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        bc, dtc * decay_to_end, xc)      # [B,NC,H,P,N]
+
+    # --- inter-chunk associative scan: S_c = G_c * S_{c-1} + states_c ---
+    gc = jnp.exp(dacum[:, :, -1, :])                     # [B,NC,H] chunk decay
+
+    def combine(e1, e2):
+        g1, s1 = e1
+        g2, s2 = e2
+        return g1 * g2, s2 + g2[..., None, None] * s1
+
+    gs, ss = jax.lax.associative_scan(combine, (gc, states), axis=1)
+    prev = jnp.concatenate([jnp.zeros_like(ss[:, :1]), ss[:, :-1]], axis=1)
+    final_state = ss[:, -1]                              # [B,H,P,N]
+    if init_state is not None:
+        # decayed initial state enters every chunk: prod of g over chunks < c
+        gprod = jnp.concatenate([jnp.ones_like(gs[:, :1]), gs[:, :-1]], axis=1)
+        prev = prev + gprod[..., None, None] * init_state[:, None]
+        final_state = final_state + gs[:, -1][..., None, None] * init_state
+
+    # --- inter-chunk contribution to outputs ---
+    decay_from_start = jnp.exp(dacum)                    # [B,NC,Q,H]
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, decay_from_start, prev)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
+              state: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba2 block mixer. x: [B,S,D].
+
+    state=None: train/prefill (chunked dual form), returns final state dict.
+    state given: S must be 1 (decode); sequential update.
+    """
+    s, d_in, nh, conv_ch = _dims(cfg)
+    zxbcdt = L.dense(p["in_proj"], x)
+    z, xi, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["A_log"])                                      # [H]
+
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    xi, bmat, cmat = jnp.split(conv_out, [d_in, d_in + s.state_dim], axis=-1)
+    xh = xi.reshape(xi.shape[0], xi.shape[1], nh, s.head_dim)
+    xh = shard(xh, "batch", None, "model_heads")
+
+    if state is None:
+        seq = xh.shape[1]
+        pad = (-seq) % s.chunk
+        xf = xh.astype(jnp.float32)
+        bf, cf = bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+        if pad:
+            # zero-dt padding is a no-op on the state: decay exp(0)=1, inc=0
+            xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+            cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y, fin = ssd_chunked(xf, dt, a, bf, cf, s.chunk)
+        if pad:
+            y = y[:, :seq]
+        new_state = {"conv": new_conv, "ssm": fin}
+    else:
+        # decode: h' = exp(dt*a)*h + dt*B (x) ; y = C.h
+        h0 = state["ssm"]                                         # [B,H,P,N]
+        dt1 = dt[:, 0]                                            # [B,H]
+        da = jnp.exp(dt1 * a[None, :])                            # [B,H]
+        inc = jnp.einsum("bh,bn,bhp->bhpn", dt1,
+                         bmat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h1 = h0 * da[..., None, None] + inc
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h1)
+        y = y[:, None]                                            # [B,1,H,P]
+        new_state = {"conv": new_conv, "ssm": h1}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = L.apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")    # gated norm
+    return L.dense(p["out_proj"], y), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int, dtype
+                   ) -> Dict[str, jax.Array]:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((layers, batch, s.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((layers, batch, nh, s.head_dim, s.state_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,1 @@
+from repro.optim.api import OptState, init_opt, apply_updates  # noqa: F401

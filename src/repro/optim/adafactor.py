@@ -1,0 +1,84 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moment, no momentum.
+
+Memory per parameter matrix [R, C]: R + C floats instead of R*C — this is
+what lets the 104B/1T archs fit 16 GB/chip HBM (see DESIGN.md §4). Updates
+run in f32 and cast back to the (possibly bf16) param dtype. Stacked
+per-layer leaves are updated via ``lax.map`` over the layer dim so the f32
+temporaries are single-layer sized (full-stack temporaries measured ~100 GiB
+on kimi-k2; see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DECAY = 0.8
+EPS1 = 1e-30
+EPS2 = 1e-3
+CLIP = 1.0
+_STACK_MAP_MIN = 1 << 22
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return jax.tree.map(init, params)
+
+
+def _update_one(p, g, s, beta, lr, gscale):
+    g = g.astype(jnp.float32) * gscale
+    g2 = g * g + EPS1
+    if _factored(p):
+        vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+        vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+        denom = (vr[..., None] * vc[..., None, :]
+                 / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                               EPS1)[..., None])
+        u = g * jax.lax.rsqrt(jnp.maximum(denom, EPS1))
+        new_s = {"vr": vr, "vc": vc}
+    else:
+        v = beta * s["v"] + (1 - beta) * g2
+        u = g * jax.lax.rsqrt(jnp.maximum(v, EPS1))
+        new_s = {"v": v}
+    rms = jnp.sqrt(jnp.mean(u * u) + EPS1)
+    u = u / jnp.maximum(1.0, rms / CLIP)
+    scale = jnp.maximum(EPS2, jnp.sqrt(jnp.mean(
+        jnp.square(p.astype(jnp.float32)))))
+    return (p.astype(jnp.float32) - lr * scale * u).astype(p.dtype), new_s
+
+
+def adafactor_update(params, grads, state, step, lr, gscale=1.0):
+    stepf = step.astype(jnp.float32)
+    beta = 1.0 - stepf ** (-DECAY)
+
+    pflat = jax.tree_util.tree_flatten_with_path(params)[0]
+    tree = jax.tree_util.tree_structure(params)
+    gflat = jax.tree_util.tree_leaves(grads)
+
+    def state_at(path):
+        node = state
+        for k in path:
+            node = node[k.key if hasattr(k, "key") else k.idx]
+        return node
+
+    outs = []
+    for (path, p), g in zip(pflat, gflat):
+        s = state_at(path)
+        if p.ndim >= 3 and p.size >= _STACK_MAP_MIN and _factored(p):
+            newp, news = jax.lax.map(
+                lambda a: _update_one(a[0], a[1], {"vr": a[2], "vc": a[3]},
+                                      beta, lr, gscale),
+                (p, g, s["vr"], s["vc"]))
+            outs.append((newp, {"vr": news["vr"], "vc": news["vc"]}))
+        else:
+            outs.append(_update_one(p, g, s, beta, lr, gscale))
+    new_params = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+    new_state = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+    return new_params, new_state, {}

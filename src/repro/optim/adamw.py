@@ -1,0 +1,46 @@
+"""AdamW with f32 moments (params may be bf16; update math runs in f32).
+
+Stacked per-layer leaves ([L, ...], ndim>=3) are updated via ``lax.map`` over
+the layer dim: the elementwise update math then materializes [1-layer] f32
+temporaries instead of full-stack ones (measured 5 GiB x ~20 live buffers on
+kimi-k2 before this; see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS, WD = 0.9, 0.95, 1e-8, 0.1
+_STACK_MAP_MIN = 1 << 22      # map leaves bigger than 4M elements
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def _update_one(p, g, m, v, lr, bc1, bc2, gscale):
+    g = g.astype(jnp.float32) * gscale
+    m = B1 * m + (1 - B1) * g
+    v = B2 * v + (1 - B2) * g * g
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + EPS)
+    u = u + WD * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+
+def adamw_update(params, grads, state, step, lr, gscale=1.0):
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - B1 ** stepf
+    bc2 = 1.0 - B2 ** stepf
+
+    def upd(p, g, m, v):
+        if p.ndim >= 3 and p.size >= _STACK_MAP_MIN:
+            return jax.lax.map(
+                lambda a: _update_one(*a, lr, bc1, bc2, gscale), (p, g, m, v))
+        return _update_one(p, g, m, v, lr, bc1, bc2, gscale)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2)}, {}

@@ -1,0 +1,39 @@
+"""Optimizer API: AdamW and Adafactor (factored, for the >100B archs).
+
+Pure-functional: ``init_opt(cfg, params)`` -> state; ``apply_updates`` ->
+(new_params, new_state, stats). The optimizer kind is carried by the config
+(static), so the state is a pure array pytree (jit/sharding friendly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adafactor import adafactor_init, adafactor_update
+
+OptState = Dict[str, Any]   # {"step": i32[], "inner": pytree}
+
+
+def init_opt(cfg: ModelConfig, params) -> OptState:
+    if cfg.optimizer == "adafactor":
+        inner = adafactor_init(params)
+    else:
+        inner = adamw_init(params)
+    return {"step": jnp.zeros((), jnp.int32), "inner": inner}
+
+
+def apply_updates(cfg: ModelConfig, params, grads, state: OptState, lr,
+                  gscale=1.0) -> Tuple[Any, OptState, Dict[str, Any]]:
+    """gscale folds gradient clipping/averaging into the (layer-scanned)
+    update so no scaled copy of the gradient tree is materialized."""
+    step = state["step"] + 1
+    if cfg.optimizer == "adafactor":
+        new_params, inner, stats = adafactor_update(
+            params, grads, state["inner"], step, lr, gscale)
+    else:
+        new_params, inner, stats = adamw_update(
+            params, grads, state["inner"], step, lr, gscale)
+    return new_params, {"step": step, "inner": inner}, stats

@@ -1,0 +1,25 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sumsq(x: jax.Array) -> jax.Array:
+    if x.ndim >= 3 and x.size >= (1 << 22):
+        # layer-stacked leaf: reduce per layer so the f32 upcast temporary is
+        # single-layer sized, not full-stack sized
+        return jnp.sum(jax.lax.map(
+            lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), x))
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(_sumsq(x) for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

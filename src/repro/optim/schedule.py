@@ -1,0 +1,13 @@
+"""LR schedules (cosine with linear warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                  total: int = 10_000, min_ratio: float = 0.1):
+    stepf = jnp.asarray(step, jnp.float32)
+    warm = stepf / jnp.maximum(warmup, 1)
+    prog = jnp.clip((stepf - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(stepf < warmup, warm, cos)

@@ -1,0 +1,50 @@
+"""Elastic scaling: resize the worker set W -> W' at runtime.
+
+The WQ re-hash is core (workqueue.resize, stable task ids, minimal moves);
+this module adds the orchestration policy: when to grow/shrink based on the
+queue depth vs worker throughput, mirroring an autoscaler at 1000+ nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.schema import Status
+from repro.core.workqueue import WorkQueue
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    min_workers: int = 1
+    max_workers: int = 4096
+    target_tasks_per_worker: float = 8.0
+    hysteresis: float = 0.5     # only act when off-target by >50%
+
+
+class ElasticController:
+    def __init__(self, wq: WorkQueue, policy: Optional[ElasticPolicy] = None):
+        self.wq = wq
+        self.policy = policy or ElasticPolicy()
+        self.resizes = 0
+
+    def desired_workers(self) -> int:
+        st = self.wq.store.col("status")
+        backlog = int(np.isin(st, [int(Status.READY),
+                                   int(Status.BLOCKED)]).sum())
+        p = self.policy
+        want = int(np.clip(round(backlog / p.target_tasks_per_worker),
+                           p.min_workers, p.max_workers))
+        return max(want, p.min_workers)
+
+    def maybe_resize(self) -> Optional[int]:
+        want = self.desired_workers()
+        cur = self.wq.num_workers
+        if want == cur:
+            return None
+        if abs(want - cur) / max(cur, 1) < self.policy.hysteresis:
+            return None
+        moved = self.wq.resize(want)
+        self.resizes += 1
+        return want

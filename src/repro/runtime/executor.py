@@ -1,0 +1,213 @@
+"""WQ-driven executors: the paper's architecture running real ML work.
+
+TrainExecutor — the supervisor expands a (sweep x step-stream) workflow into
+tasks; each scheduler tick claims the next task per worker slice from the
+partitioned WQ (one vectorized claim — the wq_claim semantics), executes the
+jitted train step with the task's knobs (lr scale, data shard, sweep member),
+and commits provenance (loss, grad norm, timing) back to the SAME store the
+steering engine queries — the paper's single-database HTAP design, with
+training steps in place of Risers simulations.
+
+ServeExecutor — continuous batching: requests are WQ rows; decode slots claim
+requests from their partition; per-token progress/results are store updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.risers_workflow import WorkflowConfig
+from repro.core.schema import Status
+from repro.core.steering import SteeringEngine
+from repro.core.supervisor import SecondarySupervisor, Supervisor
+from repro.core.workqueue import WorkQueue
+from repro.data.pipeline import DataConfig, batch_for
+from repro.launch.steps import init_train_state, make_serve_step, \
+    make_train_step
+from repro.models.registry import build_model
+
+
+@dataclasses.dataclass
+class TrainTaskSpec:
+    """Domain columns of a training task: in0 = lr scale, in1 = data shard,
+    in2 = sweep member id. Outputs: out0 = loss, out1 = grad norm,
+    out2 = tokens/s (sim)."""
+    lr_scale: float
+    shard: int
+    sweep_id: int
+
+
+class TrainExecutor:
+    def __init__(self, cfg: ModelConfig, *, num_workers: int = 1,
+                 base_lr: float = 3e-4, data_cfg: Optional[DataConfig] = None,
+                 checkpointer=None, checkpoint_every: int = 50,
+                 steer_every: int = 0, seed: int = 0):
+        self.cfg = cfg
+        self.num_workers = num_workers
+        self.base_lr = base_lr
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=128, batch_size=8)
+        self.wq = WorkQueue(num_workers=num_workers)
+        self.workflow = WorkflowConfig(name="train-sweep",
+                                       activities=("train_step",))
+        self.supervisor = Supervisor(self.wq, self.workflow)
+        self.secondary = SecondarySupervisor(self.supervisor)
+        self.steering = SteeringEngine(self.wq)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.steer_every = steer_every
+        self.step_fn = jax.jit(make_train_step(cfg))
+        self.state = init_train_state(cfg, jax.random.PRNGKey(seed))
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------- seeding
+    def submit_steps(self, n: int, *, lr_scale: float = 1.0,
+                     sweep_id: int = 0) -> np.ndarray:
+        dom = np.stack([
+            np.full(n, lr_scale),
+            np.arange(self.step, self.step + n) % (1 << 20),
+            np.full(n, sweep_id),
+        ], axis=1)
+        return self.wq.add_tasks(0, n, domain_in=dom, now=time.time())
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> Dict[str, float]:
+        """One scheduler tick: claim -> execute -> commit provenance."""
+        now = time.time()
+        claims = self.wq.claim_all(k=1, now=now)
+        metrics_out: Dict[str, float] = {}
+        for w, rows in claims.items():
+            for row in rows:
+                lr_scale = self.wq.store.col("in0")[row]
+                shard = int(self.wq.store.col("in1")[row])
+                batch = batch_for(self.cfg, self.data_cfg, shard)
+                knobs = {"lr": jnp.asarray(self.base_lr * lr_scale,
+                                           jnp.float32)}
+                t0 = time.time()
+                self.state, metrics = self.step_fn(self.state, batch, knobs)
+                loss = float(metrics["loss"])
+                gnorm = float(metrics["grad_norm"])
+                dt_s = time.time() - t0
+                self.wq.finish(np.asarray([row]), now=time.time(),
+                               domain_out=np.asarray(
+                                   [[loss, gnorm, dt_s]]))
+                self.step += 1
+                rec = {"step": self.step, "loss": loss, "grad_norm": gnorm,
+                       "s_per_step": dt_s}
+                self.history.append(rec)
+                metrics_out = rec
+        if self.checkpointer and self.checkpoint_every \
+                and self.step and self.step % self.checkpoint_every == 0:
+            self.checkpointer.save(self.step, self.state, self.wq)
+        if self.steer_every and self.step % self.steer_every == 0:
+            metrics_out["steering"] = self.steering.run_all(time.time())
+        return metrics_out
+
+    def run(self, max_ticks: int = 10_000) -> List[Dict[str, float]]:
+        for _ in range(max_ticks):
+            if self.steering.q4_tasks_left() == 0:
+                break
+            self.tick()
+        return self.history
+
+    # -------------------------------------------------------------- fault
+    def fail_worker(self, worker_id: int) -> int:
+        """Simulate a node failure: requeue its RUNNING tasks elsewhere."""
+        return self.wq.requeue_worker(worker_id)
+
+    def promote_secondary(self) -> None:
+        self.supervisor.crash()
+        self.supervisor = self.secondary.promote()
+        self.secondary = SecondarySupervisor(self.supervisor)
+
+
+class ServeExecutor:
+    """Continuous batching driven by the store: requests are WQ rows."""
+
+    def __init__(self, cfg: ModelConfig, *, slots: int = 4,
+                 max_len: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.wq = WorkQueue(num_workers=slots)
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.serve_fn = jax.jit(make_serve_step(cfg))
+        self.prefill_fn = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_len))
+        self.cache = None
+        self.slot_row: Dict[int, int] = {}
+        self.slot_tokens: Dict[int, List[int]] = {}
+        self.slot_budget: Dict[int, int] = {}
+        self.rng = jax.random.PRNGKey(seed)
+
+    def submit(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
+        n = prompts.shape[0]
+        dom = np.stack([np.full(n, max_new), np.zeros(n), np.zeros(n)],
+                       axis=1)
+        ids = self.wq.add_tasks(0, n, domain_in=dom, now=time.time())
+        for tid, p in zip(ids, prompts):
+            self.wq.store.blobs[int(tid)] = {"prompt": p}
+        return ids
+
+    def _admit(self) -> None:
+        """Claim queued requests into free slots (continuous batching)."""
+        free = [s for s in range(self.slots) if s not in self.slot_row]
+        if not free:
+            return
+        for s in free:
+            rows = self.wq.claim(s, k=1, now=time.time(), allow_steal=True)
+            if len(rows) == 0:
+                continue
+            row = int(rows[0])
+            tid = int(self.wq.store.col("task_id")[row])
+            prompt = self.wq.store.blobs[tid]["prompt"]
+            batch = {"tokens": prompt[None, :].astype(np.int32)}
+            logits, cache = self.prefill_fn(self.params, batch)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            if self.cache is None or s not in self.slot_tokens:
+                pass
+            self.slot_row[s] = row
+            self.slot_tokens[s] = [nxt]
+            self.slot_budget[s] = int(self.wq.store.col("in0")[row])
+            self._caches = getattr(self, "_caches", {})
+            self._caches[s] = cache
+
+    def step_decode(self) -> int:
+        """One decode step across active slots; returns #finished."""
+        self._admit()
+        finished = 0
+        for s in list(self.slot_row):
+            cache = self._caches[s]
+            tok = jnp.asarray([[self.slot_tokens[s][-1]]], jnp.int32)
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, cache, _ = self.serve_fn(self.params, tok, cache, sub)
+            self._caches[s] = cache
+            self.slot_tokens[s].append(int(nxt[0, 0]))
+            if len(self.slot_tokens[s]) >= self.slot_budget[s] \
+                    or int(cache["idx"]) >= self.max_len - 1:
+                row = self.slot_row.pop(s)
+                toks = self.slot_tokens.pop(s)
+                tid = int(self.wq.store.col("task_id")[row])
+                self.wq.store.blobs[tid]["output"] = np.asarray(toks)
+                self.wq.finish(np.asarray([row]), now=time.time(),
+                               domain_out=np.asarray(
+                                   [[float(len(toks)), 0.0, 0.0]]))
+                finished += 1
+        return finished
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        total = 0
+        for _ in range(max_steps):
+            left = SteeringEngine(self.wq).q4_tasks_left()
+            if left == 0 and not self.slot_row:
+                break
+            total += self.step_decode()
+        return total

@@ -1,0 +1,86 @@
+"""Logical-axis sharding annotations, decoupled from any concrete mesh.
+
+Models annotate activations/params with *logical* axis names ("batch", "seq",
+"model_ff", ...). The launch layer installs a rule set mapping logical axes to
+physical mesh axes for the current (arch x shape x mesh); outside such a
+context every annotation is a no-op, so smoke tests on one CPU device run the
+exact same model code.
+
+This is the pjit/GSPMD idiom: `with_sharding_constraint` steers the sharding
+propagation; in/out shardings at the `jax.jit` boundary come from the same
+rules (see repro.launch.shardrules).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+class Rules:
+    """Mapping logical axis name -> physical mesh axis (or tuple, or None)."""
+
+    def __init__(self, mesh: Mesh, table: Dict[str, Logical]):
+        self.mesh = mesh
+        self.table = dict(table)
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def physical(self, logical: Logical) -> Logical:
+        if logical is None:
+            return None
+        if isinstance(logical, tuple):
+            parts: Tuple[str, ...] = ()
+            for l in logical:
+                p = self.physical(l)
+                if p is None:
+                    continue
+                parts += p if isinstance(p, tuple) else (p,)
+            return parts or None
+        phys = self.table.get(logical)
+        if phys is None:
+            return None
+        if isinstance(phys, tuple):
+            phys = tuple(a for a in phys if a in self._axis_sizes)
+            return phys or None
+        return phys if phys in self._axis_sizes else None
+
+    def spec(self, *logical: Logical) -> P:
+        return P(*[self.physical(l) for l in logical])
+
+    def sharding(self, *logical: Logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical: Logical) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint derived from logical axes.
+
+    No-op when no rule set is installed (single-device smoke paths).
+    Trailing unannotated dims are left unconstrained.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    names = list(logical) + [None] * (x.ndim - len(logical))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(*names)))

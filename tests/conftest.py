@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests and benches must see the REAL single device (the dry-run sets
+# its own 512-device flag in its own process) — so no XLA_FLAGS here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

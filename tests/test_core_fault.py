@@ -1,0 +1,82 @@
+"""Fault tolerance: replication recovery, heartbeats, stragglers, elastic."""
+import numpy as np
+
+from repro.core import Status, WorkQueue
+from repro.core.replication import ReplicaSet
+from repro.core.transactions import TxnLog
+from repro.runtime.elastic import ElasticController, ElasticPolicy
+from repro.runtime.fault import FailureInjector, HeartbeatMonitor
+from repro.runtime.straggler import SpeculativeReexec
+
+
+def test_replica_recovery_returns_running_to_ready():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    rep = ReplicaSet(wq, sync_every=1)
+    rows = wq.claim(0, k=2)
+    rep.sync()
+    wq2 = rep.recover()
+    st = wq2.store.col("status")
+    assert (st != int(Status.RUNNING)).all()
+    assert wq2.counts()["READY"] == 8       # claimed tasks restored to READY
+    # new inserts get fresh ids
+    ids = wq2.add_tasks(0, 2)
+    assert ids.min() >= 8
+
+
+def test_txn_log_records_everything():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    wq.claim_all(k=1)
+    rows = np.nonzero(wq.store.col("status") == int(Status.RUNNING))[0]
+    wq.finish(rows, now=1.0)
+    ops = [t.op for t in wq.log.records]
+    assert ops == ["insert", "claim_all", "finish"]
+
+
+def test_heartbeat_monitor_requeues_dead_worker():
+    wq = WorkQueue(num_workers=3)
+    wq.add_tasks(0, 9)
+    wq.claim(1, k=3, now=0.0)
+    mon = HeartbeatMonitor(wq, timeout_s=10.0, now=0.0)
+    mon.beat(0, now=100.0)
+    mon.beat(2, now=100.0)
+    dead = mon.sweep(now=100.0)
+    assert dead == [1]
+    assert wq.counts()["RUNNING"] == 0
+    assert (wq.store.col("worker_id")[:9] != 1).sum() == 9
+
+
+def test_speculative_reexec_clones_and_reconciles():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 10)
+    spec = SpeculativeReexec(wq, percentile=50, min_samples=5, factor=1.5)
+    # finish a population fast (duration 1s)
+    for t in range(5):
+        rows = wq.claim(0, k=1, now=float(t))
+        wq.finish(rows, now=float(t) + 1.0)
+    # one slow straggler
+    slow = wq.claim(1, k=1, now=10.0)
+    clones = spec.sweep(now=100.0)
+    assert len(clones) == 1
+    # straggler eventually finishes; clone gets pruned
+    wq.finish(slow, now=101.0)
+    assert spec.reconcile() == 1
+    assert wq.counts()["PRUNED"] == 1
+
+
+def test_elastic_controller_grows_with_backlog():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 64)
+    ctl = ElasticController(wq, ElasticPolicy(target_tasks_per_worker=8))
+    new = ctl.maybe_resize()
+    assert new == 8
+    assert wq.num_workers == 8
+    wq.check_invariants()
+
+
+def test_failure_injector_schedule():
+    inj = FailureInjector().kill_worker_at(3, 1).crash_supervisor_at(5)
+    assert inj.events_at(3) == [(3, "worker", 1)]
+    assert inj.events_at(5) == [(5, "supervisor", None)]
+    assert inj.events_at(4) == []

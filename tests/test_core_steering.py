@@ -1,0 +1,103 @@
+"""Steering engine (Q1-Q8) + supervisor expansion + provenance tests."""
+import numpy as np
+
+from repro.configs.risers_workflow import DEFAULT, WorkflowConfig
+from repro.core import (SecondarySupervisor, Status, SteeringEngine,
+                        Supervisor, WorkQueue)
+from repro.core.provenance import derivation_path, prov_document
+
+
+def run_workflow(workers=4, tasks=16, activities=3, fail_worker_at=None):
+    rng = np.random.default_rng(0)
+    wf = WorkflowConfig(activities=tuple(f"a{i}" for i in range(activities)))
+    wq = WorkQueue(num_workers=workers)
+    sup = Supervisor(wq, wf)
+    sup.seed(tasks, duration_s=5.0, rng=rng)
+    now = 0.0
+    for step in range(200):
+        if sup.done():
+            break
+        claims = wq.claim_all(k=1, now=now)
+        for w, rows in claims.items():
+            if len(rows):
+                wq.finish(rows, now=now + 1.0,
+                          domain_out=rng.normal(0.6, 0.2, (len(rows), 3)))
+        sup.expand(now=now)
+        now += 1.0
+    return wq, sup, now
+
+
+def test_supervisor_expands_full_chain():
+    wq, sup, _ = run_workflow(tasks=8, activities=3)
+    act = wq.store.col("activity_id")
+    st = wq.store.col("status")
+    for a in range(3):
+        fin = ((act == a) & (st == int(Status.FINISHED))).sum()
+        assert fin == 8, (a, fin)
+
+
+def test_q1_q6_queries():
+    wq, sup, now = run_workflow(tasks=12, activities=2)
+    steer = SteeringEngine(wq)
+    q1 = steer.q1_recent_status_by_node(now, horizon=now + 10)
+    assert sum(v["finished"] for v in q1.values()) == 24
+    assert steer.q4_tasks_left() == 0
+    assert steer.q5_worst_activity() == (-1, 0)
+    # q6 requires open activities: create some
+    wq.add_tasks(1, 3)
+    times = steer.q6_activity_times()
+    assert 1 in times and times[1][0] > 0
+
+
+def test_q7_provenance_join_and_path():
+    wq, sup, _ = run_workflow(tasks=10, activities=4)
+    steer = SteeringEngine(wq)
+    rows = steer.q7_provenance_join(act_a=0, act_b=2, thr=0.4)
+    act = wq.store.col("activity_id")
+    assert all(act[r] == 0 for r in rows)
+    # derivation path walks back to activity 0
+    tid = int(wq.store.col("task_id")[act == 3][0])
+    path = derivation_path(wq, tid)
+    assert len(path) == 4
+
+
+def test_q8_patch_and_prune():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 10, domain_in=np.linspace(0, 9, 10)[:, None]
+                 * np.ones((10, 3)))
+    steer = SteeringEngine(wq)
+    n = steer.q8_patch_ready(0, "in0", 42.0,
+                             predicate=lambda v: v > 5.0)
+    assert n == 4
+    npruned = steer.prune("in1", 0.0, 3.0)
+    assert npruned == 4
+    assert wq.counts()["PRUNED"] == 4
+
+
+def test_secondary_supervisor_promotion_no_duplicates():
+    rng = np.random.default_rng(1)
+    wf = WorkflowConfig(activities=("a0", "a1"))
+    wq = WorkQueue(num_workers=2)
+    sup = Supervisor(wq, wf)
+    sup.seed(6, duration_s=1.0, rng=rng)
+    sec = SecondarySupervisor(sup)
+    rows = np.concatenate(list(wq.claim_all(k=3).values()))
+    wq.finish(rows, now=1.0, domain_out=np.ones((len(rows), 3)))
+    sup.expand(now=1.0)
+    sec.sync()
+    sup.crash()
+    sup2 = sec.promote()
+    n_new = sup2.expand(now=2.0)       # must not re-expand the same tasks
+    assert n_new == 0
+    act = wq.store.col("activity_id")
+    assert (act == 1).sum() == 6
+
+
+def test_prov_document_is_w3c_shaped():
+    wq, sup, _ = run_workflow(tasks=4, activities=2)
+    doc = prov_document(wq)
+    assert set(doc) >= {"activity", "entity", "agent", "used",
+                        "wasGeneratedBy", "wasAssociatedWith",
+                        "wasDerivedFrom"}
+    assert len(doc["activity"]) == 8
+    assert len(doc["wasDerivedFrom"]) == 4

@@ -1,0 +1,129 @@
+"""WorkQueue unit + property tests (the paper's scheduling invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Status, WorkQueue
+from repro.core.partition import assign_workers, imbalance, partition_sizes
+
+
+def make_wq(workers=4, tasks=20, ready=True):
+    wq = WorkQueue(num_workers=workers)
+    wq.add_tasks(0, tasks, status=Status.READY if ready else Status.BLOCKED)
+    return wq
+
+
+def test_insert_assigns_round_robin():
+    wq = make_wq(workers=4, tasks=16)
+    sizes = partition_sizes(wq.store.col("worker_id"), 4)
+    assert (sizes == 4).all()
+
+
+def test_claim_is_partition_private():
+    wq = make_wq(workers=4, tasks=16)
+    rows = wq.claim(2, k=3)
+    assert len(rows) == 3
+    assert (wq.store.col("worker_id")[rows] == 2).all()
+    assert (wq.store.col("status")[rows] == int(Status.RUNNING)).all()
+
+
+def test_no_double_claim():
+    wq = make_wq(workers=2, tasks=8)
+    r1 = wq.claim(0, k=4)
+    r2 = wq.claim(0, k=4)
+    assert len(np.intersect1d(r1, r2)) == 0
+
+
+def test_claim_all_claims_every_worker():
+    wq = make_wq(workers=4, tasks=16)
+    out = wq.claim_all(k=1)
+    rows = np.concatenate(list(out.values()))
+    assert len(rows) == 4
+    assert len(np.unique(rows)) == 4
+
+
+def test_steal_from_loaded_partition():
+    wq = WorkQueue(num_workers=2)
+    ids = wq.add_tasks(0, 6)
+    # drain worker 0's partition
+    while len(wq.claim(0, k=1)):
+        pass
+    stolen = wq.claim(0, k=1, allow_steal=True)
+    assert len(stolen) == 1
+
+
+def test_finish_and_fail_transitions():
+    wq = make_wq(workers=2, tasks=4)
+    rows = wq.claim(0, k=2)
+    wq.finish(rows[:1], now=1.0, domain_out=np.ones((1, 3)))
+    wq.fail(rows[1:], max_trials=2)
+    st_ = wq.store.col("status")
+    assert st_[rows[0]] == int(Status.FINISHED)
+    assert st_[rows[1]] == int(Status.READY)       # first failure -> retry
+    rows2 = wq.claim(0, k=1)
+    wq.fail(rows2, max_trials=2)
+    assert wq.store.col("status")[rows2[0]] == int(Status.FAILED)
+
+
+def test_illegal_transition_raises():
+    wq = make_wq(workers=2, tasks=2)
+    rows = wq.claim(0, k=1)
+    wq.finish(rows, now=1.0)
+    with pytest.raises(ValueError):
+        wq.finish(rows, now=2.0)
+
+
+def test_requeue_worker_reassigns():
+    wq = make_wq(workers=3, tasks=9)
+    rows = wq.claim(1, k=3)
+    n = wq.requeue_worker(1)
+    assert n == 3
+    st_ = wq.store.col("status")[rows]
+    assert (st_ == int(Status.READY)).all()
+    assert (wq.store.col("worker_id")[rows] != 1).all()
+
+
+def test_resize_rehashes_minimally():
+    wq = make_wq(workers=4, tasks=32)
+    moved = wq.resize(8)
+    assert wq.num_workers == 8
+    sizes = partition_sizes(wq.store.col("worker_id"), 8)
+    assert sizes.sum() == 32
+    assert imbalance(wq.store.col("worker_id"), 8) < 0.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(workers=st.integers(1, 8), tasks=st.integers(0, 64),
+       k=st.integers(1, 4), steal=st.booleans())
+def test_property_claim_conservation(workers, tasks, k, steal):
+    """No task lost or duplicated through claim/finish cycles."""
+    wq = WorkQueue(num_workers=workers)
+    if tasks:
+        wq.add_tasks(0, tasks)
+    total_claimed = 0
+    for _ in range(tasks // max(workers, 1) + 2):
+        out = wq.claim_all(k=k, steal=steal)
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, int)
+        assert len(np.unique(rows)) == len(rows)     # no double claims
+        per_w = {w: len(v) for w, v in out.items()}
+        if not steal:
+            assert all(n <= k for n in per_w.values())
+        total_claimed += len(rows)
+        if len(rows):
+            wq.finish(rows, now=1.0)
+        wq.check_invariants()
+    c = wq.counts()
+    assert c["FINISHED"] == total_claimed == tasks
+
+
+@settings(max_examples=20, deadline=None)
+@given(tasks=st.integers(1, 200), w1=st.integers(1, 16),
+       w2=st.integers(1, 16))
+def test_property_rehash_balance(tasks, w1, w2):
+    ids = np.arange(tasks, dtype=np.int64)
+    a1 = assign_workers(ids, w1)
+    a2 = assign_workers(ids, w2)
+    s2 = partition_sizes(a2, w2)
+    assert s2.sum() == tasks
+    assert s2.max() - s2.min() <= 1                 # round-robin balance

@@ -1,0 +1,101 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle across
+shape/dtype sweeps (+ hypothesis property tests for wq_claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.wq_claim.ops import wq_claim
+from repro.kernels.wq_claim.ref import wq_claim_ref
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,dh,causal,window,dtype", [
+    (1, 512, 4, 2, 64, True, 0, jnp.float32),
+    (2, 256, 4, 4, 128, False, 0, jnp.float32),
+    (1, 512, 2, 1, 112, True, 128, jnp.float32),   # pad 112->128 + window
+    (1, 256, 4, 2, 64, True, 0, jnp.bfloat16),
+])
+def test_flash_attention_vs_ref(b, s, hq, hkv, dh, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("b,smax,hq,hkv,dh,kvlen", [
+    (2, 1024, 4, 2, 64, 700),
+    (1, 2048, 8, 1, 128, 2048),
+    (2, 1024, 4, 4, 112, 513),
+])
+def test_decode_attention_vs_ref(b, smax, hq, hkv, dh, kvlen):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh))
+    k = jax.random.normal(ks[1], (b, smax, hkv, dh))
+    v = jax.random.normal(ks[2], (b, smax, hkv, dh))
+    got = decode_attention(q, k, v, kv_len=kvlen, interpret=True)
+    ref = decode_attention_ref(q, k, v, kvlen)
+    assert float(jnp.max(jnp.abs(got - ref))) < 2e-5
+
+
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (4, 128, 64, 32, 32), (2, 256, 64, 128, 64), (1, 64, 128, 16, 64),
+])
+def test_ssd_scan_vs_sequential_ref(bh, s, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (bh, s, p))
+    b = jax.random.normal(ks[1], (bh, s, n)) * 0.5
+    c = jax.random.normal(ks[2], (bh, s, n)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (bh, s, 1)))
+    a = -jnp.exp(jax.random.normal(ks[4], (bh, 1, 1)) * 0.3)
+    got = ssd_scan(x, b, c, dt, dt * a, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x, b, c, dt, dt * a)
+    rel = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 1e-4
+
+
+@pytest.mark.parametrize("b,s,c", [(2, 64, 128), (1, 256, 512)])
+def test_rglru_scan_vs_ref(b, s, c):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, c))) * 0.95
+    u = jax.random.normal(ks[1], (b, s, c)) * 0.3
+    got = rglru_scan(a, u, interpret=True)
+    ref = rglru_scan_ref(a, u)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([512, 1000, 2048]), w=st.integers(1, 16),
+       k=st.integers(1, 4), seed=st.integers(0, 5))
+def test_property_wq_claim_kernel(n, w, k, seed):
+    """Kernel == oracle; nobody over-claims; claims are partition-private."""
+    rng = np.random.default_rng(seed)
+    status = jnp.asarray(rng.choice(
+        [0, 2, 3, 4], n, p=[.1, .5, .2, .2]).astype(np.int32))
+    worker = jnp.asarray(rng.integers(0, w, n).astype(np.int32))
+    gs, gc = wq_claim(status, worker, num_workers=w, k=k, interpret=True)
+    rs, rc = wq_claim_ref(status, worker, num_workers=w, k=k)
+    assert (np.asarray(gs) == np.asarray(rs)).all()
+    assert (np.asarray(gc) == np.asarray(rc)).all()
+    claimed = np.asarray(gc) == 1
+    per_w = np.bincount(np.asarray(worker)[claimed], minlength=w)
+    assert per_w.max(initial=0) <= k
+    # claimed rows were READY and are now RUNNING; others untouched
+    st_old, st_new = np.asarray(status), np.asarray(gs)
+    assert (st_old[claimed] == 2).all()
+    assert (st_new[claimed] == 3).all()
+    assert (st_new[~claimed] == st_old[~claimed]).all()
