@@ -140,16 +140,21 @@ def exp6_access_breakdown(scale: float = 0.1) -> List[Dict]:
 
 
 def exp7_steering_overhead(scale: float = 0.1) -> List[Dict]:
-    """Fig. 13: wall time with vs without 15s-interval steering queries."""
-    n = int(RW.EXP5_TASKS * scale)
+    """Fig. 13 at 10x the seed task count: wall time with vs without
+    15s-interval steering sweeps. Sweeps execute against store SNAPSHOTS on
+    an analyst thread, truly concurrent with the workers' claim loop — the
+    HTAP interference this experiment quantifies."""
+    n = int(RW.EXP5_TASKS * scale * 10)
     r0 = run_distributed(39, 24, n, 5.0, steer_every_s=0.0,
                          access_latency_s=PAPER_ACCESS_LATENCY_S)
     r1 = run_distributed(39, 24, n, 5.0, steer_every_s=15.0,
                          access_latency_s=PAPER_ACCESS_LATENCY_S)
     return [{
-        "exp": "e7", "steering": s, "makespan_s": round(r.makespan_s, 2),
+        "exp": "e7", "steering": s, "tasks": n,
+        "makespan_s": round(r.makespan_s, 2),
         "overhead": round(r.makespan_s / r0.makespan_s - 1.0, 4),
-        "queries_run": r.op_count.get("steering(Q1..Q6)", 0),
+        "queries_run": r.op_count.get("steering(Q1..Q7)", 0),
+        "steer_wall_s": round(r.op_time.get("steering(Q1..Q7)", 0.0), 4),
     } for s, r in (("off", r0), ("on", r1))]
 
 
@@ -176,12 +181,49 @@ def exp8_centralized_vs_distributed(scale: float = 0.1) -> List[Dict]:
     return rows
 
 
-def exp_kernel_claim() -> List[Dict]:
-    """On-device claim op (wq_claim kernel semantics) latency vs store size."""
+def exp_kernel_claim(scale: float = 1.0) -> List[Dict]:
+    """Claim hot-path microbench, host AND device.
+
+    Host: the vectorized claim_all fast-path vs the seed O(n·W) loop
+    (claim_all_reference) on a 100k-task store — the ≥5x speedup gate.
+    Device: the wq_claim op's jnp oracle latency vs store size (kernel
+    semantics, what the TPU path executes).
+    """
     import jax
     import jax.numpy as jnp
+    from repro.core.workqueue import WorkQueue
     from repro.kernels.wq_claim.ref import wq_claim_ref
-    rows = []
+    rows: List[Dict] = []
+
+    # ---- host path: vectorized vs seed loop at 100k tasks ----------------
+    n_host = max(1024, int(100_000 * scale))
+    rounds = 3
+    host_us: Dict[tuple, float] = {}
+    for w in (64, 936):
+        for impl in ("seed_loop", "vectorized"):
+            wq = WorkQueue(num_workers=w, capacity=2 * n_host)
+            wq.add_tasks(0, n_host)
+            claim = (wq.claim_all_reference if impl == "seed_loop"
+                     else wq.claim_all)
+            t0 = time.perf_counter()
+            claimed = 0
+            for r in range(rounds):
+                out = claim(k=1, now=float(r))
+                claimed += sum(len(v) for v in out.values())
+            us = (time.perf_counter() - t0) / rounds * 1e6
+            host_us[(w, impl)] = us
+            rows.append({"exp": "claim_kernel", "path": "host", "impl": impl,
+                         "rows": n_host, "workers": w,
+                         "us_per_claim_all": round(us, 1),
+                         "tasks_claimed": claimed})
+    for w in (64, 936):
+        rows.append({
+            "exp": "claim_kernel", "path": "host", "impl": "speedup",
+            "rows": n_host, "workers": w,
+            "speedup": round(host_us[(w, "seed_loop")]
+                             / max(host_us[(w, "vectorized")], 1e-9), 2)})
+
+    # ---- device path: wq_claim op latency vs store size ------------------
     rng = np.random.default_rng(0)
     for n in (1 << 12, 1 << 15, 1 << 18):
         for w in (64, 936):
@@ -198,7 +240,8 @@ def exp_kernel_claim() -> List[Dict]:
                 out = fn(status, worker)
             out[0].block_until_ready()
             us = (time.perf_counter() - t0) / reps * 1e6
-            rows.append({"exp": "claim_kernel", "rows": n, "workers": w,
+            rows.append({"exp": "claim_kernel", "path": "device",
+                         "rows": n, "workers": w,
                          "us_per_claim_all": round(us, 1),
                          "us_per_task": round(us / max(w, 1), 3)})
     return rows

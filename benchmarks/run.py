@@ -17,11 +17,17 @@ import time
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))          # the benchmarks package itself
+    sys.path.insert(0, str(root / "src"))
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--only", default="")
+    ap.add_argument("--min-claim-speedup", type=float, default=0.0,
+                    help="exit nonzero unless the claim_kernel host "
+                         "speedup (vectorized vs seed loop) meets this "
+                         "floor — the CI regression gate")
     args = ap.parse_args()
 
     from benchmarks import experiments as E
@@ -36,13 +42,14 @@ def main() -> None:
         "e7_steering_overhead": lambda: E.exp7_steering_overhead(args.scale),
         "e8_centralized_vs_distributed":
             lambda: E.exp8_centralized_vs_distributed(args.scale),
-        "claim_kernel": E.exp_kernel_claim,
+        "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
     }
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
+    only = [t for t in args.only.split(",") if t]
     print("name,us_per_call,derived")
     for name, fn in runs.items():
-        if args.only and args.only not in name:
+        if only and not any(t in name for t in only):
             continue
         t0 = time.perf_counter()
         rows = fn()
@@ -50,6 +57,13 @@ def main() -> None:
         (out_dir / f"{name}.json").write_text(json.dumps(rows, indent=1))
         derived = _headline(name, rows)
         print(f"{name},{dt_us / max(len(rows), 1):.1f},{derived}")
+        if name == "claim_kernel" and args.min_claim_speedup > 0:
+            spd = min(r["speedup"] for r in rows
+                      if r.get("impl") == "speedup")
+            if spd < args.min_claim_speedup:
+                print(f"FAIL: claim host speedup {spd}x < "
+                      f"{args.min_claim_speedup}x gate", file=sys.stderr)
+                sys.exit(1)
 
 
 def _headline(name: str, rows) -> str:
@@ -80,7 +94,9 @@ def _headline(name: str, rows) -> str:
             a = max(r["speedup"] for r in rows if r["mode"] == "adapted")
             return f"paper_speedup={p}x;adapted={a}x"
         if name == "claim_kernel":
-            return f"us_per_task_min={min(r['us_per_task'] for r in rows)}"
+            spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
+            dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)
+            return f"host_speedup_min={spd}x;device_us_per_task_min={dev}"
     except Exception as e:  # noqa: BLE001
         return f"err:{e}"
     return ""

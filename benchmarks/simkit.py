@@ -13,6 +13,7 @@ The paper's experiments map 1:1 (see DESIGN.md §8).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import heapq
 import time
@@ -83,6 +84,28 @@ def run_distributed(num_workers: int, threads: int, num_tasks: int,
             dbms_by_worker[:] = dbms_by_worker + dt / num_workers
         return dt, out
 
+    # steering runs on a separate analyst thread against store SNAPSHOTS —
+    # truly concurrent with the claim/finish loop below (HTAP: the sweep
+    # reads one committed version while workers mutate the live arrays).
+    # ONE sweep in flight at a time: like a real analyst session, a sweep
+    # due while the previous one still runs is skipped — this also bounds
+    # the COW column generations pinned by queued snapshots to one
+    steer_pool = concurrent.futures.ThreadPoolExecutor(
+        max_workers=1, thread_name_prefix="steering")
+    steer_futs: List[concurrent.futures.Future] = []
+
+    def steer_sweep(view, at_clock: float) -> float:
+        t0 = time.perf_counter()
+        steer.run_all(at_clock, view)
+        return time.perf_counter() - t0
+
+    def steer_account(dt: float) -> None:
+        op_time["steering(Q1..Q7)"] = \
+            op_time.get("steering(Q1..Q7)", 0.0) + dt
+        op_count["steering(Q1..Q7)"] = \
+            op_count.get("steering(Q1..Q7)", 0) + 1
+        dbms_by_worker[:] = dbms_by_worker + dt / num_workers
+
     # event loop: (finish_time, worker, row)
     clock = 0.0
     events: List[Tuple[float, int, int]] = []
@@ -131,15 +154,23 @@ def run_distributed(num_workers: int, threads: int, num_tasks: int,
             # proxy between workers and their tasks)
             timed("supervisor.expand", lambda: sup.expand(now=clock))
         if clock >= next_steer:
-            # steering queries run on a separate analyst session — they do
-            # NOT block workers (in-memory store, paper Experiment 7)
-            timed("steering(Q1..Q6)", lambda: steer.run_all(clock))
+            while steer_futs and steer_futs[0].done():   # harvest finished
+                steer_account(steer_futs.pop(0).result())
+            if not steer_futs:
+                # snapshot at this commit point; the sweep itself runs on
+                # the analyst thread, does NOT block workers (paper Exp. 7)
+                steer_futs.append(steer_pool.submit(
+                    steer_sweep, wq.store.snapshot_view(), clock))
             next_steer += steer_every_s
         try_fill(w)
         if not events:
             # supervisor may have inserted new READY tasks
             for w2 in range(num_workers):
                 try_fill(w2)
+
+    for f in steer_futs:                      # drain the analyst thread;
+        steer_account(f.result())             # charge measured sweep time
+    steer_pool.shutdown()
 
     dbms_total = float(dbms_by_worker.sum())
     return SimResult(

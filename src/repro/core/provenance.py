@@ -78,12 +78,15 @@ def export_provenance(wq: WorkQueue, path: str,
 def derivation_path(wq: WorkQueue, task_id: int) -> List[int]:
     """Walk wasDerivedFrom edges back to the source activity."""
     store = wq.store
-    tid = store.col("task_id")
     parent = store.col("parent_task")
-    id_to_row = {int(t): i for i, t in enumerate(tid)}
+    id_to_row = store.id_index()          # cached task_id -> row gather table
+
+    def row_of(t: int) -> int:
+        return int(id_to_row[t]) if 0 <= t < id_to_row.shape[0] else -1
+
     path = [task_id]
-    row = id_to_row.get(task_id)
-    while row is not None and parent[row] >= 0:
+    row = row_of(task_id)
+    while row >= 0 and parent[row] >= 0:
         path.append(int(parent[row]))
-        row = id_to_row.get(int(parent[row]))
+        row = row_of(int(parent[row]))
     return path

@@ -2,44 +2,76 @@
 dynamic adaptations they enable (Q8 / data reduction).
 
 Q1-Q6 analyze execution metadata, Q7 joins execution + provenance + domain
-data, Q8 *adapts* the workflow (patches inputs of READY tasks). All queries
-are vectorized reductions over the live column store — the HTAP design the
-paper argues for: same store, transactional claims + analytical scans.
+data, Q8 *adapts* the workflow (patches inputs of READY tasks).
+
+HTAP isolation: analytical queries execute against an immutable
+:class:`~repro.core.store.SnapshotView` (``run_all`` pins one snapshot for
+the whole sweep), so a sweep observes ONE committed store version while
+claims keep mutating the live arrays concurrently — no READY/RUNNING
+double-counts across queries, the consistency half of the paper's
+single-database argument. Q8 and prune are transactions: they always write
+the LIVE store (reading their predicates live too), never a snapshot.
 
 ``device_qN`` variants run the same reduction with jnp on the device mirror
 (used by the benchmark that measures steering overhead on-accelerator).
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.schema import Status
+from repro.core.store import SnapshotView
 from repro.core.workqueue import WorkQueue
 
 
 class SteeringEngine:
-    def __init__(self, wq: WorkQueue):
+    def __init__(self, wq: WorkQueue, *, use_snapshots: bool = True):
         self.wq = wq
+        self.use_snapshots = use_snapshots
+        # the pinned view is THREAD-LOCAL: an analyst thread's sweep must not
+        # leak its snapshot into live queries issued from other threads
+        self._tls = threading.local()
 
     # --------------------------------------------------------------- helpers
+    def _store(self):
+        """Read-side source: the snapshot pinned by this thread's sweep, else
+        the live store (single queries are trivially consistent)."""
+        view = getattr(self._tls, "view", None)
+        return view if view is not None else self.wq.store
+
     def _cols(self, *names):
-        return tuple(self.wq.store.col(n) for n in names)
+        v = self._store()
+        return tuple(v.col(n) for n in names)
+
+    @contextlib.contextmanager
+    def snapshot_scope(self, view: Optional[SnapshotView] = None):
+        """Pin all queries in the block (on this thread) to one version."""
+        prev = getattr(self._tls, "view", None)
+        self._tls.view = view if view is not None \
+            else self.wq.store.snapshot_view()
+        try:
+            yield self._tls.view
+        finally:
+            self._tls.view = prev
 
     # Q1: per-node task status counts within the last minute
     def q1_recent_status_by_node(self, now: float, horizon: float = 60.0
                                  ) -> Dict[int, Dict[str, int]]:
         st, wid, t0 = self._cols("status", "worker_id", "start_time")
         recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
+        fails = self._store().col("fail_trials")
         out: Dict[int, Dict[str, int]] = {}
         for w in np.unique(wid[recent]):
             m = recent & (wid == w)
             out[int(w)] = {
                 "started": int(m.sum()),
                 "finished": int((st[m] == int(Status.FINISHED)).sum()),
-                "failures": int(self.wq.store.col("fail_trials")[m].sum()),
+                "failures": int(fails[m].sum()),
             }
         return out
 
@@ -65,7 +97,7 @@ class SteeringEngine:
 
     # Q4: tasks left
     def q4_tasks_left(self) -> int:
-        st = self.wq.store.col("status")
+        st = self._store().col("status")
         return int(np.isin(st, [int(Status.READY), int(Status.RUNNING),
                                 int(Status.BLOCKED)]).sum())
 
@@ -98,62 +130,80 @@ class SteeringEngine:
     # and B's task took longer than B's average
     def q7_provenance_join(self, act_a: int = 0, act_b: int = 2,
                            thr: float = 0.5) -> np.ndarray:
+        """Vectorized provenance walk: all hits step one parent edge per
+        pass via the precomputed id->row index (O(depth) gathers instead of
+        a Python while-loop per hit)."""
+        v = self._store()
         st, act, t0, t1 = self._cols("status", "activity_id", "start_time",
                                      "end_time")
-        f1 = self.wq.store.col("out0")
-        parent = self.wq.store.col("parent_task")
-        tid = self.wq.store.col("task_id")
+        f1 = v.col("out0")
+        parent = v.col("parent_task")
         fin_b = (st == int(Status.FINISHED)) & (act == act_b)
         if not fin_b.any():
             return np.empty(0, np.int64)
         dur = t1 - t0
         slow = dur > np.nanmean(dur[fin_b])
         hits = np.nonzero(fin_b & (f1 > thr) & slow)[0]
-        # walk provenance edges back to activity A
-        out = []
-        id_to_row = {int(t): i for i, t in enumerate(tid[: len(st)])}
-        for row in hits:
-            r = int(row)
-            while act[r] > act_a and parent[r] >= 0:
-                r = id_to_row.get(int(parent[r]), -1)
-                if r < 0:
-                    break
-            if r >= 0 and act[r] == act_a:
-                out.append(r)
-        return np.asarray(out, np.int64)
+        if not len(hits):
+            return np.empty(0, np.int64)
+        id_to_row = v.id_index()
+        cur = hits.astype(np.int64)
+        while True:
+            safe = np.maximum(cur, 0)
+            walk = (cur >= 0) & (act[safe] > act_a) & (parent[safe] >= 0)
+            if not walk.any():
+                break
+            pid = parent[cur[walk]]
+            inb = pid < id_to_row.shape[0]
+            cur[walk] = np.where(
+                inb, id_to_row[np.minimum(pid, id_to_row.shape[0] - 1)], -1)
+        ok = (cur >= 0) & (act[np.maximum(cur, 0)] == act_a)
+        return cur[ok]
 
     # Q8: ADAPT — patch inputs of READY tasks of an activity (user steering)
     def q8_patch_ready(self, activity: int, col: str, value: float,
                        predicate: Optional[Callable[[np.ndarray], np.ndarray]]
                        = None) -> int:
-        st, act = self._cols("status", "activity_id")
-        m = (st == int(Status.READY)) & (act == activity)
-        if predicate is not None:
-            m &= predicate(self.wq.store.col(col))
-        idx = np.nonzero(m)[0]
-        if len(idx):
-            self.wq.store.update(idx, **{col: value})
-            self.wq.log.append("steer_patch", {"activity": activity,
-                                               "col": col, "n": len(idx)})
+        store = self.wq.store                 # transactional: live store only
+        with store.txn():
+            st = store.col("status")
+            act = store.col("activity_id")
+            m = (st == int(Status.READY)) & (act == activity)
+            if predicate is not None:
+                m &= predicate(store.col(col))
+            idx = np.nonzero(m)[0]
+            if len(idx):
+                store.update(idx, **{col: value})
+                self.wq.log.append("steer_patch",
+                                   {"activity": activity, "col": col,
+                                    "n": len(idx)},
+                                   store_version=store.version)
         return len(idx)
 
     # data reduction (paper [49]): prune READY/BLOCKED tasks by predicate
     def prune(self, predicate_col: str, lo: float, hi: float) -> int:
-        st = self.wq.store.col("status")
-        vals = self.wq.store.col(predicate_col)
-        m = np.isin(st, [int(Status.READY), int(Status.BLOCKED)]) \
-            & (vals >= lo) & (vals <= hi)
-        idx = np.nonzero(m)[0]
-        if len(idx):
-            self.wq.store.update(idx, status=int(Status.PRUNED))
-            self.wq.log.append("steer_prune", {"n": len(idx)})
+        store = self.wq.store                 # transactional: live store only
+        with store.txn():
+            st = store.col("status")
+            vals = store.col(predicate_col)
+            m = np.isin(st, [int(Status.READY), int(Status.BLOCKED)]) \
+                & (vals >= lo) & (vals <= hi)
+            idx = np.nonzero(m)[0]
+            if len(idx):
+                store.update(idx, status=int(Status.PRUNED))
+                self.wq.log.append("steer_prune", {"n": len(idx)},
+                                   store_version=store.version)
         return len(idx)
 
     # ------------------------------------------------------------ on-device
     def device_monitor(self) -> Dict[str, float]:
-        """Same aggregations with jnp over the device mirror (HTAP on-chip)."""
+        """Same aggregations with jnp over the device mirror (HTAP on-chip).
+
+        The mirror is cut from the pinned snapshot when inside a sweep, so
+        on-device analytics see the same version as the host queries.
+        """
         import jax.numpy as jnp
-        dv = self.wq.store.device_view(["status", "worker_id", "start_time",
+        dv = self._store().device_view(["status", "worker_id", "start_time",
                                         "end_time"])
         st = dv["status"]
         fin = (st == int(Status.FINISHED))
@@ -165,12 +215,25 @@ class SteeringEngine:
             "mean_task_s": float(dur.sum() / jnp.maximum(fin.sum(), 1)),
         }
 
-    def run_all(self, now: float) -> Dict[str, object]:
-        """One steering sweep (the paper runs the full set every 15 s)."""
-        return {
-            "q1": self.q1_recent_status_by_node(now),
-            "q3": self.q3_worst_nodes(now).tolist(),
-            "q4": self.q4_tasks_left(),
-            "q5": self.q5_worst_activity(),
-            "q6": self.q6_activity_times(),
-        }
+    def run_all(self, now: float,
+                view: Optional[SnapshotView] = None) -> Dict[str, object]:
+        """One steering sweep (the paper runs the full set every 15 s).
+
+        The whole sweep executes against ONE snapshot version (pass ``view``
+        to analyze a snapshot taken earlier, e.g. mid-claim); claims proceed
+        on the live store concurrently.
+        """
+        if view is not None or self.use_snapshots:
+            ctx = self.snapshot_scope(view)
+        else:
+            ctx = contextlib.nullcontext(self.wq.store)
+        with ctx as v:
+            return {
+                "q1": self.q1_recent_status_by_node(now),
+                "q3": self.q3_worst_nodes(now).tolist(),
+                "q4": self.q4_tasks_left(),
+                "q5": self.q5_worst_activity(),
+                "q6": self.q6_activity_times(),
+                "q7": self.q7_provenance_join().tolist(),
+                "version": getattr(v, "version", self.wq.store.version),
+            }

@@ -8,15 +8,80 @@ for analytical steering reductions and for the vectorized / Pallas claim ops.
 
 Updates go through ``apply`` with a transaction record so the txn log
 (transactions.py) can replay them on replicas and after restarts.
+
+HTAP snapshot isolation
+-----------------------
+``snapshot_view()`` returns an immutable :class:`SnapshotView` of the store at
+the current committed version in O(columns) time: the live arrays are frozen
+(``writeable = False``) and handed to the view; the NEXT transactional write to
+a frozen column copies it first (column-granular copy-on-write). Analytical
+steering sweeps therefore read a consistent version while claims keep mutating
+the live store — the paper's "same store, OLTP claims + OLAP scans" argument
+without torn reads. Snapshot creation and transaction commits serialize on one
+lock so a view can never observe half a committed batch.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.schema import Column, Status, wq_schema
+
+
+def _build_id_index(tid: np.ndarray) -> np.ndarray:
+    """``id_to_row`` gather table: arr[task_id] == row, -1 for unknown ids."""
+    hi = int(tid.max(initial=-1)) + 1
+    idx = np.full(max(hi, 1), -1, np.int64)
+    valid = tid >= 0
+    idx[tid[valid]] = np.nonzero(valid)[0]
+    return idx
+
+
+class SnapshotView:
+    """Immutable, internally consistent view of a store version.
+
+    Holds references to the store's frozen column arrays (zero-copy at
+    creation); exposes the read-side query API of :class:`ColumnStore` so the
+    steering engine can run against either interchangeably.
+    """
+
+    def __init__(self, cols: Dict[str, np.ndarray], n_rows: int,
+                 version: int):
+        self._cols = cols
+        self.n_rows = n_rows
+        self.version = version
+        self._id_index: Optional[np.ndarray] = None
+
+    def col(self, name: str) -> np.ndarray:
+        return self._cols[name][: self.n_rows]
+
+    def where(self, **eq) -> np.ndarray:
+        mask = np.ones(self.n_rows, bool)
+        for name, val in eq.items():
+            mask &= self.col(name) == val
+        return np.nonzero(mask)[0]
+
+    def partition(self, worker_id: int) -> np.ndarray:
+        return self.where(worker_id=worker_id)
+
+    def device_view(self, names: Sequence[str]):
+        import jax.numpy as jnp
+        return {n: jnp.asarray(self.col(n)) for n in names}
+
+    def id_index(self) -> np.ndarray:
+        """``id_to_row`` gather table at this version (computed lazily once —
+        the view is immutable, so no invalidation is ever needed)."""
+        if self._id_index is None:
+            self._id_index = _build_id_index(self.col("task_id"))
+        return self._id_index
+
+    def stats(self) -> Dict[int, int]:
+        status = self.col("status")
+        return {int(s): int(np.sum(status == int(s))) for s in Status}
 
 
 class ColumnStore:
@@ -30,30 +95,48 @@ class ColumnStore:
         self.n_rows = 0
         self.version = 0          # bumped per committed transaction
         self.blobs: Dict[int, Dict[str, Any]] = {}   # task_id -> raw pointers
+        # serializes commits against snapshot creation (snapshot isolation);
+        # reentrant so insert -> _grow nests safely
+        self._mu = threading.RLock()
+        self._id_index: Optional[np.ndarray] = None   # task_id -> row cache
+        self._id_index_rows = -1
+
+    # --------------------------------------------------------------- writes
+    def _writable(self, name: str) -> np.ndarray:
+        """Column array safe to mutate: copy-on-write if a snapshot holds it."""
+        arr = self.cols[name]
+        if not arr.flags.writeable:
+            arr = arr.copy()
+            self.cols[name] = arr
+        return arr
 
     # ------------------------------------------------------------------ rows
     def insert(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
-        n = len(next(iter(rows.values())))
-        if self.n_rows + n > self.capacity:
-            self._grow(max(self.capacity * 2, self.n_rows + n))
-        idx = np.arange(self.n_rows, self.n_rows + n)
-        for name, vals in rows.items():
-            self.cols[name][idx] = vals
-        self.n_rows += n
-        self.version += 1
-        return idx
+        with self._mu:
+            n = len(next(iter(rows.values())))
+            if self.n_rows + n > self.capacity:
+                self._grow(max(self.capacity * 2, self.n_rows + n))
+            idx = np.arange(self.n_rows, self.n_rows + n)
+            for name, vals in rows.items():
+                self._writable(name)[idx] = vals
+            self.n_rows += n
+            self.version += 1
+            self._id_index_rows = -1
+            return idx
 
     def _grow(self, new_cap: int):
-        for c in self.schema:
-            new = np.full(new_cap, c.default, dtype=c.dtype)
-            new[: self.n_rows] = self.cols[c.name][: self.n_rows]
-            self.cols[c.name] = new
-        self.capacity = new_cap
+        with self._mu:
+            for c in self.schema:
+                new = np.full(new_cap, c.default, dtype=c.dtype)
+                new[: self.n_rows] = self.cols[c.name][: self.n_rows]
+                self.cols[c.name] = new
+            self.capacity = new_cap
 
     def update(self, idx: np.ndarray, **values) -> None:
-        for name, vals in values.items():
-            self.cols[name][idx] = vals
-        self.version += 1
+        with self._mu:
+            for name, vals in values.items():
+                self._writable(name)[idx] = vals
+            self.version += 1
 
     # --------------------------------------------------------------- queries
     def col(self, name: str) -> np.ndarray:
@@ -70,6 +153,30 @@ class ColumnStore:
         """The paper's 'WHERE worker_id = i' partition view."""
         return self.where(worker_id=worker_id)
 
+    def id_index(self) -> np.ndarray:
+        """``id_to_row`` lookup: arr[task_id] == row, -1 for unknown ids.
+
+        Cached per insert-generation (task_id is immutable after insert), so
+        provenance walks (Q7, derivation paths) gather instead of dict-probing.
+        """
+        if self._id_index_rows != self.n_rows:
+            self._id_index = _build_id_index(self.col("task_id"))
+            self._id_index_rows = self.n_rows
+        return self._id_index
+
+    # ---------------------------------------------------------- transactions
+    @contextlib.contextmanager
+    def txn(self):
+        """Commit boundary: writes inside the block form one atomic batch.
+
+        Holds the commit lock across the block so ``snapshot_view`` (and other
+        committers) serialize at batch granularity — a snapshot can never see
+        e.g. a status flip without its matching start_time write. Nests freely
+        (RLock); individual insert/update calls are single-op batches.
+        """
+        with self._mu:
+            yield self
+
     # ------------------------------------------------------------ device I/O
     def device_view(self, names: Sequence[str]):
         """jnp mirror of selected columns (for steering / claim kernels)."""
@@ -77,14 +184,26 @@ class ColumnStore:
         return {n: jnp.asarray(self.col(n)) for n in names}
 
     # ------------------------------------------------------------- snapshots
+    def snapshot_view(self) -> SnapshotView:
+        """O(columns) immutable view at the current committed version.
+
+        Freezes the live arrays; the next committed write to a frozen column
+        copies it (COW), so the view keeps observing this version forever.
+        """
+        with self._mu:
+            for name, arr in self.cols.items():
+                arr.flags.writeable = False
+            return SnapshotView(dict(self.cols), self.n_rows, self.version)
+
     def snapshot(self) -> Dict[str, Any]:
-        return {
-            "n_rows": self.n_rows,
-            "version": self.version,
-            "cols": {n: self.cols[n][: self.n_rows].copy()
-                     for n in self.cols},
-            "blobs": dict(self.blobs),
-        }
+        with self._mu:
+            return {
+                "n_rows": self.n_rows,
+                "version": self.version,
+                "cols": {n: self.cols[n][: self.n_rows].copy()
+                         for n in self.cols},
+                "blobs": dict(self.blobs),
+            }
 
     @classmethod
     def restore(cls, snap: Dict[str, Any],

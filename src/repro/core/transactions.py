@@ -4,35 +4,48 @@ Every WorkQueue mutation appends a record; replicas (replication.py) consume
 the tail; checkpoints persist (snapshot, log-offset) so restart = restore
 snapshot + replay tail — the paper's in-memory-DBMS durability story
 ("in-memory data nodes with occasional on-disk checkpoints").
+
+Records carry the store version they committed at (``store_version``) so a
+consumer can align the log with a :class:`~repro.core.store.SnapshotView`:
+``tail_for_version(v)`` is exactly the delta to replay ON TOP of a snapshot
+taken at version ``v`` — the foundation for txn-log replay onto snapshots and
+multi-host replica catch-up.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
 @dataclass
 class Txn:
-    version: int
+    version: int                     # log sequence number
     op: str
     payload: Dict[str, Any]
     wall_time: float
+    store_version: int = -1          # ColumnStore.version at commit time
 
 
 class TxnLog:
     def __init__(self):
         self.records: List[Txn] = []
 
-    def append(self, op: str, payload: Dict[str, Any]) -> int:
+    def append(self, op: str, payload: Dict[str, Any],
+               store_version: int = -1) -> int:
         v = len(self.records)
-        self.records.append(Txn(v, op, _freeze(payload), time.time()))
+        self.records.append(Txn(v, op, _freeze(payload), time.time(),
+                                store_version))
         return v
 
     def tail(self, since: int) -> List[Txn]:
         return self.records[since:]
+
+    def tail_for_version(self, store_version: int) -> List[Txn]:
+        """Records committed strictly after a store version (snapshot delta)."""
+        return [r for r in self.records if r.store_version > store_version]
 
     def __len__(self) -> int:
         return len(self.records)

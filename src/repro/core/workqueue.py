@@ -8,6 +8,18 @@ claims the next task for every worker at once — this is what the executor
 uses per training step and what the ``wq_claim`` Pallas kernel implements
 on-device.
 
+Claim fast-path
+---------------
+The paper's Experiment 6 shows getREADYtasks + the RUNNING flip dominate DBMS
+time, so the hot path here is fully vectorized: ONE scan over the ready
+suffix of the store (per-partition ready cursors skip the claimed prefix),
+per-worker ranks via a stable worker-sort + ``np.bincount`` segment offsets,
+and work stealing as one vectorized redistribution of the leftover pool onto
+deficit workers — no per-worker Python loop anywhere. ``claim_all_reference``
+keeps the original O(n·W) loop as the oracle for equivalence tests and the
+speedup benchmark. With ``device_claim`` enabled the primary phase runs the
+``wq_claim`` Pallas op on the accelerator instead.
+
 Work stealing (straggler mitigation) claims from the most-loaded sibling
 partition when the own partition is dry (paper: "more partitions than data
 nodes gives flexibility ... load balancing").
@@ -27,11 +39,58 @@ from repro.core.transactions import TxnLog
 
 class WorkQueue:
     def __init__(self, num_workers: int, store: Optional[ColumnStore] = None,
-                 txn_log: Optional[TxnLog] = None, capacity: int = 1 << 16):
+                 txn_log: Optional[TxnLog] = None, capacity: int = 1 << 16,
+                 device_claim: Optional[bool] = None):
         self.store = store or ColumnStore(capacity=capacity)
         self.num_workers = num_workers
         self.log = txn_log or TxnLog()
         self._next_task_id = int(self.store.n_rows)
+        if device_claim is None:
+            from repro.flags import wq_device_claim
+            device_claim = wq_device_claim()
+        self.device_claim = bool(device_claim)
+        # ready cursor per partition: no READY row of partition w exists at a
+        # row index < _cursor[w]. Claims advance it; any transition that can
+        # re-create READY rows at lower indices lowers it again.
+        self._cursor = np.zeros(num_workers, np.int64)
+        # orphan watermark: min row index at which a READY row whose
+        # worker_id fell outside [0, W) may exist (shrink-resize + retry).
+        # No per-partition cursor covers those rows, so scans start at
+        # min(cursor.min(), _orphan_lo) to keep them reachable by stealing.
+        self._orphan_lo = self._NO_ORPHANS
+
+    _NO_ORPHANS = np.iinfo(np.int64).max
+
+    def _scan_start(self) -> int:
+        return int(min(self._cursor.min(), self._orphan_lo))
+
+    # ----------------------------------------------------------- txn helper
+    def _append_log(self, op: str, payload: Dict) -> None:
+        self.log.append(op, payload, store_version=self.store.version)
+
+    # -------------------------------------------------------------- cursors
+    def invalidate_cursors(self, rows: Optional[np.ndarray] = None) -> None:
+        """Lower the ready cursors after an out-of-band status change.
+
+        Call with the affected rows when external code mutates ``status`` (or
+        ``worker_id``) directly on the store instead of going through the
+        WorkQueue API; with ``rows=None`` all cursors reset to 0.
+        """
+        if rows is None or len(rows) == 0:
+            self._cursor[:] = 0
+            self._orphan_lo = 0
+        else:
+            self._cursor[:] = np.minimum(self._cursor, int(np.min(rows)))
+            self._orphan_lo = min(self._orphan_lo, int(np.min(rows)))
+
+    def _lower_cursors(self, rows: np.ndarray, wid: np.ndarray) -> None:
+        """Per-partition lower bound for rows that just became READY."""
+        ok = (wid >= 0) & (wid < self.num_workers)
+        if ok.any():
+            np.minimum.at(self._cursor, wid[ok], rows[ok])
+        if (~ok).any():                    # orphaned partition rows: tracked
+            self._orphan_lo = min(self._orphan_lo,   # by the watermark, not
+                                  int(np.min(rows[~ok])))    # any cursor
 
     # -------------------------------------------------------------- inserts
     def add_tasks(self, activity_id: int, n: int, *,
@@ -58,8 +117,8 @@ class WorkQueue:
         if parent_task is not None:
             rows["parent_task"] = parent_task
         idx = self.store.insert(rows)
-        self.log.append("insert", {"activity_id": activity_id, "n": n,
-                                   "ids": ids})
+        self._append_log("insert", {"activity_id": activity_id, "n": n,
+                                    "ids": ids})
         return ids
 
     # ---------------------------------------------------------------- claim
@@ -67,34 +126,65 @@ class WorkQueue:
               now: float = 0.0, allow_steal: bool = False) -> np.ndarray:
         """getREADYtasks + updateToRUNNING for one worker (partition-private).
 
-        Returns claimed row indices (== task ids here).
+        Returns claimed row indices (== task ids here). Scans the partition's
+        ready suffix (``_cursor``) in geometrically growing blocks, stopping
+        as soon as k matches are found — O(k·W)-ish for round-robin
+        partitions instead of O(store).
         """
-        status = self.store.col("status")
-        wid = self.store.col("worker_id")
-        mask = (status == int(Status.READY)) & (wid == worker_id)
-        idx = np.nonzero(mask)[0][:k]
-        if len(idx) == 0 and allow_steal:
-            idx = self._steal(worker_id, k)
-        if len(idx):
-            self.store.update(idx, status=int(Status.RUNNING),
-                              start_time=now, worker_id=worker_id,
-                              core_id=worker_id)
-            self.log.append("claim", {"worker": worker_id,
-                                      "ids": self.store.col("task_id")[idx]})
+        with self.store.txn():
+            n = self.store.n_rows
+            start = int(self._cursor[worker_id])
+            status = self.store.col("status")
+            wid = self.store.col("worker_id")
+            found: List[np.ndarray] = []
+            n_found = 0
+            pos = start
+            block = max(1024, 16 * k * self.num_workers)
+            while pos < n and n_found <= k:      # one extra match tells us
+                end = min(n, pos + block)        # the partition isn't drained
+                m = (status[pos:end] == int(Status.READY)) \
+                    & (wid[pos:end] == worker_id)
+                rel = np.nonzero(m)[0]
+                if len(rel):
+                    found.append(rel + pos)
+                    n_found += len(rel)
+                pos = end
+                block *= 2
+            rel_all = np.concatenate(found) if found \
+                else np.empty(0, np.int64)
+            idx = rel_all[:k]
+            if n_found <= k and pos >= n:        # partition drained
+                self._cursor[worker_id] = n
+            elif len(idx):
+                self._cursor[worker_id] = int(idx[-1]) + 1
+            if len(idx) == 0 and allow_steal:
+                idx = self._steal(worker_id, k)
+            if len(idx):
+                self.store.update(idx, status=int(Status.RUNNING),
+                                  start_time=now, worker_id=worker_id,
+                                  core_id=worker_id)
+                self._append_log("claim", {
+                    "worker": worker_id,
+                    "ids": self.store.col("task_id")[idx]})
         return idx
 
     def _steal(self, thief: int, k: int) -> np.ndarray:
-        """Claim from the most-loaded sibling partition."""
+        """Claim from the most-loaded sibling partition (one vectorized pass)."""
+        start = self._scan_start()
         status = self.store.col("status")
         wid = self.store.col("worker_id")
-        ready = status == int(Status.READY)
+        ready = status[start:] == int(Status.READY)
         if not ready.any():
             return np.empty(0, np.int64)
-        sizes = np.bincount(wid[ready], minlength=self.num_workers)
+        rw = wid[start:][ready]
+        # no [0, W) cap: a partition orphaned by a shrink-resize is a valid
+        # victim (bincount extends past minlength), same as the seed loop —
+        # otherwise claim()-driven schedulers could never rescue those rows
+        sizes = np.bincount(rw[rw >= 0], minlength=self.num_workers)
         victim = int(np.argmax(sizes))
         if sizes[victim] == 0 or victim == thief:
             return np.empty(0, np.int64)
-        idx = np.nonzero(ready & (wid == victim))[0][:k]
+        idx = np.nonzero(ready & (wid[start:] == victim))[0][:k] + start
         return idx
 
     def claim_all(self, k: int = 1, *, now: float = 0.0,
@@ -102,9 +192,160 @@ class WorkQueue:
         """Batched claim: next k READY tasks for EVERY worker in one pass.
 
         This is the SPMD form the executor uses (and the semantics of the
-        wq_claim kernel): one vectorized scan over the store instead of W
-        separate queries.
+        wq_claim kernel). Vectorized end to end: stable worker-sort of the
+        ready rows gives per-worker segments, bincount offsets give in-segment
+        ranks (rank < k == claimed), and stealing redistributes the unclaimed
+        pool onto deficit workers with one repeat/argsort/split round.
+        Observationally equivalent to :meth:`claim_all_reference`.
         """
+        W = self.num_workers
+        if k < 1:
+            return {w: np.empty(0, np.int64) for w in range(W)}
+        with self.store.txn():
+            n = self.store.n_rows
+            start = self._scan_start()
+            if self.device_claim:
+                claimed, n_claimed, pool = self._primary_device(start, k)
+            else:
+                claimed, n_claimed, pool = self._primary_host(start, k)
+
+            # advance cursors: a worker that claimed < k drained its
+            # partition; one that claimed exactly k stops right after its
+            # k-th claimed row (earlier READY rows are all claimed)
+            offs_c = np.cumsum(n_claimed) - n_claimed
+            new_cur = np.full(W, n, np.int64)
+            full = n_claimed >= k
+            if full.any():
+                new_cur[full] = claimed[offs_c[full] + k - 1] + 1
+            self._cursor = np.maximum(self._cursor, new_cur)
+
+            # stealing as ONE vectorized redistribution: deficit workers
+            # (ascending id, reference semantics) receive the leftover pool
+            # (ascending row order) in contiguous chunks
+            extras = np.empty(0, np.int64)
+            recipients = np.empty(0, np.int64)
+            if steal and pool.size:
+                need = k - n_claimed
+                if need.sum() > 0:
+                    recipients = np.repeat(np.arange(W), need)[: pool.size]
+                    extras = pool[: recipients.size]
+
+            rows_all = np.concatenate([claimed, extras])
+            w_all = np.concatenate(
+                [np.repeat(np.arange(W), n_claimed), recipients])
+            redo = np.argsort(w_all, kind="stable")   # per worker: primary
+            rows_all = rows_all[redo]                 # rows, then stolen rows
+            tot = n_claimed + np.bincount(recipients, minlength=W)
+            out = dict(enumerate(np.split(rows_all, np.cumsum(tot)[:-1])))
+
+            if len(rows_all):
+                self.store.update(rows_all, status=int(Status.RUNNING),
+                                  start_time=now)
+                self._append_log("claim_all", {"n": len(rows_all)})
+        return out
+
+    def _primary_host(self, start: int, k: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized primary claim phase over the ready suffix.
+
+        Scans in geometrically growing blocks and stops as soon as every
+        worker's budget is met — for dense round-robin partitions that is
+        one small block, independent of store size. Per block: stable
+        worker-sort + bincount segment offsets give in-partition ranks; rank
+        below the worker's remaining quota == claimed. The leftover pool for
+        stealing is only materialized when quotas stay unmet after a full
+        scan (and the suffix is cheap to rescan exactly then).
+
+        Returns (claimed rows in worker-major order, per-worker claim counts,
+        leftover READY rows in ascending row order).
+        """
+        W = self.num_workers
+        n = self.store.n_rows
+        status = self.store.col("status")
+        wid = self.store.col("worker_id")
+        need = np.full(W, k, np.int64)
+        parts: List[np.ndarray] = []
+        pos = start
+        block = max(4096, 16 * k * W)
+        while pos < n and need.any():
+            end = min(n, pos + block)
+            rr = np.nonzero(status[pos:end] == int(Status.READY))[0] + pos
+            if rr.size:
+                rw = wid[rr]
+                order = np.argsort(rw, kind="stable")  # groups workers,
+                srows = rr[order]                      # keeps row order
+                sw = rw[order]                         # within each
+                lo = int(np.searchsorted(sw, 0))       # partition ids
+                hi = int(np.searchsorted(sw, W))       # outside [0, W)
+                seg_rows, seg_w = srows[lo:hi], sw[lo:hi]
+                counts = np.bincount(seg_w, minlength=W)
+                offs = np.cumsum(counts) - counts
+                rank = np.arange(len(seg_rows)) - np.repeat(offs, counts)
+                take = rank < need[seg_w]
+                parts.append(seg_rows[take])
+                need -= np.minimum(counts, need)
+            pos = end
+            block *= 2
+        rows = np.concatenate(parts) if parts else np.empty(0, np.int64)
+        order = np.argsort(wid[rows], kind="stable")   # worker-major, row-
+        claimed = rows[order]                          # sorted within worker
+        n_claimed = np.bincount(wid[rows], minlength=W)
+        if need.any():
+            # full scan happened and deficits remain: pool = every READY row
+            # of the suffix not claimed above, ascending (reference order)
+            left = np.zeros(n - start, bool)
+            left[np.nonzero(status[start:] == int(Status.READY))[0]] = True
+            left[rows - start] = False
+            pool = np.nonzero(left)[0] + start
+            self._advance_orphan_watermark(pool, wid)
+        else:
+            pool = np.empty(0, np.int64)
+        return claimed, n_claimed, pool
+
+    def _advance_orphan_watermark(self, pool: np.ndarray,
+                                  wid: np.ndarray) -> None:
+        """Given the COMPLETE set of unclaimed READY rows, re-derive the
+        orphan watermark exactly (lazy advance — it only ever lowers on
+        fail-retry, so this is where it recovers)."""
+        pw = wid[pool]
+        orph = pool[(pw < 0) | (pw >= self.num_workers)]
+        self._orphan_lo = int(orph.min()) if orph.size else self._NO_ORPHANS
+
+    def _primary_device(self, start: int, k: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Primary claim phase on the accelerator via the wq_claim Pallas op.
+
+        The kernel computes the per-worker rank<k claim mask in one
+        data-parallel pass; the host applies the resulting mask to the
+        authoritative store (stealing stays host-side).
+        """
+        from repro.kernels.wq_claim.ops import wq_claim_columns
+        status = self.store.col("status")[start:]
+        wid_full = self.store.col("worker_id")
+        claim_mask, new_status = wq_claim_columns(
+            status, wid_full[start:], num_workers=self.num_workers, k=k)
+        rows = np.nonzero(claim_mask)[0] + start
+        # the kernel's rank trick degenerates to rank 0 for rows whose
+        # partition id is outside [0, W) (all-zero one-hot), so it "claims"
+        # them regardless of budget — route those to the steal pool instead,
+        # matching the host path's searchsorted lo/hi split
+        w_rows = wid_full[rows]
+        ok = (w_rows >= 0) & (w_rows < self.num_workers)
+        orphans = rows[~ok]
+        rows, w_rows = rows[ok], w_rows[ok]
+        order = np.argsort(w_rows, kind="stable")
+        claimed = rows[order]
+        n_claimed = np.bincount(w_rows, minlength=self.num_workers)
+        pool = np.sort(np.concatenate(
+            [np.nonzero(new_status == int(Status.READY))[0] + start,
+             orphans]))
+        self._advance_orphan_watermark(pool, wid_full)
+        return claimed, n_claimed, pool
+
+    def claim_all_reference(self, k: int = 1, *, now: float = 0.0,
+                            steal: bool = True) -> Dict[int, np.ndarray]:
+        """The seed O(n·W) loop implementation, kept verbatim as the oracle
+        for equivalence tests and the claim-path speedup benchmark."""
         status = self.store.col("status")
         wid = self.store.col("worker_id")
         ready = status == int(Status.READY)
@@ -130,68 +371,82 @@ class WorkQueue:
         if len(all_idx):
             self.store.update(all_idx, status=int(Status.RUNNING),
                               start_time=now)
-            self.log.append("claim_all", {"n": len(all_idx)})
+            self._append_log("claim_all", {"n": len(all_idx)})
+        self.invalidate_cursors()      # bypasses the cursor bookkeeping
         return out
 
     # ------------------------------------------------------------- complete
     def finish(self, idx: np.ndarray, *, now: float = 0.0,
                domain_out: Optional[np.ndarray] = None) -> None:
         self._check_transition(idx, Status.FINISHED)
-        upd = {"status": int(Status.FINISHED), "end_time": now}
-        self.store.update(np.asarray(idx), **upd)
-        if domain_out is not None:
-            cols = {f"out{i}": domain_out[:, i]
-                    for i in range(domain_out.shape[1])}
-            self.store.update(np.asarray(idx), **cols)
-        self.log.append("finish", {"ids": np.asarray(idx)})
+        with self.store.txn():
+            upd = {"status": int(Status.FINISHED), "end_time": now}
+            self.store.update(np.asarray(idx), **upd)
+            if domain_out is not None:
+                cols = {f"out{i}": domain_out[:, i]
+                        for i in range(domain_out.shape[1])}
+                self.store.update(np.asarray(idx), **cols)
+            self._append_log("finish", {"ids": np.asarray(idx)})
 
     def fail(self, idx: np.ndarray, *, now: float = 0.0,
              max_trials: int = 3) -> None:
         """Failure handling: retry (back to READY) until fail_trials exhausts."""
         idx = np.asarray(idx)
-        trials = self.store.col("fail_trials")[idx] + 1
-        retry = idx[trials < max_trials]
-        dead = idx[trials >= max_trials]
-        self.store.update(idx, fail_trials=trials)
-        if len(retry):
-            self.store.update(retry, status=int(Status.READY))
-        if len(dead):
-            self.store.update(dead, status=int(Status.FAILED), end_time=now)
-        self.log.append("fail", {"retry": retry, "dead": dead})
+        with self.store.txn():
+            trials = self.store.col("fail_trials")[idx] + 1
+            retry = idx[trials < max_trials]
+            dead = idx[trials >= max_trials]
+            self.store.update(idx, fail_trials=trials)
+            if len(retry):
+                self.store.update(retry, status=int(Status.READY))
+                self._lower_cursors(retry, self.store.col("worker_id")[retry])
+            if len(dead):
+                self.store.update(dead, status=int(Status.FAILED),
+                                  end_time=now)
+            self._append_log("fail", {"retry": retry, "dead": dead})
 
     def requeue_worker(self, worker_id: int, *, reassign: bool = True) -> int:
         """Node failure: return the dead worker's RUNNING tasks to READY and
         (optionally) rehash them to live partitions."""
-        idx = self.store.where(worker_id=worker_id,
-                               status=int(Status.RUNNING))
-        if len(idx) == 0:
-            return 0
-        self.store.update(idx, status=int(Status.READY))
-        trials = self.store.col("fail_trials")[idx] + 1
-        self.store.update(idx, fail_trials=trials)
-        if reassign and self.num_workers > 1:
-            live = [w for w in range(self.num_workers) if w != worker_id]
-            new_w = np.asarray(live, np.int32)[
-                self.store.col("task_id")[idx] % len(live)]
-            self.store.update(idx, worker_id=new_w)
-        self.log.append("requeue_worker", {"worker": worker_id,
-                                           "n": len(idx)})
-        return len(idx)
+        with self.store.txn():
+            idx = self.store.where(worker_id=worker_id,
+                                   status=int(Status.RUNNING))
+            if len(idx) == 0:
+                return 0
+            self.store.update(idx, status=int(Status.READY))
+            trials = self.store.col("fail_trials")[idx] + 1
+            self.store.update(idx, fail_trials=trials)
+            if reassign and self.num_workers > 1:
+                live = [w for w in range(self.num_workers) if w != worker_id]
+                new_w = np.asarray(live, np.int32)[
+                    self.store.col("task_id")[idx] % len(live)]
+                self.store.update(idx, worker_id=new_w)
+            self._lower_cursors(idx, self.store.col("worker_id")[idx])
+            self._append_log("requeue_worker", {"worker": worker_id,
+                                                "n": len(idx)})
+            return len(idx)
 
     # --------------------------------------------------------------- elastic
     def resize(self, new_workers: int) -> int:
         """Elastic scaling: re-hash non-terminal tasks to W' partitions."""
-        status = self.store.col("status")
-        movable = np.isin(status, [int(Status.READY), int(Status.BLOCKED)])
-        idx = np.nonzero(movable)[0]
-        tids = self.store.col("task_id")[idx]
-        new_assign = assign_workers(tids, new_workers)
-        moved = int(np.sum(new_assign !=
-                           self.store.col("worker_id")[idx]))
-        self.store.update(idx, worker_id=new_assign)
-        self.num_workers = new_workers
-        self.log.append("resize", {"workers": new_workers, "moved": moved})
-        return moved
+        with self.store.txn():
+            status = self.store.col("status")
+            movable = np.isin(status, [int(Status.READY),
+                                       int(Status.BLOCKED)])
+            idx = np.nonzero(movable)[0]
+            tids = self.store.col("task_id")[idx]
+            new_assign = assign_workers(tids, new_workers)
+            moved = int(np.sum(new_assign !=
+                               self.store.col("worker_id")[idx]))
+            self.store.update(idx, worker_id=new_assign)
+            self.num_workers = new_workers
+            self._cursor = np.zeros(new_workers, np.int64)
+            # re-hash reassigned every READY/BLOCKED row into [0, W'), so no
+            # READY orphan can exist right after a resize
+            self._orphan_lo = self._NO_ORPHANS
+            self._append_log("resize", {"workers": new_workers,
+                                        "moved": moved})
+            return moved
 
     # ------------------------------------------------------------ invariants
     def _check_transition(self, idx: np.ndarray, to: Status) -> None:
@@ -204,7 +459,7 @@ class WorkQueue:
     def check_invariants(self) -> None:
         """Property-test hooks: every task in exactly one status; RUNNING
         tasks have start_time; FINISHED have end >= start; partition ids in
-        range."""
+        range; no READY row hides below its partition's ready cursor."""
         st = self.store.col("status")
         assert ((st >= int(Status.EMPTY)) & (st <= int(Status.PRUNED))).all()
         wid = self.store.col("worker_id")
@@ -216,6 +471,11 @@ class WorkQueue:
         ok = (self.store.col("end_time")[fin]
               >= self.store.col("start_time")[fin])
         assert ok.all()
+        ready_rows = np.nonzero(st == int(Status.READY))[0]
+        rw = wid[ready_rows]
+        in_range = (rw >= 0) & (rw < self.num_workers)
+        assert not (ready_rows[in_range]
+                    < self._cursor[rw[in_range]]).any()
 
     # ------------------------------------------------------------- counters
     def counts(self) -> Dict[str, int]:

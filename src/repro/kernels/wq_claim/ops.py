@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.wq_claim.kernel import wq_claim_fwd
 from repro.kernels.wq_claim.ref import wq_claim_ref
@@ -23,3 +25,26 @@ def wq_claim(status, worker, *, num_workers: int, k: int = 1,
         status, worker, num_workers=num_workers, k=k,
         row_block=min(1024, status.shape[0]), interpret=interpret)
     return new_status[:n], claimed[:n]
+
+
+def wq_claim_columns(status: np.ndarray, worker: np.ndarray, *,
+                     num_workers: int, k: int = 1,
+                     interpret: bool = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-facing bridge for WorkQueue's device claim path.
+
+    Takes the store's numpy status/worker columns, runs the Pallas claim op
+    (interpret mode automatically off-TPU), and returns numpy
+    ``(claim_mask [N] bool, new_status [N] int32)`` for the control plane to
+    apply to the authoritative host store.
+    """
+    if status.size == 0:
+        return (np.zeros(0, bool), np.zeros(0, np.int32))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    new_status, claimed = wq_claim(
+        jnp.asarray(np.ascontiguousarray(status), jnp.int32),
+        jnp.asarray(np.ascontiguousarray(worker), jnp.int32),
+        num_workers=num_workers, k=k, interpret=bool(interpret))
+    return (np.asarray(claimed).astype(bool),
+            np.asarray(new_status, np.int32))

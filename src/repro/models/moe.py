@@ -30,6 +30,14 @@ from repro.sharding import current_rules, shard
 
 Params = Dict[str, Any]
 
+# jax.shard_map(check_vma=) landed in jax 0.5; on older jaxlibs the API lives
+# in jax.experimental with the check_rep= spelling
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _shard_map = functools.partial(_shard_map_impl, check_rep=False)
+
 EP_SHARDS = 16          # production "model" axis size; expert-dim padding unit
 CAPACITY_FACTOR = 1.25
 
@@ -191,13 +199,12 @@ def moe_ffn_ep(p: Params, x: jax.Array, cfg: ModelConfig,
         out2d = jax.lax.psum(out2d, "model")
         return out2d.reshape(bl, sl, dl)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P("model", None, None),
                   P("model", None, None) if "gate" in p else P(),
                   P("model", None, None), bspec, bspec, bspec),
-        out_specs=bspec,
-        check_vma=False)
+        out_specs=bspec)
     out = fn(p["up"], p.get("gate"), p["down"], x, w3, i3)
     return out, aux
 

@@ -13,6 +13,7 @@ requests from their partition; per-token progress/results are store updates.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -62,6 +63,12 @@ class TrainExecutor:
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.steer_every = steer_every
+        # steering sweeps run on an analyst thread against a store snapshot,
+        # concurrent with the claim/train/commit loop (HTAP, paper Exp. 7)
+        self._steer_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="steering")
+        self._steer_future: Optional[concurrent.futures.Future] = None
+        self.last_steering: Optional[Dict[str, object]] = None
         self.step_fn = jax.jit(make_train_step(cfg))
         self.state = init_train_state(cfg, jax.random.PRNGKey(seed))
         self.step = 0
@@ -106,8 +113,17 @@ class TrainExecutor:
         if self.checkpointer and self.checkpoint_every \
                 and self.step and self.step % self.checkpoint_every == 0:
             self.checkpointer.save(self.step, self.state, self.wq)
-        if self.steer_every and self.step % self.steer_every == 0:
-            metrics_out["steering"] = self.steering.run_all(time.time())
+        if self._steer_future is not None and self._steer_future.done():
+            self.last_steering = self._steer_future.result()
+            metrics_out["steering"] = self.last_steering
+            self._steer_future = None
+        if self.steer_every and self.step % self.steer_every == 0 \
+                and self._steer_future is None:
+            # snapshot NOW (consistent with this tick's commits); analyze it
+            # on the steering thread while the next ticks keep claiming
+            view = self.wq.store.snapshot_view()
+            self._steer_future = self._steer_pool.submit(
+                self.steering.run_all, time.time(), view)
         return metrics_out
 
     def run(self, max_ticks: int = 10_000) -> List[Dict[str, float]]:
@@ -115,7 +131,28 @@ class TrainExecutor:
             if self.steering.q4_tasks_left() == 0:
                 break
             self.tick()
+        self._drain_steering()
         return self.history
+
+    def _drain_steering(self) -> None:
+        """Harvest an in-flight sweep; record it on the latest history entry
+        so short runs still surface their final (paid-for) sweep."""
+        if self._steer_future is not None:
+            self.last_steering = self._steer_future.result()
+            self._steer_future = None
+            if self.history:
+                self.history[-1].setdefault("steering", self.last_steering)
+
+    def close(self) -> None:
+        """Release the steering analyst thread (ticks after close raise)."""
+        self._drain_steering()
+        self._steer_pool.shutdown(wait=True)
+
+    def __del__(self):
+        try:
+            self._steer_pool.shutdown(wait=False)
+        except Exception:
+            pass
 
     # -------------------------------------------------------------- fault
     def fail_worker(self, worker_id: int) -> int:

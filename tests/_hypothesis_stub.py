@@ -1,0 +1,91 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+CI installs the real hypothesis via the ``dev`` extra (pyproject.toml); this
+stub only exists so the property-test modules still COLLECT AND RUN in
+hermetic environments without it (the paper-repro container bakes jax/numpy
+but no dev extras, and nothing may be pip-installed there). It implements
+just the surface this repo uses — ``@settings(max_examples=, deadline=)``,
+``@given(**kwargs)`` and the ``integers`` / ``booleans`` / ``sampled_from`` /
+``floats`` strategies — by looping a seeded RNG over max_examples drawn
+inputs. No shrinking, no database, same-seed-same-cases on every run.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def given(*args, **kwargs):
+    if args:
+        raise NotImplementedError(
+            "hypothesis stub supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*fargs, **fkwargs):
+            conf = getattr(wrapper, "_stub_settings", {})
+            n = int(conf.get("max_examples", 20))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in kwargs.items()}
+                fn(*fargs, **fkwargs, **drawn)
+        # hide the strategy params from pytest's fixture resolution (the
+        # real hypothesis does the same); remaining params stay fixtures
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in kwargs])
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._stub_settings = kwargs
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register this stub as the ``hypothesis`` package in sys.modules."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "floats"):
+        setattr(strategies, name, globals()[name])
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,5 +2,16 @@ import os
 import sys
 
 # Smoke tests and benches must see the REAL single device (the dry-run sets
-# its own 512-device flag in its own process) — so no XLA_FLAGS here.
+# its own 512-device flag in its own process) — so no XLA_FLAGS here; the
+# 8-device SPMD test sets the flag in its own subprocess.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis when available (CI installs the dev extra);
+# hermetic containers without it fall back to the deterministic stub so all
+# test modules still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()

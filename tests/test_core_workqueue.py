@@ -117,6 +117,44 @@ def test_property_claim_conservation(workers, tasks, k, steal):
     assert c["FINISHED"] == total_claimed == tasks
 
 
+@settings(max_examples=25, deadline=None)
+@given(workers=st.integers(1, 8), tasks=st.integers(0, 80),
+       k=st.integers(1, 4), steal=st.booleans(), seed=st.integers(0, 7))
+def test_property_vectorized_claim_matches_seed_loop(workers, tasks, k,
+                                                     steal, seed):
+    """The vectorized claim fast-path is observationally equivalent to the
+    seed O(n·W) loop (claim_all_reference): same per-worker rows through
+    interleaved claim/finish/fail cycles, same final store state."""
+    rng = np.random.default_rng(seed)
+    wq_vec = WorkQueue(num_workers=workers)
+    wq_ref = WorkQueue(num_workers=workers)
+    if tasks:
+        wq_vec.add_tasks(0, tasks)
+        wq_ref.add_tasks(0, tasks)
+    for rnd in range(tasks // max(workers, 1) + 2):
+        o1 = wq_vec.claim_all(k=k, steal=steal, now=float(rnd))
+        o2 = wq_ref.claim_all_reference(k=k, steal=steal, now=float(rnd))
+        assert set(o1) == set(o2)
+        for w in o1:
+            assert np.array_equal(o1[w], o2[w]), (w, o1[w], o2[w])
+        rows = np.concatenate([v for v in o1.values() if len(v)]) \
+            if any(len(v) for v in o1.values()) else np.empty(0, np.int64)
+        if len(rows):
+            # same random mix of finishes and retries on both queues
+            fail_mask = rng.random(len(rows)) < 0.3
+            if fail_mask.any():
+                wq_vec.fail(rows[fail_mask])
+                wq_ref.fail(rows[fail_mask])
+            if (~fail_mask).any():
+                wq_vec.finish(rows[~fail_mask], now=float(rnd) + 0.5)
+                wq_ref.finish(rows[~fail_mask], now=float(rnd) + 0.5)
+        wq_vec.check_invariants()
+    assert np.array_equal(wq_vec.store.col("status"),
+                          wq_ref.store.col("status"))
+    assert np.array_equal(wq_vec.store.col("worker_id"),
+                          wq_ref.store.col("worker_id"))
+
+
 @settings(max_examples=20, deadline=None)
 @given(tasks=st.integers(1, 200), w1=st.integers(1, 16),
        w2=st.integers(1, 16))
