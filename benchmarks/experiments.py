@@ -14,7 +14,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.simkit import SimResult, run_centralized, run_distributed
+from benchmarks.simkit import SimResult, run_centralized, run_distributed, \
+    run_replica_lag
 from repro.configs import risers_workflow as RW
 
 PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
@@ -178,6 +179,49 @@ def exp8_centralized_vs_distributed(scale: float = 0.1) -> List[Dict]:
                 "distrib_sched_s": round(rd.dbms_total_s, 3),
                 "central_msgs": rc.messages,
             })
+    return rows
+
+
+def exp_replica_lag(scale: float = 1.0) -> List[Dict]:
+    """Replica catch-up: delta-shipped txn-log replay vs full-copy baseline.
+
+    The paper's availability story (§3.2, one replica per partition fed by
+    the transaction log; tens-of-MB metadata at 100k tasks) demands sync
+    cost proportional to the DELTA, not the store. Both arms run the same
+    deterministic workload (claims, finishes, fails, requeue, resize, Q8
+    patches, prunes, expansions) with the same sync cadence; the delta arm
+    additionally verifies that the caught-up replica is bit-identical to a
+    primary snapshot at the same version and that a full steering sweep on
+    it returns identical results — FAILING the benchmark otherwise (this is
+    the enforced acceptance criterion, not a soft metric).
+    """
+    n = max(int(4_000 * scale), 200)
+    rows: List[Dict] = []
+    arms: Dict[str, Dict] = {}
+    for mode in ("delta", "full"):
+        for workers in (8, 39):
+            r = run_replica_lag(workers, n, mode=mode, sync_every=64)
+            arms[(mode, workers)] = r
+            rows.append({"exp": "e_replica_lag", "mode": mode,
+                         "workers": workers, **{
+                             k: (round(v, 5) if isinstance(v, float) else v)
+                             for k, v in r.items() if k != "mode"}})
+    for workers in (8, 39):
+        d, f = arms[("delta", workers)], arms[("full", workers)]
+        if not (d.get("cols_equal") and d.get("sweep_equal")):
+            raise AssertionError(
+                f"replica catch-up diverged from primary at W={workers}: "
+                f"cols_equal={d.get('cols_equal')} "
+                f"sweep_equal={d.get('sweep_equal')}")
+        rows.append({
+            "exp": "e_replica_lag", "mode": "speedup", "workers": workers,
+            "bytes_ratio_full_over_delta": round(
+                f["bytes_shipped"] / max(d["bytes_shipped"], 1), 2),
+            "sync_wall_ratio": round(
+                f["sync_wall_s"] / max(d["sync_wall_s"], 1e-9), 2),
+            "delta_bytes_per_record": round(
+                d["bytes_shipped"] / max(d["log_records"], 1), 1),
+        })
     return rows
 
 

@@ -42,6 +42,7 @@ def main() -> None:
         "e7_steering_overhead": lambda: E.exp7_steering_overhead(args.scale),
         "e8_centralized_vs_distributed":
             lambda: E.exp8_centralized_vs_distributed(args.scale),
+        "e_replica_lag": lambda: E.exp_replica_lag(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
     }
     out_dir = pathlib.Path(args.out)
@@ -93,6 +94,12 @@ def _headline(name: str, rows) -> str:
             p = max(r["speedup"] for r in rows if r["mode"] == "paper")
             a = max(r["speedup"] for r in rows if r["mode"] == "adapted")
             return f"paper_speedup={p}x;adapted={a}x"
+        if name == "e_replica_lag":
+            sp = [r for r in rows if r["mode"] == "speedup"]
+            br = min(r["bytes_ratio_full_over_delta"] for r in sp)
+            eq = all(r.get("sweep_equal", True) for r in rows
+                     if r["mode"] == "delta")
+            return f"full/delta_bytes_min={br}x;sweep_equal={eq}"
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs.risers_workflow import WorkflowConfig
 from repro.core.centralized import CentralizedMaster
+from repro.core.replication import DeltaReplicator, FullCopyReplica
 from repro.core.schema import Status
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import Supervisor
@@ -178,6 +179,131 @@ def run_distributed(num_workers: int, threads: int, num_tasks: int,
         dbms_time_s=float(dbms_by_worker.max()),
         dbms_total_s=dbms_total,
         op_time=op_time, op_count=op_count, tasks_done=done)
+
+
+def _sweep_fingerprint(res: Dict) -> str:
+    """Canonical form of a run_all result for cross-store equality checks."""
+    import json
+    return json.dumps(res, sort_keys=True, default=str)
+
+
+def run_replica_lag(num_workers: int, num_tasks: int,
+                    mean_dur_s: float = 1.0, *, activities: int = 3,
+                    sync_every: int = 64, seed: int = 0,
+                    mode: str = "delta") -> Dict:
+    """Replication catch-up drill: a full workflow (claims, finishes, fails,
+    requeue, resize, steering patches/prunes, expansions) runs on the
+    primary while a replica syncs every ``sync_every`` log records.
+
+    ``mode="delta"`` uses :class:`DeltaReplicator` (txn-log tail replay);
+    ``mode="full"`` uses :class:`FullCopyReplica` (the pre-delta baseline
+    that deep-copies the whole store each sync). Both arms run the identical
+    deterministic workload, so sync bytes and sync wall time are directly
+    comparable — delta cost tracks the log delta, full-copy cost tracks
+    store size.
+
+    For the delta arm the drill also PROVES catch-up correctness: at the
+    end it pins a primary ``snapshot_view()``, syncs the replica to exactly
+    that version, and checks (a) every store column is bit-identical and
+    (b) a full Q1-Q7 steering sweep returns identical results on both
+    stores (the acceptance criterion of the replication subsystem).
+    """
+    rng = np.random.default_rng(seed)
+    wf = WorkflowConfig(activities=tuple(f"a{i}" for i in range(activities)))
+    wq = WorkQueue(num_workers=num_workers,
+                   capacity=max(1 << 14, 2 * num_tasks * activities))
+    sup = Supervisor(wq, wf)
+    sup.seed(max(num_tasks // activities, 1), duration_s=mean_dur_s, rng=rng)
+    steer = SteeringEngine(wq)
+    rep = (DeltaReplicator(wq, sync_every=sync_every) if mode == "delta"
+           else FullCopyReplica(wq, sync_every=sync_every))
+
+    sync_wall_s = 0.0
+    lags_at_sync: List[int] = []
+    syncs = 0
+
+    def maybe_sync():
+        nonlocal sync_wall_s, syncs
+        if rep.lag() >= sync_every:
+            lags_at_sync.append(rep.lag())
+            t0 = time.perf_counter()
+            rep.sync()
+            sync_wall_s += time.perf_counter() - t0
+            syncs += 1
+
+    clock = 0.0
+    rounds = 0
+    while rounds < 10_000:
+        out = wq.claim_all(k=1, now=clock)
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if len(rows) == 0:
+            if sup.expand(now=clock) == 0:
+                break
+            rounds += 1
+            continue
+        # a slice of claims fails (retry path), the rest finish with
+        # provenance outputs — both ops ship through the log
+        n_fail = len(rows) // 8 if rounds % 5 == 2 else 0
+        if n_fail:
+            wq.fail(rows[:n_fail], now=clock + 0.5)
+            rows = rows[n_fail:]
+        if rounds == 3:
+            victim = num_workers - 1                 # node loss: its RUNNING
+            wid = wq.store.col("worker_id")[rows]    # claims requeue+rehash
+            wq.requeue_worker(victim)
+            rows = rows[wid != victim]
+        if len(rows):
+            wq.finish(rows, now=clock + 1.0,
+                      domain_out=rng.normal(0.5, 0.3, (len(rows), 3)))
+        if rounds == 4:
+            steer.q8_patch_ready(0, "in0", 9.5,      # user steering (Q8)
+                                 predicate=lambda v: v > 0.8)
+        if rounds == 6:
+            steer.prune("in1", 0.0, 0.02)            # data reduction
+        if rounds == 8 and num_workers > 2:
+            wq.resize(num_workers - 1)               # elastic re-hash
+        sup.expand(now=clock)
+        maybe_sync()
+        clock += mean_dur_s
+        rounds += 1
+
+    # final catch-up from whatever lag remains (crash-recovery cost)
+    final_lag = rep.lag()
+    t0 = time.perf_counter()
+    rep.sync()
+    catchup_s = time.perf_counter() - t0
+    syncs += 1
+
+    bytes_shipped = (rep.delta_bytes if mode == "delta" else rep.copy_bytes)
+    res: Dict = {
+        "mode": mode, "rounds": rounds, "store_rows": int(wq.store.n_rows),
+        "log_records": len(wq.log), "sync_count": syncs,
+        "sync_every": sync_every,
+        "mean_lag_at_sync": float(np.mean(lags_at_sync)) if lags_at_sync
+        else 0.0,
+        "final_lag": int(final_lag),
+        "sync_wall_s": sync_wall_s, "catchup_s": catchup_s,
+        "bytes_shipped": int(bytes_shipped),
+        "full_copy_row_bytes": int(wq.store.row_nbytes()
+                                   * wq.store.n_rows),
+        "tasks_finished": int(wq.counts()["FINISHED"]),
+    }
+    if mode == "delta":
+        # --- catch-up correctness: replica at v == primary snapshot at v ---
+        view = wq.store.snapshot_view()
+        rep.sync(upto_version=view.version)
+        cols_equal = all(
+            np.array_equal(view.col(n), rep.store.col(n), equal_nan=True)
+            for n in wq.store.cols)
+        sweep_primary = steer.run_all(clock, view=view)
+        sweep_replica = steer.run_all(clock, view=rep.snapshot_view())
+        res["cols_equal"] = bool(cols_equal)
+        res["sweep_equal"] = (_sweep_fingerprint(sweep_primary)
+                              == _sweep_fingerprint(sweep_replica))
+        res["replica_version"] = int(rep.store.version)
+        res["primary_version"] = int(view.version)
+    return res
 
 
 def run_centralized(num_workers: int, threads: int, num_tasks: int,

@@ -1,0 +1,96 @@
+"""Bench-trajectory gate: measure the headline perf numbers, record them in
+a committed ``BENCH_PR<n>.json`` at the repo root, and fail CI when the
+claim-kernel speedup regresses below the enforced floor.
+
+Each PR appends one snapshot file; the accumulated ``BENCH_*.json`` series
+IS the performance trajectory of the repo (CI prints it on every run, so a
+regression is visible as a bend in the series, not just a red X).
+
+Usage (what the CI job runs):
+    python scripts/bench_trajectory.py --pr 2 --min-claim-speedup 5
+
+The builder seeds the snapshot for the current PR by running the same
+command locally and committing the resulting BENCH_PR<n>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def measure(scale_claim: float, scale_replica: float) -> dict:
+    sys.path.insert(0, str(ROOT))
+    sys.path.insert(0, str(ROOT / "src"))
+    from benchmarks import experiments as E
+
+    claim_rows = E.exp_kernel_claim(scale_claim)
+    speedups = [r["speedup"] for r in claim_rows if r.get("impl") == "speedup"]
+    lag_rows = E.exp_replica_lag(scale_replica)   # raises on sweep mismatch
+    ratios = [r["bytes_ratio_full_over_delta"] for r in lag_rows
+              if r["mode"] == "speedup"]
+    return {
+        "claim_speedup_min": min(speedups),
+        "claim_speedup_max": max(speedups),
+        "replica_bytes_ratio_min": min(ratios),
+        "replica_sweep_equal": all(r.get("sweep_equal", True)
+                                   for r in lag_rows if r["mode"] == "delta"),
+        "claim_scale": scale_claim,
+        "replica_scale": scale_replica,
+    }
+
+
+def trajectory() -> list:
+    snaps = []
+    for p in sorted(ROOT.glob("BENCH_PR*.json")):
+        try:
+            snaps.append({"file": p.name, **json.loads(p.read_text())})
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warn: unreadable trajectory point {p.name}: {e}",
+                  file=sys.stderr)
+    return snaps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr", type=int, required=True,
+                    help="PR number — writes BENCH_PR<n>.json at the root")
+    ap.add_argument("--min-claim-speedup", type=float, default=5.0)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="claim-kernel scale (1.0 = the gated 100k-task run)")
+    ap.add_argument("--replica-scale", type=float, default=1.0)
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    snap = measure(args.scale, args.replica_scale)
+    snap["wall_s"] = round(time.perf_counter() - t0, 1)
+    out = ROOT / f"BENCH_PR{args.pr}.json"
+    out.write_text(json.dumps(snap, indent=1) + "\n")
+
+    print("bench trajectory (committed BENCH_PR*.json + this run):")
+    for pt in trajectory():
+        print(f"  {pt['file']}: claim_speedup_min={pt.get('claim_speedup_min')}"
+              f" replica_bytes_ratio_min={pt.get('replica_bytes_ratio_min')}")
+
+    failures = []
+    if snap["claim_speedup_min"] < args.min_claim_speedup:
+        failures.append(
+            f"claim host speedup {snap['claim_speedup_min']}x is below the "
+            f"{args.min_claim_speedup}x gate")
+    if not snap["replica_sweep_equal"]:
+        failures.append("replica sweep parity failed")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"OK: claim_speedup_min={snap['claim_speedup_min']}x "
+          f"(gate {args.min_claim_speedup}x), "
+          f"replica_bytes_ratio_min={snap['replica_bytes_ratio_min']}x")
+
+
+if __name__ == "__main__":
+    main()

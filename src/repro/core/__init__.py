@@ -6,3 +6,4 @@ from repro.core.store import ColumnStore  # noqa: F401
 from repro.core.workqueue import WorkQueue  # noqa: F401
 from repro.core.supervisor import SecondarySupervisor, Supervisor  # noqa: F401
 from repro.core.steering import SteeringEngine  # noqa: F401
+from repro.core.replication import DeltaReplicator, ReplicaSet  # noqa: F401

@@ -1,25 +1,241 @@
-"""Replication: one replica per partition (paper Section 3.2, replication
-factor 1) fed by the transaction log; partition recovery after data-node loss.
+"""Delta replication: replica catch-up by txn-log replay (paper Section 3.2).
+
+The paper keeps one replica per partition so a data-node crash loses nothing,
+and reports tens-of-MB metadata for 100k-task workloads — small enough to
+ship incrementally. :class:`DeltaReplicator` implements exactly that: the
+replica is a mutable store restored from a ``snapshot_view()`` once, then
+caught up by replaying ``TxnLog.tail_for_version`` records — apply-ops for
+every op the WorkQueue emits (insert/add_tasks, claim, claim_all, finish,
+fail, requeue_worker, resize, steering patches/prunes). ``sync`` cost is
+O(delta records), independent of store size; the old full-snapshot copy is
+preserved as :class:`FullCopyReplica`, the O(store) baseline the
+``e_replica_lag`` benchmark measures against.
+
+Because the store is append-only (rows are never deleted or compacted),
+primary row indices are valid verbatim on any replica that replayed the same
+log prefix — payload row indices ARE the replica addresses, no id remapping.
+Replayed record versions pin ``store.version`` to the primary's committed
+version, so a caught-up replica at version v is bit-identical to a primary
+``snapshot_view()`` at v (sweep parity is asserted in tests and the
+e_replica_lag experiment).
+
+The raw-pointer side table (``store.blobs``) is copied at restore time but
+NOT delta-shipped: like the paper, raw files stay out of the DBMS and out of
+the replication stream.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.core.schema import Status
 from repro.core.store import ColumnStore
+from repro.core.transactions import Txn
 from repro.core.workqueue import WorkQueue
 
 
-class ReplicaSet:
-    """Maintains a shadow snapshot + consumed-log offset per data node.
+# --------------------------------------------------------------- apply ops
+def _apply_insert(store: ColumnStore, p: Dict) -> None:
+    idx = store.insert(p["rows"])
+    # append-only determinism: replayed rows must land exactly where the
+    # primary put them, else every later payload's row indices are garbage
+    if len(idx) and int(idx[0]) != int(p["row_idx"][0]):
+        raise RuntimeError(
+            f"replica diverged: insert replayed at row {int(idx[0])}, "
+            f"primary committed at {int(p['row_idx'][0])}")
+    exp = p.get("expanded_rows")
+    if exp is not None and len(exp):
+        store.update(exp, expanded=1)
 
-    In the paper, MySQL Cluster keeps one replica per partition so a data
-    node crash loses nothing. Here the replica is a snapshot + txn-log tail:
-    ``sync`` consumes new log records cheaply (metadata sizes: the paper
-    measured tens of MB for 100k-task workloads), ``recover`` rebuilds a
-    consistent store after the primary is lost.
+
+def _apply_claim(store: ColumnStore, p: Dict) -> None:
+    w = int(p["worker"])
+    store.update(p["rows"], status=int(Status.RUNNING), start_time=p["now"],
+                 worker_id=w, core_id=w)
+
+
+def _apply_claim_all(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], status=int(Status.RUNNING), start_time=p["now"])
+
+
+def _apply_finish(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], status=int(Status.FINISHED), end_time=p["now"])
+    dom = p.get("domain_out")
+    if dom is not None:
+        store.update(p["rows"], **{f"out{i}": dom[:, i]
+                                   for i in range(dom.shape[1])})
+
+
+def _apply_fail(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], fail_trials=p["trials"])
+    if len(p["retry"]):
+        store.update(p["retry"], status=int(Status.READY))
+    if len(p["dead"]):
+        store.update(p["dead"], status=int(Status.FAILED),
+                     end_time=p["now"])
+
+
+def _apply_requeue(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], status=int(Status.READY),
+                 fail_trials=p["trials"], worker_id=p["new_worker"])
+
+
+def _apply_resize(store: ColumnStore, p: Dict) -> None:
+    if len(p["rows"]):
+        store.update(p["rows"], worker_id=p["assign"])
+
+
+def _apply_steer_patch(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], **{p["col"]: p["value"]})
+
+
+def _apply_steer_prune(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], status=int(Status.PRUNED))
+
+
+_APPLY = {
+    "insert": _apply_insert,
+    "claim": _apply_claim,
+    "claim_all": _apply_claim_all,
+    "finish": _apply_finish,
+    "fail": _apply_fail,
+    "requeue_worker": _apply_requeue,
+    "resize": _apply_resize,
+    "steer_patch": _apply_steer_patch,
+    "steer_prune": _apply_steer_prune,
+}
+
+
+def replay(store: ColumnStore, records: Iterable[Txn]) -> int:
+    """Apply a txn-log delta onto a (restored) store, in log order.
+
+    After each record the store's committed version is pinned to the
+    record's ``store_version`` — multi-write ops bump the replica's counter
+    differently than the primary's, and the pin re-aligns them.
+    Returns the number of records applied.
+    """
+    n = 0
+    for rec in records:
+        try:
+            op = _APPLY[rec.op]
+        except KeyError:
+            raise ValueError(f"no apply-op for txn log record {rec.op!r}; "
+                             "DeltaReplicator cannot replay it") from None
+        op(store, rec.payload)
+        store.set_version(rec.store_version)
+        n += 1
+    return n
+
+
+class DeltaReplicator:
+    """Replica catch-up by incremental txn-log replay.
+
+    Restores a mutable shadow store from one ``snapshot_view()`` at
+    construction, then every ``sync`` replays only the log tail appended
+    since — O(delta), not O(store). ``recover`` rebuilds a consistent
+    WorkQueue after primary loss (RUNNING tasks return to READY, their
+    workers are presumed dead — the same semantics as requeue).
+
+    Accounting for the e_replica_lag experiment: ``delta_bytes`` sums the
+    payload wire sizes actually shipped; ``full_copy_bytes`` sums what a
+    full-snapshot sync at each of the same sync points would have shipped
+    (n_rows x row_nbytes), the baseline cost this subsystem removes.
+    """
+
+    def __init__(self, wq: WorkQueue, sync_every: int = 64):
+        self.wq = wq
+        self.sync_every = sync_every
+        view = wq.store.snapshot_view()
+        self.store = ColumnStore.from_view(view, wq.store.schema)
+        self.store.blobs = dict(wq.store.blobs)     # side table: restore-only
+        self.offset = wq.log.index_after_version(view.version)
+        self.num_workers = wq.num_workers
+        self.records_applied = 0
+        self.sync_count = 0
+        self.delta_bytes = 0
+        self.full_copy_bytes = 0
+
+    # --------------------------------------------------------------- lag
+    def lag(self) -> int:
+        """Log records the replica is behind the primary."""
+        return len(self.wq.log) - self.offset
+
+    def maybe_sync(self) -> bool:
+        if self.lag() >= self.sync_every:
+            self.sync()
+            return True
+        return False
+
+    # -------------------------------------------------------------- sync
+    def sync(self, upto_version: Optional[int] = None) -> int:
+        """Catch the replica up by replaying the unconsumed log tail.
+
+        With ``upto_version`` the replay stops at that committed store
+        version (bisected, not scanned) — used to align the replica with a
+        specific primary ``snapshot_view()`` for version-exact reads.
+        Replication only moves FORWARD: an ``upto_version`` the replica has
+        already passed is a no-op (the consumed-log cursor and the replica
+        version never rewind — rewinding would re-apply records on the next
+        sync). Historical reads are ``SteeringEngine.at_version``'s job.
+        Returns the number of records applied.
+        """
+        log = self.wq.log
+        hi = len(log) if upto_version is None \
+            else max(log.index_after_version(upto_version), self.offset)
+        recs = log.records[self.offset:hi]
+        applied = replay(self.store, recs)
+        self.offset = hi
+        for r in recs:
+            if r.op == "resize":                # topology rides the log too
+                self.num_workers = int(r.payload["workers"])
+            self.delta_bytes += r.payload_nbytes()
+        if upto_version is not None and upto_version > self.store.version:
+            # caller vouches the log is complete through upto_version (all
+            # writes used the logged API); pin even if the last record
+            # committed earlier, so view.version == primary snapshot version
+            # (forward only — never rewind past already-applied state)
+            self.store.set_version(upto_version)
+        self.records_applied += applied
+        self.sync_count += 1
+        self.full_copy_bytes += self.store.n_rows * self.store.row_nbytes()
+        return applied
+
+    def snapshot_view(self):
+        """Immutable view of the replica at its caught-up version — what an
+        analyst thread hands to ``SteeringEngine.run_all`` so analytical
+        sweeps never touch the primary's arrays at all."""
+        return self.store.snapshot_view()
+
+    # ----------------------------------------------------------- recovery
+    def recover(self) -> WorkQueue:
+        """Rebuild a WorkQueue from the replica after primary loss: catch up
+        on the surviving log tail, return RUNNING tasks to READY (their
+        workers are presumed lost) — same semantics as requeue after node
+        failure. The replica store BECOMES the new primary store."""
+        self.sync()
+        store = self.store
+        st = store.col("status")
+        running = np.nonzero(st == int(Status.RUNNING))[0]
+        if len(running):
+            store.update(running, status=int(Status.READY))
+        wq = WorkQueue(self.num_workers, store=store)
+        wq._next_task_id = int(store.col("task_id").max() + 1) \
+            if store.n_rows else 0
+        return wq
+
+
+# Backwards-compatible name: the per-partition replica of PR 0/1, now
+# delta-fed. Callers that used ReplicaSet(wq).sync()/recover() keep working
+# with sync cost dropped from O(store) to O(delta).
+ReplicaSet = DeltaReplicator
+
+
+class FullCopyReplica:
+    """The pre-delta baseline: every sync deep-copies the whole store.
+
+    Kept ONLY as the comparison arm of the e_replica_lag experiment (sync
+    cost grows with store size, not delta size). Not for production use.
     """
 
     def __init__(self, wq: WorkQueue, sync_every: int = 64):
@@ -27,21 +243,28 @@ class ReplicaSet:
         self.sync_every = sync_every
         self.snapshot = wq.store.snapshot()
         self.offset = len(wq.log)
+        self.sync_count = 0
+        self.copy_bytes = 0
+
+    def lag(self) -> int:
+        return len(self.wq.log) - self.offset
 
     def maybe_sync(self) -> bool:
-        if len(self.wq.log) - self.offset >= self.sync_every:
+        if self.lag() >= self.sync_every:
             self.sync()
             return True
         return False
 
-    def sync(self) -> None:
+    def sync(self) -> int:
+        applied = self.lag()
         self.snapshot = self.wq.store.snapshot()
         self.offset = len(self.wq.log)
+        self.sync_count += 1
+        self.copy_bytes += (self.snapshot["n_rows"]
+                            * self.wq.store.row_nbytes())
+        return applied
 
     def recover(self) -> WorkQueue:
-        """Rebuild a WorkQueue from the replica snapshot. Tasks that were
-        RUNNING at snapshot time are returned to READY (their workers are
-        presumed lost) — same semantics as requeue after node failure."""
         store = ColumnStore.restore(self.snapshot)
         st = store.col("status")
         running = np.nonzero(st == int(Status.RUNNING))[0]

@@ -62,6 +62,12 @@ def wq_schema(num_domain_in: int = 3, num_domain_out: int = 3
         Column("end_time", np.dtype(np.float64), np.nan),
         Column("duration_est", np.dtype(np.float64), 0.0),  # simulated cost
         Column("parent_task", np.dtype(np.int64), -1),      # provenance edge
+        # dependency-expansion watermark: 1 once the supervisor has spawned
+        # this FINISHED task's children. Lives IN the relation (not in
+        # supervisor memory) so failover dedup survives data-node loss: a
+        # promoted supervisor on a recovered replica derives exactly which
+        # parents still need expansion from the store itself.
+        Column("expanded", np.dtype(np.int32), 0),
         Column("bytes_in", np.dtype(np.int64), 0),
         Column("bytes_out", np.dtype(np.int64), 0),
     ]

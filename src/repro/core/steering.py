@@ -59,6 +59,42 @@ class SteeringEngine:
         finally:
             self._tls.view = prev
 
+    # ---------------------------------------------------------- time travel
+    def at_version(self, version: int,
+                   base: Optional[SnapshotView] = None) -> SnapshotView:
+        """Pin a sweep to ANY historical committed version.
+
+        Rebuilds an immutable view of the store as of ``version`` by
+        snapshot-restore + bounded txn-log replay: start from ``base`` (any
+        snapshot at a version <= the target; an empty store when omitted) and
+        replay exactly the log records in ``(base.version, version]`` — the
+        two boundaries are bisected, the replay is O(delta). Pass the result
+        as ``run_all(now, view=...)`` (or to ``snapshot_scope``) to run the
+        whole Q1-Q7 sweep against history.
+
+        Requires every mutation since ``base`` to have gone through the
+        logged WorkQueue/steering API (true for the executor and simkit
+        paths); raw ``store.update`` calls are invisible to the log and
+        cannot be time-traveled.
+        """
+        from repro.core.replication import replay
+        live = self.wq.store
+        if version > live.version:
+            raise ValueError(f"version {version} is in the future "
+                             f"(live store is at {live.version})")
+        if base is not None and base.version > version:
+            raise ValueError(f"base snapshot v{base.version} is newer than "
+                             f"target v{version}")
+        if base is None:
+            store = type(live)(live.schema, capacity=1 << 10)
+            after = store.version            # 0: replay the log from genesis
+        else:
+            store = type(live).from_view(base, live.schema)
+            after = base.version
+        replay(store, self.wq.log.records_between(after, version))
+        store.set_version(version)
+        return store.snapshot_view()
+
     # Q1: per-node task status counts within the last minute
     def q1_recent_status_by_node(self, now: float, horizon: float = 60.0
                                  ) -> Dict[int, Dict[str, int]]:
@@ -176,7 +212,8 @@ class SteeringEngine:
                 store.update(idx, **{col: value})
                 self.wq.log.append("steer_patch",
                                    {"activity": activity, "col": col,
-                                    "n": len(idx)},
+                                    "n": len(idx), "rows": idx,
+                                    "value": float(value)},
                                    store_version=store.version)
         return len(idx)
 
@@ -191,7 +228,8 @@ class SteeringEngine:
             idx = np.nonzero(m)[0]
             if len(idx):
                 store.update(idx, status=int(Status.PRUNED))
-                self.wq.log.append("steer_prune", {"n": len(idx)},
+                self.wq.log.append("steer_prune",
+                                   {"n": len(idx), "rows": idx},
                                    store_version=store.version)
         return len(idx)
 

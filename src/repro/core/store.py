@@ -206,6 +206,39 @@ class ColumnStore:
             }
 
     @classmethod
+    def from_view(cls, view: SnapshotView,
+                  schema: Optional[List[Column]] = None) -> "ColumnStore":
+        """Materialize a MUTABLE store from an immutable snapshot view.
+
+        This is the replica-side restore step of delta catch-up: copy the
+        view's columns into a fresh store at the view's version, then replay
+        the txn-log tail (``replication.replay``) on top. O(rows x cols)
+        once at restore time; all subsequent syncs are O(delta).
+        """
+        st = cls(schema, capacity=max(1 << 10, int(view.n_rows * 2)))
+        n = view.n_rows
+        for name in st.cols:
+            st.cols[name][:n] = view.col(name)
+        st.n_rows = n
+        st.version = view.version
+        return st
+
+    def set_version(self, version: int) -> None:
+        """Pin the committed version after replaying a log record.
+
+        Replaying one record may issue several internal writes (each bumping
+        ``version`` by one); aligning to the record's ``store_version``
+        afterwards keeps replica versions bit-identical to the primary's, so
+        version-keyed equality checks (time travel, sweep parity) hold.
+        """
+        with self._mu:
+            self.version = int(version)
+
+    def row_nbytes(self) -> int:
+        """Bytes per row across all schema columns (full-copy cost unit)."""
+        return int(sum(c.dtype.itemsize for c in self.schema))
+
+    @classmethod
     def restore(cls, snap: Dict[str, Any],
                 schema: Optional[List[Column]] = None) -> "ColumnStore":
         st = cls(schema, capacity=max(1 << 10, int(snap["n_rows"] * 2)))

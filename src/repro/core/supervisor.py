@@ -50,23 +50,32 @@ class Supervisor:
         # scheduler behavior)
         dur = rng.normal(duration_s, 0.1 * duration_s, n_tasks).clip(
             duration_s * 0.5, duration_s * 2.0)
-        ids = self.wq.add_tasks(0, n_tasks, domain_in=dom, now=now)
-        self.wq.store.update(ids, duration_est=dur)
-        return ids
+        # durations go through add_tasks (one logged insert) so replicas
+        # replaying the txn log reproduce them exactly
+        return self.wq.add_tasks(0, n_tasks, domain_in=dom, now=now,
+                                 duration_est=dur)
 
     # ------------------------------------------------------------ expansion
     def expand(self, now: float = 0.0) -> int:
-        """Spawn activity-(k+1) tasks for newly FINISHED activity-k tasks."""
+        """Spawn activity-(k+1) tasks for newly FINISHED activity-k tasks.
+
+        Dedup is carried by the store's ``expanded`` column, flipped in the
+        SAME transaction/log record that inserts the children: correct under
+        out-of-order finishes (a task finishing after a higher row index has
+        already been expanded still gets its children), and a supervisor
+        promoted onto a recovered replica resumes exactly — no duplicate and
+        no lost expansions, because the watermark replicates with the data.
+        """
         if not self.alive:
             return 0
         n_new = 0
         store = self.wq.store
-        st = store.col("status")
-        act = store.col("activity_id")
         for k in range(self.workflow.num_activities - 1):
-            done = np.nonzero((st == int(Status.FINISHED)) & (act == k))[0]
-            cursor = self.state.expanded_upto.get(k, 0)
-            rows = done[cursor:]          # FINISHED rows not yet expanded
+            st = store.col("status")
+            act = store.col("activity_id")
+            exp = store.col("expanded")
+            rows = np.nonzero((st == int(Status.FINISHED)) & (act == k)
+                              & (exp == 0))[0]
             if len(rows) == 0:
                 continue
             parents = store.col("task_id")[rows]
@@ -79,10 +88,11 @@ class Supervisor:
                                     domain_in=np.repeat(dom, self.fanout, 0),
                                     parent_task=np.repeat(parents,
                                                           self.fanout),
-                                    now=now)
-            self.wq.store.update(ids, duration_est=np.repeat(dur,
-                                                             self.fanout))
-            self.state.expanded_upto[k] = cursor + len(rows)
+                                    duration_est=np.repeat(dur, self.fanout),
+                                    now=now,
+                                    mark_expanded=rows)
+            self.state.expanded_upto[k] = \
+                self.state.expanded_upto.get(k, 0) + len(rows)
             n_new += len(ids)
         return n_new
 
@@ -109,9 +119,17 @@ class SecondarySupervisor:
         self.shadow.expanded_upto = dict(self.primary.state.expanded_upto)
         self.shadow.log_offset = len(self.primary.wq.log)
 
-    def promote(self) -> Supervisor:
-        sup = Supervisor(self.primary.wq, self.primary.workflow,
-                         self.primary.fanout)
+    def promote(self, wq: Optional[WorkQueue] = None) -> Supervisor:
+        """Promote onto the primary's WQ, or — after data-node loss — onto a
+        WorkQueue recovered from a replica (``DeltaReplicator.recover()``).
+
+        The expansion watermark is the store's ``expanded`` column, so the
+        promoted supervisor needs no cursor handoff: it derives exactly
+        which FINISHED tasks still lack children from the recovered data
+        itself. The shadow cursor is kept as an observability counter.
+        """
+        target = wq if wq is not None else self.primary.wq
+        sup = Supervisor(target, self.primary.workflow, self.primary.fanout)
         sup.state = SupervisorState(
             expanded_upto=dict(self.shadow.expanded_upto),
             log_offset=self.shadow.log_offset,

@@ -10,9 +10,17 @@ consumer can align the log with a :class:`~repro.core.store.SnapshotView`:
 ``tail_for_version(v)`` is exactly the delta to replay ON TOP of a snapshot
 taken at version ``v`` — the foundation for txn-log replay onto snapshots and
 multi-host replica catch-up.
+
+Payloads are REPLAYABLE: each record carries the row indices and column
+values its op wrote (the store is append-only, so primary row indices are
+valid verbatim on any replica that replayed the same prefix). ``store_version``
+is monotone non-decreasing across records — commits serialize on the store
+lock and append inside it — so the version-aligned lookups bisect instead of
+scanning the whole log.
 """
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -28,24 +36,79 @@ class Txn:
     wall_time: float
     store_version: int = -1          # ColumnStore.version at commit time
 
+    def payload_nbytes(self) -> int:
+        """Wire size of this record's payload (what delta-shipping costs):
+        array bytes plus a small fixed charge per scalar field."""
+        total = 0
+        for v in self.payload.values():
+            if isinstance(v, np.ndarray):
+                total += v.nbytes
+            elif isinstance(v, dict):
+                total += sum(a.nbytes if isinstance(a, np.ndarray) else 8
+                             for a in v.values())
+            else:
+                total += 8
+        return total
+
 
 class TxnLog:
     def __init__(self):
         self.records: List[Txn] = []
+        # bisect in tail_for_version needs records sorted by store_version;
+        # WorkQueue appends inside the commit lock so this always holds, but
+        # a raw append() with an out-of-order version flips the flag and the
+        # lookups fall back to the filter scan instead of mis-bisecting
+        self._monotone = True
+        self._max_store_version = -(1 << 62)
 
     def append(self, op: str, payload: Dict[str, Any],
                store_version: int = -1) -> int:
         v = len(self.records)
         self.records.append(Txn(v, op, _freeze(payload), time.time(),
                                 store_version))
+        if store_version < self._max_store_version:
+            self._monotone = False
+        else:
+            self._max_store_version = store_version
         return v
 
     def tail(self, since: int) -> List[Txn]:
         return self.records[since:]
 
+    def index_after_version(self, store_version: int) -> int:
+        """First record index with ``store_version`` strictly greater than
+        the argument — O(log n) bisect over the monotone version column."""
+        if not self._monotone:
+            for i, r in enumerate(self.records):
+                if r.store_version > store_version:
+                    return i
+            return len(self.records)
+        return bisect.bisect_right(self.records, store_version,
+                                   key=lambda r: r.store_version)
+
     def tail_for_version(self, store_version: int) -> List[Txn]:
-        """Records committed strictly after a store version (snapshot delta)."""
-        return [r for r in self.records if r.store_version > store_version]
+        """Records committed strictly after a store version (snapshot delta).
+
+        O(log n) bisect to the start index — records are monotone in
+        ``store_version`` for any log fed through the WorkQueue (appends
+        happen inside the commit lock); a log made non-monotone by raw
+        appends falls back to the O(n) filter scan this replaces.
+        """
+        if not self._monotone:
+            return [r for r in self.records
+                    if r.store_version > store_version]
+        return self.records[self.index_after_version(store_version):]
+
+    def records_between(self, after_version: int, upto_version: int
+                        ) -> List[Txn]:
+        """Records with ``after_version < store_version <= upto_version`` —
+        the bounded delta between two snapshot versions (time travel)."""
+        if not self._monotone:
+            return [r for r in self.records
+                    if after_version < r.store_version <= upto_version]
+        lo = self.index_after_version(after_version)
+        hi = self.index_after_version(upto_version)
+        return self.records[lo:hi]
 
     def __len__(self) -> int:
         return len(self.records)
@@ -54,5 +117,12 @@ class TxnLog:
 def _freeze(payload: Dict[str, Any]) -> Dict[str, Any]:
     out = {}
     for k, v in payload.items():
-        out[k] = np.array(v, copy=True) if isinstance(v, np.ndarray) else v
+        if isinstance(v, np.ndarray):
+            out[k] = np.array(v, copy=True)
+        elif isinstance(v, dict):
+            out[k] = {kk: (np.array(vv, copy=True)
+                           if isinstance(vv, np.ndarray) else vv)
+                      for kk, vv in v.items()}
+        else:
+            out[k] = v
     return out

@@ -95,30 +95,43 @@ class WorkQueue:
     # -------------------------------------------------------------- inserts
     def add_tasks(self, activity_id: int, n: int, *,
                   status: Status = Status.READY,
-                  duration_est: float = 0.0,
+                  duration_est=0.0,
                   domain_in: Optional[np.ndarray] = None,
                   parent_task: Optional[np.ndarray] = None,
-                  now: float = 0.0) -> np.ndarray:
+                  now: float = 0.0,
+                  mark_expanded: Optional[np.ndarray] = None) -> np.ndarray:
+        """Insert ``n`` tasks; ``duration_est`` may be a scalar or per-task
+        array. ``mark_expanded`` flips the ``expanded`` flag of the given
+        parent rows in the SAME transaction / log record, so dependency
+        expansion (children inserted + parents marked) is atomic: a replica
+        can never observe the children without the dedup mark."""
         ids = np.arange(self._next_task_id, self._next_task_id + n,
                         dtype=np.int64)
         self._next_task_id += n
+        dur = np.asarray(duration_est, np.float64)
         rows = {
             "task_id": ids,
             "activity_id": np.full(n, activity_id, np.int32),
             "worker_id": assign_workers(ids, self.num_workers),
             "status": np.full(n, int(status), np.int32),
             "submit_time": np.full(n, now, np.float64),
-            "duration_est": (np.full(n, 0.0) if duration_est == 0.0
-                             else np.full(n, duration_est)),
+            "duration_est": (np.full(n, float(dur)) if dur.ndim == 0
+                             else dur.astype(np.float64, copy=False)),
         }
         if domain_in is not None:
             for i in range(domain_in.shape[1]):
                 rows[f"in{i}"] = domain_in[:, i]
         if parent_task is not None:
             rows["parent_task"] = parent_task
-        idx = self.store.insert(rows)
-        self._append_log("insert", {"activity_id": activity_id, "n": n,
-                                    "ids": ids})
+        with self.store.txn():
+            idx = self.store.insert(rows)
+            if mark_expanded is not None and len(mark_expanded):
+                self.store.update(np.asarray(mark_expanded), expanded=1)
+            payload = {"activity_id": activity_id, "n": n, "ids": ids,
+                       "rows": rows, "row_idx": idx}
+            if mark_expanded is not None and len(mark_expanded):
+                payload["expanded_rows"] = np.asarray(mark_expanded)
+            self._append_log("insert", payload)
         return ids
 
     # ---------------------------------------------------------------- claim
@@ -164,7 +177,7 @@ class WorkQueue:
                                   start_time=now, worker_id=worker_id,
                                   core_id=worker_id)
                 self._append_log("claim", {
-                    "worker": worker_id,
+                    "worker": worker_id, "rows": idx, "now": now,
                     "ids": self.store.col("task_id")[idx]})
         return idx
 
@@ -241,7 +254,8 @@ class WorkQueue:
             if len(rows_all):
                 self.store.update(rows_all, status=int(Status.RUNNING),
                                   start_time=now)
-                self._append_log("claim_all", {"n": len(rows_all)})
+                self._append_log("claim_all", {"n": len(rows_all),
+                                               "rows": rows_all, "now": now})
         return out
 
     def _primary_host(self, start: int, k: int
@@ -371,7 +385,8 @@ class WorkQueue:
         if len(all_idx):
             self.store.update(all_idx, status=int(Status.RUNNING),
                               start_time=now)
-            self._append_log("claim_all", {"n": len(all_idx)})
+            self._append_log("claim_all", {"n": len(all_idx),
+                                           "rows": all_idx, "now": now})
         self.invalidate_cursors()      # bypasses the cursor bookkeeping
         return out
 
@@ -382,11 +397,14 @@ class WorkQueue:
         with self.store.txn():
             upd = {"status": int(Status.FINISHED), "end_time": now}
             self.store.update(np.asarray(idx), **upd)
+            payload = {"ids": np.asarray(idx), "rows": np.asarray(idx),
+                       "now": now}
             if domain_out is not None:
                 cols = {f"out{i}": domain_out[:, i]
                         for i in range(domain_out.shape[1])}
                 self.store.update(np.asarray(idx), **cols)
-            self._append_log("finish", {"ids": np.asarray(idx)})
+                payload["domain_out"] = np.asarray(domain_out)
+            self._append_log("finish", payload)
 
     def fail(self, idx: np.ndarray, *, now: float = 0.0,
              max_trials: int = 3) -> None:
@@ -403,7 +421,9 @@ class WorkQueue:
             if len(dead):
                 self.store.update(dead, status=int(Status.FAILED),
                                   end_time=now)
-            self._append_log("fail", {"retry": retry, "dead": dead})
+            self._append_log("fail", {"retry": retry, "dead": dead,
+                                      "rows": idx, "trials": trials,
+                                      "now": now})
 
     def requeue_worker(self, worker_id: int, *, reassign: bool = True) -> int:
         """Node failure: return the dead worker's RUNNING tasks to READY and
@@ -422,8 +442,10 @@ class WorkQueue:
                     self.store.col("task_id")[idx] % len(live)]
                 self.store.update(idx, worker_id=new_w)
             self._lower_cursors(idx, self.store.col("worker_id")[idx])
-            self._append_log("requeue_worker", {"worker": worker_id,
-                                                "n": len(idx)})
+            self._append_log("requeue_worker", {
+                "worker": worker_id, "n": len(idx), "rows": idx,
+                "trials": trials,
+                "new_worker": self.store.col("worker_id")[idx]})
             return len(idx)
 
     # --------------------------------------------------------------- elastic
@@ -445,7 +467,8 @@ class WorkQueue:
             # READY orphan can exist right after a resize
             self._orphan_lo = self._NO_ORPHANS
             self._append_log("resize", {"workers": new_workers,
-                                        "moved": moved})
+                                        "moved": moved, "rows": idx,
+                                        "assign": new_assign})
             return moved
 
     # ------------------------------------------------------------ invariants

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.risers_workflow import WorkflowConfig
+from repro.core.replication import DeltaReplicator
 from repro.core.schema import Status
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import SecondarySupervisor, Supervisor
@@ -48,7 +49,8 @@ class TrainExecutor:
     def __init__(self, cfg: ModelConfig, *, num_workers: int = 1,
                  base_lr: float = 3e-4, data_cfg: Optional[DataConfig] = None,
                  checkpointer=None, checkpoint_every: int = 50,
-                 steer_every: int = 0, seed: int = 0):
+                 steer_every: int = 0, seed: int = 0,
+                 analyst: str = "snapshot"):
         self.cfg = cfg
         self.num_workers = num_workers
         self.base_lr = base_lr
@@ -60,6 +62,17 @@ class TrainExecutor:
         self.supervisor = Supervisor(self.wq, self.workflow)
         self.secondary = SecondarySupervisor(self.supervisor)
         self.steering = SteeringEngine(self.wq)
+        # analyst="snapshot": sweeps read COW snapshot views of the LIVE
+        # store (share its arrays until the next write). analyst="replica":
+        # sweeps read a delta-caught-up REPLICA store fed only by the txn
+        # log — the paper's "steering never touches the transactional hot
+        # path", made structural: the analyst thread never holds a single
+        # live array.
+        if analyst not in ("snapshot", "replica"):
+            raise ValueError(f"unknown analyst mode {analyst!r}")
+        self.analyst = analyst
+        self.replica = DeltaReplicator(self.wq) \
+            if analyst == "replica" else None
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.steer_every = steer_every
@@ -119,9 +132,17 @@ class TrainExecutor:
             self._steer_future = None
         if self.steer_every and self.step % self.steer_every == 0 \
                 and self._steer_future is None:
-            # snapshot NOW (consistent with this tick's commits); analyze it
-            # on the steering thread while the next ticks keep claiming
-            view = self.wq.store.snapshot_view()
+            if self.replica is not None:
+                # catch the replica up to this tick's commits (O(delta) log
+                # replay), then sweep ITS store — the live arrays are never
+                # handed to the analyst thread at all
+                self.replica.sync()
+                view = self.replica.snapshot_view()
+            else:
+                # snapshot NOW (consistent with this tick's commits);
+                # analyze it on the steering thread while the next ticks
+                # keep claiming
+                view = self.wq.store.snapshot_view()
             self._steer_future = self._steer_pool.submit(
                 self.steering.run_all, time.time(), view)
         return metrics_out

@@ -1,0 +1,329 @@
+"""Delta replication: O(delta) replica catch-up by txn-log replay, time-travel
+steering, and crash/failover end-to-end (primary data-node loss -> replica
+recover -> promoted supervisor resumes with no duplicate or lost tasks)."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.risers_workflow import WorkflowConfig
+from repro.core import Status, SteeringEngine, WorkQueue
+from repro.core.replication import DeltaReplicator, FullCopyReplica, \
+    ReplicaSet
+from repro.core.supervisor import SecondarySupervisor, Supervisor
+from repro.core.transactions import TxnLog
+
+
+def sweep_key(res):
+    return json.dumps(res, sort_keys=True, default=str)
+
+
+def run_mixed_workload(wq, steer, rng, rounds=12):
+    """Claims, finishes, fails, requeue, steering patch/prune, resize —
+    every replayable op kind the WorkQueue emits."""
+    for r in range(rounds):
+        out = wq.claim_all(k=1, now=float(r))
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if len(rows) == 0:
+            break
+        if r == 2:
+            wq.fail(rows[: max(len(rows) // 4, 1)], now=float(r) + 0.2)
+            rows = rows[max(len(rows) // 4, 1):]
+        if r == 3:
+            victim = wq.num_workers - 1
+            wid = wq.store.col("worker_id")[rows]
+            wq.requeue_worker(victim)
+            rows = rows[wid != victim]
+        if len(rows):
+            wq.finish(rows, now=float(r) + 0.9,
+                      domain_out=rng.normal(0.5, 0.3, (len(rows), 3)))
+        if r == 4:
+            steer.q8_patch_ready(0, "in0", 5.0, predicate=lambda v: v > 0.6)
+        if r == 5:
+            steer.prune("in1", 0.0, 0.05)
+        if r == 6 and wq.num_workers > 2:
+            wq.resize(wq.num_workers - 1)
+
+
+# --------------------------------------------------------------- catch-up
+def test_delta_sync_reproduces_primary_bit_exactly():
+    rng = np.random.default_rng(0)
+    wq = WorkQueue(num_workers=4)
+    rep = DeltaReplicator(wq, sync_every=8)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 64, domain_in=rng.uniform(0, 1, (64, 3)))
+    run_mixed_workload(wq, steer, rng)
+    rep.sync()
+    view = wq.store.snapshot_view()
+    for name in wq.store.cols:
+        assert np.array_equal(view.col(name), rep.store.col(name),
+                              equal_nan=True), name
+    assert rep.store.version == wq.store.version
+    assert rep.num_workers == wq.num_workers          # resize rode the log
+
+
+def test_sweep_on_replica_equals_sweep_on_primary_snapshot():
+    """The acceptance criterion: a steering sweep on a caught-up replica at
+    version v is identical to a sweep on a primary snapshot_view() at v."""
+    rng = np.random.default_rng(1)
+    wq = WorkQueue(num_workers=4)
+    rep = DeltaReplicator(wq)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 48, domain_in=rng.uniform(0, 1, (48, 3)))
+    run_mixed_workload(wq, steer, rng, rounds=6)
+    view = wq.store.snapshot_view()
+    run_mixed_workload(wq, steer, rng, rounds=3)   # primary races ahead ...
+    rep.sync(upto_version=view.version)            # ... replica pins to v
+    assert rep.store.version == view.version
+    a = steer.run_all(99.0, view=view)
+    b = steer.run_all(99.0, view=rep.snapshot_view())
+    assert sweep_key(a) == sweep_key(b)
+
+
+def test_sync_cost_is_proportional_to_delta_not_store():
+    """After catch-up on a large store, k more ops must sync as k records
+    (and ship ~k payloads), not re-copy the store."""
+    wq = WorkQueue(num_workers=4, capacity=1 << 15)
+    rep = DeltaReplicator(wq)
+    wq.add_tasks(0, 8000)
+    assert rep.sync() == 1                       # the one big insert record
+    big_bytes = rep.delta_bytes
+    for r in range(3):                           # 3 small claims
+        wq.claim(r % 4, k=2, now=float(r))
+    assert rep.lag() == 3
+    assert rep.sync() == 3
+    small_bytes = rep.delta_bytes - big_bytes
+    # 3 claim payloads are tiny vs the 8000-row insert — and vastly smaller
+    # than what a full-copy sync of the 8000-row store would ship
+    assert small_bytes < big_bytes / 50
+    assert small_bytes < wq.store.n_rows * wq.store.row_nbytes() / 100
+
+
+def test_sync_to_older_version_is_a_noop_never_rewinds():
+    """sync(upto_version=<older than the replica>) must not rewind the
+    consumed-log cursor or the replica version — a rewind would re-apply
+    records (insert replay then raises 'replica diverged') on later syncs."""
+    wq = WorkQueue(num_workers=2)
+    rep = DeltaReplicator(wq)
+    wq.add_tasks(0, 8)
+    old_view = wq.store.snapshot_view()
+    wq.add_tasks(0, 8)
+    assert rep.sync() == 2                        # fully caught up
+    v, off = rep.store.version, rep.offset
+    assert rep.sync(upto_version=old_view.version) == 0
+    assert (rep.store.version, rep.offset) == (v, off)
+    wq.claim(0, k=1, now=1.0)
+    assert rep.sync() == 1                        # and later syncs are clean
+    assert rep.store.version == wq.store.version
+
+
+def test_replicaset_alias_recover_semantics():
+    """PR-1 callers: ReplicaSet(wq).sync()/recover() keep working, RUNNING
+    tasks return to READY on recovery, fresh ids after restore."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    rep = ReplicaSet(wq, sync_every=1)
+    wq.claim(0, k=2)
+    rep.sync()
+    wq2 = rep.recover()
+    assert (wq2.store.col("status") != int(Status.RUNNING)).all()
+    assert wq2.counts()["READY"] == 8
+    assert wq2.add_tasks(0, 2).min() >= 8
+
+
+def test_unknown_op_refuses_to_replay():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 2)
+    rep = DeltaReplicator(wq)
+    wq.log.append("mystery_op", {"n": 1}, store_version=wq.store.version + 1)
+    with pytest.raises(ValueError, match="mystery_op"):
+        rep.sync()
+
+
+# ------------------------------------------------------------- time travel
+def test_at_version_matches_historical_snapshots():
+    rng = np.random.default_rng(2)
+    wq = WorkQueue(num_workers=3)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 30, domain_in=rng.uniform(0, 1, (30, 3)))
+    snaps = []
+    for r in range(5):
+        out = wq.claim_all(k=1, now=float(r))
+        rows = np.concatenate([v for v in out.values() if len(v)])
+        wq.finish(rows, now=float(r) + 0.5,
+                  domain_out=rng.normal(0.5, 0.3, (len(rows), 3)))
+        snaps.append(wq.store.snapshot_view())
+    for s in snaps:                              # replay from genesis
+        tv = steer.at_version(s.version)
+        assert sweep_key(steer.run_all(9.0, view=s)) \
+            == sweep_key(steer.run_all(9.0, view=tv))
+    tv = steer.at_version(snaps[3].version, base=snaps[0])  # bounded replay
+    assert sweep_key(steer.run_all(9.0, view=snaps[3])) \
+        == sweep_key(steer.run_all(9.0, view=tv))
+
+
+def test_at_version_rejects_future_and_inverted_bounds():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    steer = SteeringEngine(wq)
+    with pytest.raises(ValueError, match="future"):
+        steer.at_version(wq.store.version + 1)
+    early = wq.store.snapshot_view()
+    wq.claim_all(k=1, now=0.0)
+    late = wq.store.snapshot_view()
+    with pytest.raises(ValueError, match="newer"):
+        steer.at_version(early.version, base=late)
+
+
+# ------------------------------------------- tail_for_version bisect oracle
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 60), q=st.integers(-2, 70),
+       dup=st.booleans())
+def test_tail_for_version_bisect_matches_filter_oracle(n, q, dup):
+    log = TxnLog()
+    rng = np.random.default_rng(n * 1000 + q)
+    v = 0
+    for i in range(n):
+        # store versions are monotone but non-consecutive (multi-write ops
+        # skip versions) and possibly duplicated (dup: same-version batch)
+        v += 0 if (dup and i % 3 == 1) else int(rng.integers(1, 4))
+        log.append(f"op{i}", {"i": i}, store_version=v)
+    got = log.tail_for_version(q)
+    want = [r for r in log.records if r.store_version > q]
+    assert [r.version for r in got] == [r.version for r in want]
+    lo, hi = sorted((int(rng.integers(-1, v + 2)),
+                     int(rng.integers(-1, v + 2))))
+    got_rng = log.records_between(lo, hi)
+    want_rng = [r for r in log.records if lo < r.store_version <= hi]
+    assert [r.version for r in got_rng] == [r.version for r in want_rng]
+
+
+def test_tail_for_version_falls_back_on_non_monotone_log():
+    log = TxnLog()
+    log.append("a", {}, store_version=5)
+    log.append("b", {}, store_version=3)          # out of order: raw append
+    log.append("c", {}, store_version=7)
+    got = [r.op for r in log.tail_for_version(4)]
+    assert got == [r.op for r in log.records if r.store_version > 4]
+
+
+# -------------------------------------------------- crash/failover e2e
+def final_task_set(wq):
+    """Id-independent multiset fingerprint of the produced dataflow: per
+    activity, the sorted activity-0 ROOT ancestors of its tasks. Child task
+    ids interleave differently across crash timelines, but a correct
+    failover yields each root exactly once per activity — a duplicate
+    expansion doubles a root, a lost one drops it."""
+    tid = wq.store.col("task_id")
+    par = wq.store.col("parent_task")
+    act = wq.store.col("activity_id")
+    id2row = {int(t): i for i, t in enumerate(tid)}
+    out = {}
+    for a in np.unique(act):
+        roots = []
+        for r in np.nonzero(act == a)[0]:
+            rr = int(r)
+            while par[rr] >= 0:
+                rr = id2row[int(par[rr])]
+            roots.append(int(tid[rr]))
+        out[int(a)] = sorted(roots)
+    return out
+
+
+def drive(wq, sup, rng, *, crash_at=None, replica=None, secondary=None,
+          max_rounds=200):
+    """Run the workflow to completion; optionally kill the primary data node
+    + supervisor at round ``crash_at`` and continue on the recovered pair."""
+    r = 0
+    while r < max_rounds:
+        if crash_at is not None and r == crash_at:
+            # primary data node + supervisor lost: catch the replica up on
+            # the surviving log tail, promote the secondary onto it
+            sup.crash()
+            wq = replica.recover()
+            sup = secondary.promote(wq)
+            assert sup.state.generation == 1
+        out = wq.claim_all(k=1, now=float(r))
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if len(rows):
+            wq.finish(rows, now=float(r) + 0.9,
+                      domain_out=rng.normal(0.5, 0.3, (len(rows), 3)))
+        n_new = sup.expand(now=float(r))
+        if len(rows) == 0 and n_new == 0:
+            break
+        r += 1
+    return wq, sup
+
+
+def test_crash_failover_no_duplicate_no_lost_tasks():
+    """Primary loss mid-workflow: DeltaReplicator.recover + promoted
+    SecondarySupervisor must converge to exactly the no-crash task set."""
+    wf = WorkflowConfig(activities=("a0", "a1", "a2"))
+
+    def build():
+        rng = np.random.default_rng(7)
+        wq = WorkQueue(num_workers=3)
+        sup = Supervisor(wq, wf)
+        sup.seed(18, duration_s=1.0, rng=rng)
+        return rng, wq, sup
+
+    rng, wq, sup = build()
+    wq_ref, _ = drive(wq, sup, rng)                      # no-crash oracle
+    want = final_task_set(wq_ref)
+    assert wq_ref.counts()["FINISHED"] == 18 * 3
+
+    rng, wq, sup = build()
+    replica = DeltaReplicator(wq, sync_every=4)
+    secondary = SecondarySupervisor(sup)
+    # replica lags behind on purpose: recovery must drain the log tail
+    for _ in range(2):
+        replica.maybe_sync()
+    secondary.sync()
+    wq2, sup2 = drive(wq, sup, rng, crash_at=2, replica=replica,
+                      secondary=secondary)
+    assert wq2 is not wq                                  # promoted store
+    assert sup2.done()
+    got = final_task_set(wq2)
+    assert got == want                   # no duplicate, no lost expansions
+    assert wq2.counts()["FINISHED"] == 18 * 3
+
+
+def test_expansion_correct_under_out_of_order_finishes():
+    """A task finishing AFTER a higher row index was already expanded must
+    still get its children (the expanded column, not a row cursor, is the
+    dedup watermark)."""
+    wf = WorkflowConfig(activities=("a0", "a1"))
+    wq = WorkQueue(num_workers=2)
+    sup = Supervisor(wq, wf)
+    rng = np.random.default_rng(3)
+    sup.seed(4, duration_s=1.0, rng=rng)
+    wq.claim_all(k=4, now=0.0)
+    wq.finish(np.asarray([2, 3]), now=1.0, domain_out=np.ones((2, 3)))
+    assert sup.expand(now=1.0) == 2      # high rows expand first
+    wq.finish(np.asarray([0, 1]), now=2.0, domain_out=np.ones((2, 3)))
+    assert sup.expand(now=2.0) == 2      # low rows still expand
+    assert sup.expand(now=3.0) == 0      # and never twice
+    kids = wq.store.col("parent_task")[
+        wq.store.col("activity_id") == 1]
+    assert sorted(kids.tolist()) == [0, 1, 2, 3]
+
+
+# ------------------------------------------------- replica analyst parity
+def test_full_copy_baseline_ships_store_not_delta():
+    wq = WorkQueue(num_workers=2, capacity=1 << 14)
+    wq.add_tasks(0, 4000)
+    full = FullCopyReplica(wq, sync_every=1)
+    delta = DeltaReplicator(wq, sync_every=1)
+    delta.sync()
+    for r in range(4):
+        wq.claim(0, k=1, now=float(r))
+        full.sync()
+        delta.sync()
+    # four tiny claims: full-copy re-ships the 4000-row store every time
+    assert full.copy_bytes > 4 * 4000 * wq.store.row_nbytes() * 0.9
+    assert delta.delta_bytes - 4000 * wq.store.row_nbytes() < \
+        full.copy_bytes / 100
