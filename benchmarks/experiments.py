@@ -213,6 +213,11 @@ def exp_replica_lag(scale: float = 1.0) -> List[Dict]:
                 f"replica catch-up diverged from primary at W={workers}: "
                 f"cols_equal={d.get('cols_equal')} "
                 f"sweep_equal={d.get('sweep_equal')}")
+        if d.get("log_truncated_records", 0) <= 0:
+            raise AssertionError(
+                f"delta arm at W={workers} never truncated its txn log — "
+                "the parity check must run against a replica that synced "
+                "across at least one TxnLog.truncate")
         rows.append({
             "exp": "e_replica_lag", "mode": "speedup", "workers": workers,
             "bytes_ratio_full_over_delta": round(
@@ -223,6 +228,115 @@ def exp_replica_lag(scale: float = 1.0) -> List[Dict]:
                 d["bytes_shipped"] / max(d["log_records"], 1), 1),
         })
     return rows
+
+
+def exp_replay_throughput(scale: float = 1.0) -> List[Dict]:
+    """Txn-log replay: batched (segment-coalesced) vs record-at-a-time.
+
+    Builds a claims/finishes-heavy log — the op mix the paper's Experiment 6
+    shows dominating DBMS time — of ~100k records at scale 1.0 (one bulk
+    insert, one claim record per task, one finish record per task), then
+    replays it from genesis onto fresh stores with ``replay_reference`` (the
+    seed record-at-a-time oracle) and ``replay`` (consecutive same-op runs
+    coalesced into one vectorized update each). HARD-FAILS unless both
+    replicas are bit-identical to each other AND to the primary store —
+    the speedup only counts if the batched path is exactly equivalent.
+    """
+    from repro.core.replication import replay, replay_reference
+    from repro.core.store import ColumnStore
+    from repro.core.workqueue import WorkQueue
+
+    target = max(int(100_000 * scale), 2_000)
+    n_tasks = target // 2
+    W = 64
+    wq = WorkQueue(num_workers=W, capacity=2 * n_tasks)
+    wq.add_tasks(0, n_tasks)
+    claimed = [wq.claim(r % W, k=1, now=float(r)) for r in range(n_tasks)]
+    for r, rows in enumerate(claimed):
+        if len(rows):
+            wq.finish(rows, now=float(r) + 0.5,
+                      domain_out=np.full((len(rows), 3), 0.5))
+    records = wq.log.tail(0)
+
+    def replay_onto_fresh(fn):
+        store = ColumnStore(wq.store.schema, capacity=2 * n_tasks)
+        t0 = time.perf_counter()
+        n = fn(store, records)
+        return store, (time.perf_counter() - t0), n
+
+    ref_store, ref_s, n_ref = replay_onto_fresh(replay_reference)
+    bat_store, bat_s, n_bat = replay_onto_fresh(replay)
+    for name in wq.store.cols:
+        if not (np.array_equal(ref_store.col(name), bat_store.col(name),
+                               equal_nan=True)
+                and np.array_equal(wq.store.col(name), bat_store.col(name),
+                                   equal_nan=True)):
+            raise AssertionError(
+                f"batched replay diverged from the record-at-a-time oracle "
+                f"or the primary on column {name!r}")
+    if not (ref_store.version == bat_store.version == wq.store.version):
+        raise AssertionError("replayed store versions diverged")
+    speedup = ref_s / max(bat_s, 1e-9)
+    return [
+        {"exp": "replay_throughput", "impl": "record_at_a_time",
+         "records": len(records), "wall_ms": round(ref_s * 1e3, 2),
+         "us_per_record": round(ref_s / max(n_ref, 1) * 1e6, 3)},
+        {"exp": "replay_throughput", "impl": "batched",
+         "records": len(records), "wall_ms": round(bat_s * 1e3, 2),
+         "us_per_record": round(bat_s / max(n_bat, 1) * 1e6, 3)},
+        {"exp": "replay_throughput", "impl": "speedup",
+         "records": len(records), "speedup": round(speedup, 2),
+         "replica_equal": True},
+    ]
+
+
+def exp_steering_sweep(scale: float = 1.0) -> List[Dict]:
+    """Steering-sweep latency on a large mixed-status store.
+
+    One full Q1-Q7 ``run_all`` sweep against a pinned snapshot of a
+    ~100k-row store (scale 1.0) with FINISHED / RUNNING / READY / FAILED
+    rows across 3 activities — the loop-free segment-reduced sweep path
+    whose latency the bench-trajectory gate records and bounds.
+    """
+    from repro.core.steering import SteeringEngine
+    from repro.core.workqueue import WorkQueue
+
+    n = max(int(100_000 * scale), 2_000)
+    W = 39
+    per_act = n // 3
+    rng = np.random.default_rng(0)
+    wq = WorkQueue(num_workers=W, capacity=2 * n)
+    for a in range(3):
+        wq.add_tasks(a, per_act, domain_in=rng.uniform(0, 1, (per_act, 3)),
+                     parent_task=(None if a == 0 else
+                                  np.arange(per_act) + (a - 1) * per_act),
+                     now=0.0)
+    now = 0.0
+    for r in range(6):                 # claim/finish/fail churn -> mixed mix
+        out = wq.claim_all(k=max(per_act // (6 * W), 1), now=now)
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if not len(rows):
+            break
+        n_fail = len(rows) // 10
+        if n_fail:
+            wq.fail(rows[:n_fail], now=now + 0.2)
+        keep = rows[n_fail:]
+        fin = keep[: max(2 * len(keep) // 3, 1)]
+        if len(fin):
+            wq.finish(fin, now=now + 1.0,
+                      domain_out=rng.normal(0.5, 0.3, (len(fin), 3)))
+        now += 30.0                    # spreads start times across horizons
+    steer = SteeringEngine(wq)
+    steer.run_all(now)                 # warm-up (snapshot + caches)
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        steer.run_all(now)
+    ms = (time.perf_counter() - t0) / reps * 1e3
+    return [{"exp": "steering_sweep", "rows": int(wq.store.n_rows),
+             "workers": W, "ms_per_sweep": round(ms, 2),
+             "tasks_finished": int(wq.counts()["FINISHED"])}]
 
 
 def exp_kernel_claim(scale: float = 1.0) -> List[Dict]:

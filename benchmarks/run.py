@@ -44,6 +44,8 @@ def main() -> None:
             lambda: E.exp8_centralized_vs_distributed(args.scale),
         "e_replica_lag": lambda: E.exp_replica_lag(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
+        "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
+        "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
     }
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -104,6 +106,12 @@ def _headline(name: str, rows) -> str:
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)
             return f"host_speedup_min={spd}x;device_us_per_task_min={dev}"
+        if name == "replay_throughput":
+            spd = next(r["speedup"] for r in rows if r["impl"] == "speedup")
+            return f"batched_vs_record_speedup={spd}x"
+        if name == "steering_sweep":
+            return f"ms_per_sweep={rows[0]['ms_per_sweep']}@" \
+                   f"{rows[0]['rows']}rows"
     except Exception as e:  # noqa: BLE001
         return f"err:{e}"
     return ""

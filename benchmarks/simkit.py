@@ -202,6 +202,13 @@ def run_replica_lag(num_workers: int, num_tasks: int,
     comparable — delta cost tracks the log delta, full-copy cost tracks
     store size.
 
+    The drill also exercises log COMPACTION under replication: after every
+    sync the consumed prefix is truncated (``WorkQueue.compact_log`` — a
+    no-op in full mode, where no consumer registers), so the delta replica
+    provably syncs ACROSS at least one ``TxnLog.truncate`` and the final
+    bit-parity check certifies compaction never corrupts catch-up while
+    ``log_retained`` stays bounded by the sync cadence.
+
     For the delta arm the drill also PROVES catch-up correctness: at the
     end it pins a primary ``snapshot_view()``, syncs the replica to exactly
     that version, and checks (a) every store column is bit-identical and
@@ -222,14 +229,18 @@ def run_replica_lag(num_workers: int, num_tasks: int,
     lags_at_sync: List[int] = []
     syncs = 0
 
+    max_retained = 0
+
     def maybe_sync():
-        nonlocal sync_wall_s, syncs
+        nonlocal sync_wall_s, syncs, max_retained
         if rep.lag() >= sync_every:
             lags_at_sync.append(rep.lag())
             t0 = time.perf_counter()
             rep.sync()
             sync_wall_s += time.perf_counter() - t0
             syncs += 1
+            wq.compact_log()        # drop the prefix the replica just acked
+        max_retained = max(max_retained, wq.log.n_retained)
 
     clock = 0.0
     rounds = 0
@@ -274,6 +285,7 @@ def run_replica_lag(num_workers: int, num_tasks: int,
     rep.sync()
     catchup_s = time.perf_counter() - t0
     syncs += 1
+    wq.compact_log()   # delta mode: guarantees >=1 truncate before parity
 
     bytes_shipped = (rep.delta_bytes if mode == "delta" else rep.copy_bytes)
     res: Dict = {
@@ -288,9 +300,12 @@ def run_replica_lag(num_workers: int, num_tasks: int,
         "full_copy_row_bytes": int(wq.store.row_nbytes()
                                    * wq.store.n_rows),
         "tasks_finished": int(wq.counts()["FINISHED"]),
+        "log_truncated_records": int(wq.log.base),
+        "log_max_retained": int(max(max_retained, wq.log.n_retained)),
     }
     if mode == "delta":
-        # --- catch-up correctness: replica at v == primary snapshot at v ---
+        # --- catch-up correctness: replica at v == primary snapshot at v,
+        # with the replica having synced across the truncations above ---
         view = wq.store.snapshot_view()
         rep.sync(upto_version=view.version)
         cols_equal = all(

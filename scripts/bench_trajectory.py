@@ -1,13 +1,22 @@
 """Bench-trajectory gate: measure the headline perf numbers, record them in
-a committed ``BENCH_PR<n>.json`` at the repo root, and fail CI when the
-claim-kernel speedup regresses below the enforced floor.
+a committed ``BENCH_PR<n>.json`` at the repo root, and fail CI when any of
+the enforced floors regresses:
+
+- claim fast-path speedup (vectorized claim_all vs the seed loop, >=5x)
+- replica sweep parity after delta catch-up ACROSS a TxnLog.truncate
+- batched txn-log replay speedup vs record-at-a-time (>=10x on a
+  claims/finishes-heavy ~100k-record log), bit-parity enforced inside the
+  experiment itself
+- steering-sweep latency (full Q1-Q7 run_all on a ~100k-row snapshot,
+  recorded every PR and bounded by --max-sweep-ms)
 
 Each PR appends one snapshot file; the accumulated ``BENCH_*.json`` series
 IS the performance trajectory of the repo (CI prints it on every run, so a
 regression is visible as a bend in the series, not just a red X).
 
 Usage (what the CI job runs):
-    python scripts/bench_trajectory.py --pr 2 --min-claim-speedup 5
+    python scripts/bench_trajectory.py --pr 3 --min-claim-speedup 5 \
+        --min-replay-speedup 10
 
 The builder seeds the snapshot for the current PR by running the same
 command locally and committing the resulting BENCH_PR<n>.json.
@@ -30,15 +39,25 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
 
     claim_rows = E.exp_kernel_claim(scale_claim)
     speedups = [r["speedup"] for r in claim_rows if r.get("impl") == "speedup"]
+    replay_rows = E.exp_replay_throughput(scale_claim)  # raises on mismatch
+    replay = next(r for r in replay_rows if r["impl"] == "speedup")
+    sweep = E.exp_steering_sweep(scale_claim)[0]
     lag_rows = E.exp_replica_lag(scale_replica)   # raises on sweep mismatch
     ratios = [r["bytes_ratio_full_over_delta"] for r in lag_rows
               if r["mode"] == "speedup"]
+    truncs = [r.get("log_truncated_records", 0) for r in lag_rows
+              if r["mode"] == "delta"]
     return {
         "claim_speedup_min": min(speedups),
         "claim_speedup_max": max(speedups),
+        "replay_speedup": replay["speedup"],
+        "replay_records": replay["records"],
+        "sweep_ms": sweep["ms_per_sweep"],
+        "sweep_rows": sweep["rows"],
         "replica_bytes_ratio_min": min(ratios),
         "replica_sweep_equal": all(r.get("sweep_equal", True)
                                    for r in lag_rows if r["mode"] == "delta"),
+        "replica_log_truncated_min": min(truncs),
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -60,8 +79,15 @@ def main() -> None:
     ap.add_argument("--pr", type=int, required=True,
                     help="PR number — writes BENCH_PR<n>.json at the root")
     ap.add_argument("--min-claim-speedup", type=float, default=5.0)
+    ap.add_argument("--min-replay-speedup", type=float, default=10.0,
+                    help="floor for batched vs record-at-a-time txn-log "
+                         "replay on the claims/finishes-heavy log")
+    ap.add_argument("--max-sweep-ms", type=float, default=500.0,
+                    help="ceiling for one full Q1-Q7 steering sweep on the "
+                         "~100k-row store (0 records without enforcing)")
     ap.add_argument("--scale", type=float, default=1.0,
-                    help="claim-kernel scale (1.0 = the gated 100k-task run)")
+                    help="claim/replay/sweep scale (1.0 = the gated "
+                         "100k-task / 100k-record runs)")
     ap.add_argument("--replica-scale", type=float, default=1.0)
     args = ap.parse_args()
 
@@ -74,6 +100,8 @@ def main() -> None:
     print("bench trajectory (committed BENCH_PR*.json + this run):")
     for pt in trajectory():
         print(f"  {pt['file']}: claim_speedup_min={pt.get('claim_speedup_min')}"
+              f" replay_speedup={pt.get('replay_speedup')}"
+              f" sweep_ms={pt.get('sweep_ms')}"
               f" replica_bytes_ratio_min={pt.get('replica_bytes_ratio_min')}")
 
     failures = []
@@ -81,14 +109,29 @@ def main() -> None:
         failures.append(
             f"claim host speedup {snap['claim_speedup_min']}x is below the "
             f"{args.min_claim_speedup}x gate")
+    if snap["replay_speedup"] < args.min_replay_speedup:
+        failures.append(
+            f"batched replay speedup {snap['replay_speedup']}x is below the "
+            f"{args.min_replay_speedup}x gate "
+            f"({snap['replay_records']}-record log)")
+    if args.max_sweep_ms > 0 and snap["sweep_ms"] > args.max_sweep_ms:
+        failures.append(
+            f"steering sweep {snap['sweep_ms']}ms exceeds the "
+            f"{args.max_sweep_ms}ms gate at {snap['sweep_rows']} rows")
     if not snap["replica_sweep_equal"]:
         failures.append("replica sweep parity failed")
+    if snap["replica_log_truncated_min"] <= 0:
+        failures.append("replica parity ran without a TxnLog.truncate — "
+                        "the compaction path went unexercised")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)
         sys.exit(1)
     print(f"OK: claim_speedup_min={snap['claim_speedup_min']}x "
           f"(gate {args.min_claim_speedup}x), "
+          f"replay_speedup={snap['replay_speedup']}x "
+          f"(gate {args.min_replay_speedup}x), "
+          f"sweep_ms={snap['sweep_ms']} (gate {args.max_sweep_ms}ms), "
           f"replica_bytes_ratio_min={snap['replica_bytes_ratio_min']}x")
 
 

@@ -61,28 +61,35 @@ class Checkpointer:
     def save(self, step: int, state: Any, wq: Optional[WorkQueue] = None
              ) -> None:
         flat = _flatten(jax.device_get(state))       # consistent host cut
-        store_snap = None
+        store_snap, log_ack = None, None
         if wq is not None:
-            snap = wq.store.snapshot()
+            with wq.store.txn():     # snapshot + log length: ONE atomic cut
+                snap = wq.store.snapshot()           # (log appends happen
+                log_len = len(wq.log)                # inside this lock)
             store_snap = {"n_rows": snap["n_rows"], "version": snap["version"],
-                          "log_len": len(wq.log), "num_workers": wq.num_workers,
+                          "log_len": log_len, "num_workers": wq.num_workers,
                           **{f"col__{k}": v for k, v in snap["cols"].items()}}
+            # the checkpoint persists the store through log offset log_len;
+            # the consumer registration/ack happens only AFTER the atomic
+            # publish in _write — compaction must never be justified by a
+            # checkpoint that did not become durable
+            log_ack = (wq.log, log_len)
         if self._thread is not None:
             self._thread.join()                      # one write in flight
         if self.async_write:
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, store_snap),
+                target=self._write, args=(step, flat, store_snap, log_ack),
                 daemon=True)
             self._thread.start()
         else:
-            self._write(step, flat, store_snap)
+            self._write(step, flat, store_snap, log_ack)
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, flat, store_snap):
+    def _write(self, step: int, flat, store_snap, log_ack=None):
         tmp = self.root / f"step_{step:08d}.tmp"
         final = self.root / f"step_{step:08d}"
         if tmp.exists():
@@ -108,6 +115,10 @@ class Checkpointer:
         if final.exists():                           # re-save of same step
             shutil.rmtree(final)
         os.replace(tmp, final)                       # atomic publish
+        if log_ack is not None:                      # durable: safe to let
+            log, offset = log_ack                    # compaction pass us
+            if not log.ack("checkpointer", offset):  # first save registers
+                log.register_consumer("checkpointer", offset)
         self._gc()
 
     def _gc(self):
@@ -149,4 +160,12 @@ class Checkpointer:
             wq = WorkQueue(meta["num_workers"], store=store)
             wq._next_task_id = int(store.col("task_id").max() + 1) \
                 if store.n_rows else 0
+            # the pre-crash log records are gone: resume absolute offsets at
+            # the persisted log length and put the compaction horizon at the
+            # checkpoint version, so consumer offsets stay meaningful and
+            # time-travel below the checkpoint raises LogCompactedError
+            # instead of silently replaying an empty delta
+            if meta.get("log_len"):
+                wq.log.base = int(meta["log_len"])
+                wq.log.horizon_version = int(meta["version"])
         return step, state, wq

@@ -37,6 +37,19 @@ TRANSITIONS: Dict[int, Tuple[int, ...]] = {
 }
 
 
+def _transition_matrix() -> np.ndarray:
+    m = np.zeros((int(max(Status)) + 1, int(max(Status)) + 1), bool)
+    for frm, tos in TRANSITIONS.items():
+        for to in tos:
+            m[int(frm), int(to)] = True
+    return m
+
+
+# boolean legality matrix indexed [current_status, to]: lets the WorkQueue
+# validate a whole batch with one gather instead of a per-status Python loop
+LEGAL_TRANSITIONS = _transition_matrix()
+
+
 @dataclass(frozen=True)
 class Column:
     name: str

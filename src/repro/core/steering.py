@@ -75,9 +75,14 @@ class SteeringEngine:
         Requires every mutation since ``base`` to have gone through the
         logged WorkQueue/steering API (true for the executor and simkit
         paths); raw ``store.update`` calls are invisible to the log and
-        cannot be time-traveled.
+        cannot be time-traveled. Once ``TxnLog.truncate`` has compacted the
+        consumed prefix, genesis replay degrades to "since the last
+        checkpoint": pass a ``base`` snapshot at or after the log's
+        compaction horizon (e.g. the checkpointed store) or this raises
+        :class:`~repro.core.transactions.LogCompactedError`.
         """
         from repro.core.replication import replay
+        from repro.core.transactions import LogCompactedError
         live = self.wq.store
         if version > live.version:
             raise ValueError(f"version {version} is in the future "
@@ -91,25 +96,37 @@ class SteeringEngine:
         else:
             store = type(live).from_view(base, live.schema)
             after = base.version
-        replay(store, self.wq.log.records_between(after, version))
+        try:
+            delta = self.wq.log.records_between(after, version)
+        except LogCompactedError as e:
+            raise LogCompactedError(
+                f"cannot time-travel to v{version} from "
+                f"{'genesis' if base is None else f'base v{base.version}'}: "
+                f"{e}") from None
+        replay(store, delta)
         store.set_version(version)
         return store.snapshot_view()
 
     # Q1: per-node task status counts within the last minute
     def q1_recent_status_by_node(self, now: float, horizon: float = 60.0
                                  ) -> Dict[int, Dict[str, int]]:
+        """Loop-free sweep: one segment reduction (bincount over the worker
+        ids of the recent rows) per metric, instead of re-masking the whole
+        store once per distinct worker."""
         st, wid, t0 = self._cols("status", "worker_id", "start_time")
         recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
         fails = self._store().col("fail_trials")
-        out: Dict[int, Dict[str, int]] = {}
-        for w in np.unique(wid[recent]):
-            m = recent & (wid == w)
-            out[int(w)] = {
-                "started": int(m.sum()),
-                "finished": int((st[m] == int(Status.FINISHED)).sum()),
-                "failures": int(fails[m].sum()),
-            }
-        return out
+        rw = wid[recent]
+        if not rw.size:
+            return {}
+        workers, inv = np.unique(rw, return_inverse=True)
+        started = np.bincount(inv)
+        finished = np.bincount(
+            inv, weights=(st[recent] == int(Status.FINISHED)))
+        failures = np.bincount(inv, weights=fails[recent])
+        return {int(w): {"started": int(s), "finished": int(f),
+                         "failures": int(x)}
+                for w, s, f, x in zip(workers, started, finished, failures)}
 
     # Q2: per-task bytes consumed on a node, finished in last minute
     def q2_bytes_by_task(self, worker: int, now: float, horizon: float = 60.0
@@ -119,7 +136,10 @@ class SteeringEngine:
         m = (wid == worker) & (st == int(Status.FINISHED)) \
             & (te >= now - horizon)
         idx = np.nonzero(m)[0]
-        order = np.lexsort((st[idx], -bi[idx]))
+        # every selected row is FINISHED, so the old lexsort's status
+        # tie-break key was dead weight: plain stable argsort on -bytes_in
+        # yields the identical permutation with one key pass
+        order = np.argsort(-bi[idx], kind="stable")
         return idx[order]
 
     # Q3: node(s) with most aborted/failed in last minute
@@ -149,17 +169,30 @@ class SteeringEngine:
 
     # Q6: avg/max exec time per unfinished activity
     def q6_activity_times(self) -> Dict[int, Tuple[float, float]]:
+        """Loop-free sweep: per-activity mean via bincount segment sums and
+        per-activity max via sorted-segment ``maximum.reduceat`` — one sort
+        of the finished rows replaces a full-store re-mask per open
+        activity."""
         st, act, t0, t1 = self._cols("status", "activity_id", "start_time",
                                      "end_time")
         fin = st == int(Status.FINISHED)
         open_acts = np.unique(act[np.isin(
             st, [int(Status.READY), int(Status.RUNNING)])])
-        out = {}
-        for a in open_acts:
-            m = fin & (act == a)
-            if m.any():
-                d = t1[m] - t0[m]
-                out[int(a)] = (float(d.mean()), float(d.max()))
+        af = act[fin]
+        if not (af.size and open_acts.size):
+            return {}
+        d = t1[fin] - t0[fin]
+        order = np.argsort(af, kind="stable")
+        sa, sd = af[order], d[order]
+        starts = np.nonzero(np.r_[True, sa[1:] != sa[:-1]])[0]
+        seg_act = sa[starts]
+        seg_cnt = np.diff(np.r_[starts, sa.size])
+        seg_sum = np.add.reduceat(sd, starts)
+        seg_max = np.maximum.reduceat(sd, starts)
+        keep = np.isin(seg_act, open_acts)
+        out = {int(a): (float(s / c), float(m))
+               for a, s, c, m in zip(seg_act[keep], seg_sum[keep],
+                                     seg_cnt[keep], seg_max[keep])}
         return dict(sorted(out.items(), key=lambda kv: -kv[1][0]))
 
     # Q7: provenance join — outputs of activity A where activity B's f1 > thr
@@ -226,12 +259,9 @@ class SteeringEngine:
             m = np.isin(st, [int(Status.READY), int(Status.BLOCKED)]) \
                 & (vals >= lo) & (vals <= hi)
             idx = np.nonzero(m)[0]
-            if len(idx):
-                store.update(idx, status=int(Status.PRUNED))
-                self.wq.log.append("steer_prune",
-                                   {"n": len(idx), "rows": idx},
-                                   store_version=store.version)
-        return len(idx)
+            # the status write (and its ready-count + txn-log bookkeeping)
+            # belongs to the WorkQueue; steering only owns the predicate
+            return self.wq.prune(idx)
 
     # ------------------------------------------------------------ on-device
     def device_monitor(self) -> Dict[str, float]:

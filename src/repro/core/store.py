@@ -80,8 +80,13 @@ class SnapshotView:
         return self._id_index
 
     def stats(self) -> Dict[int, int]:
-        status = self.col("status")
-        return {int(s): int(np.sum(status == int(s))) for s in Status}
+        return _status_stats(self.col("status"))
+
+
+def _status_stats(status: np.ndarray) -> Dict[int, int]:
+    """One bincount instead of one full-column scan per Status member."""
+    c = np.bincount(status, minlength=int(max(Status)) + 1)
+    return {int(s): int(c[int(s)]) for s in Status}
 
 
 class ColumnStore:
@@ -251,6 +256,5 @@ class ColumnStore:
         return st
 
     # ------------------------------------------------------------- integrity
-    def stats(self) -> Dict[str, int]:
-        status = self.col("status")
-        return {int(s): int(np.sum(status == int(s))) for s in Status}
+    def stats(self) -> Dict[int, int]:
+        return _status_stats(self.col("status"))

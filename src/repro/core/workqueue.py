@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.partition import assign_workers, partition_sizes, rehash
-from repro.core.schema import Status, TRANSITIONS
+from repro.core.schema import LEGAL_TRANSITIONS, Status
 from repro.core.store import ColumnStore
 from repro.core.transactions import TxnLog
 
@@ -58,15 +58,67 @@ class WorkQueue:
         # No per-partition cursor covers those rows, so scans start at
         # min(cursor.min(), _orphan_lo) to keep them reachable by stealing.
         self._orphan_lo = self._NO_ORPHANS
+        # exact READY count per partition (index may exceed W for partitions
+        # orphaned by a shrink-resize; negative ids in a scalar bucket),
+        # maintained incrementally on every status transition: _steal picks
+        # its victim and claim_all bounds its block scan from these instead
+        # of rescanning the ready suffix.
+        self._ready = np.zeros(num_workers, np.int64)
+        self._ready_neg = 0
+        self._recount_ready()
 
     _NO_ORPHANS = np.iinfo(np.int64).max
 
     def _scan_start(self) -> int:
         return int(min(self._cursor.min(), self._orphan_lo))
 
+    # --------------------------------------------------------- ready counts
+    def _ready_delta(self, wids: np.ndarray, sign: int) -> None:
+        """Shift per-partition READY counts for rows entering (+1) or
+        leaving (-1) READY, keyed by their worker_id at that moment.
+        Negative partition ids go to a scalar bucket: no partition-private
+        claim or steal victim pick can reach them, but claim_all's steal
+        POOL can (matching claim_all_reference), so they must still count
+        toward total availability."""
+        wids = np.asarray(wids)
+        neg = int((wids < 0).sum())
+        if neg:
+            self._ready_neg += sign * neg
+        w = wids[wids >= 0].astype(np.int64, copy=False)
+        if not w.size:
+            return
+        hi = int(w.max()) + 1
+        if hi > self._ready.size:
+            self._ready = np.concatenate(
+                [self._ready, np.zeros(hi - self._ready.size, np.int64)])
+        self._ready[:hi] += sign * np.bincount(w, minlength=hi)
+
+    def _recount_ready(self) -> None:
+        """Rebuild the counts from the store (init / out-of-band mutations)."""
+        st = self.store.col("status")
+        rw = self.store.col("worker_id")[st == int(Status.READY)]
+        self._ready_neg = int((rw < 0).sum())
+        rw = rw[rw >= 0].astype(np.int64, copy=False)
+        size = max(self.num_workers, int(rw.max()) + 1 if rw.size else 0)
+        self._ready = np.bincount(rw, minlength=size) \
+            if rw.size else np.zeros(size, np.int64)
+
+    def ready_counts(self) -> np.ndarray:
+        """READY tasks per partition (copy; length num_workers)."""
+        out = np.zeros(self.num_workers, np.int64)
+        n = min(self.num_workers, self._ready.size)
+        out[:n] = self._ready[:n]
+        return out
+
     # ----------------------------------------------------------- txn helper
     def _append_log(self, op: str, payload: Dict) -> None:
         self.log.append(op, payload, store_version=self.store.version)
+
+    def compact_log(self) -> int:
+        """Drop the txn-log prefix every registered consumer (checkpointer,
+        replicas) has acked past — bounds long-run log memory. A no-op when
+        no consumer is registered (nothing is provably durable elsewhere)."""
+        return self.log.truncate()
 
     # -------------------------------------------------------------- cursors
     def invalidate_cursors(self, rows: Optional[np.ndarray] = None) -> None:
@@ -82,6 +134,7 @@ class WorkQueue:
         else:
             self._cursor[:] = np.minimum(self._cursor, int(np.min(rows)))
             self._orphan_lo = min(self._orphan_lo, int(np.min(rows)))
+        self._recount_ready()          # counts cannot be patched blind
 
     def _lower_cursors(self, rows: np.ndarray, wid: np.ndarray) -> None:
         """Per-partition lower bound for rows that just became READY."""
@@ -132,6 +185,8 @@ class WorkQueue:
             if mark_expanded is not None and len(mark_expanded):
                 payload["expanded_rows"] = np.asarray(mark_expanded)
             self._append_log("insert", payload)
+            if status == Status.READY:
+                self._ready_delta(rows["worker_id"], +1)
         return ids
 
     # ---------------------------------------------------------------- claim
@@ -173,6 +228,9 @@ class WorkQueue:
             if len(idx) == 0 and allow_steal:
                 idx = self._steal(worker_id, k)
             if len(idx):
+                # decrement against the partitions the rows LEAVE (stolen
+                # rows leave the victim's count) before wid is overwritten
+                self._ready_delta(wid[idx], -1)
                 self.store.update(idx, status=int(Status.RUNNING),
                                   start_time=now, worker_id=worker_id,
                                   core_id=worker_id)
@@ -182,22 +240,28 @@ class WorkQueue:
         return idx
 
     def _steal(self, thief: int, k: int) -> np.ndarray:
-        """Claim from the most-loaded sibling partition (one vectorized pass)."""
-        start = self._scan_start()
+        """Claim from the most-loaded sibling partition.
+
+        Victim pick is O(W) off the incrementally maintained ready counts —
+        no suffix scan, no bincount over READY rows. Only the VICTIM's
+        cursor suffix is then scanned to materialize its first k rows.
+        No [0, W) cap on the victim id: a partition orphaned by a
+        shrink-resize is a valid victim (counts extend past num_workers),
+        same as the seed loop — otherwise claim()-driven schedulers could
+        never rescue those rows.
+        """
+        if not self._ready.size:
+            return np.empty(0, np.int64)
+        victim = int(np.argmax(self._ready))
+        if self._ready[victim] == 0 or victim == thief:
+            return np.empty(0, np.int64)
+        n = self.store.n_rows
+        start = int(self._cursor[victim]) if victim < self.num_workers \
+            else min(int(self._orphan_lo), n)
         status = self.store.col("status")
         wid = self.store.col("worker_id")
-        ready = status[start:] == int(Status.READY)
-        if not ready.any():
-            return np.empty(0, np.int64)
-        rw = wid[start:][ready]
-        # no [0, W) cap: a partition orphaned by a shrink-resize is a valid
-        # victim (bincount extends past minlength), same as the seed loop —
-        # otherwise claim()-driven schedulers could never rescue those rows
-        sizes = np.bincount(rw[rw >= 0], minlength=self.num_workers)
-        victim = int(np.argmax(sizes))
-        if sizes[victim] == 0 or victim == thief:
-            return np.empty(0, np.int64)
-        idx = np.nonzero(ready & (wid[start:] == victim))[0][:k] + start
+        idx = np.nonzero((status[start:] == int(Status.READY))
+                         & (wid[start:] == victim))[0][:k] + start
         return idx
 
     def claim_all(self, k: int = 1, *, now: float = 0.0,
@@ -252,6 +316,9 @@ class WorkQueue:
             out = dict(enumerate(np.split(rows_all, np.cumsum(tot)[:-1])))
 
             if len(rows_all):
+                # claim_all never reassigns worker_id: decrement the counts
+                # of the partitions the rows leave (stolen rows included)
+                self._ready_delta(self.store.col("worker_id")[rows_all], -1)
                 self.store.update(rows_all, status=int(Status.RUNNING),
                                   start_time=now)
                 self._append_log("claim_all", {"n": len(rows_all),
@@ -277,7 +344,14 @@ class WorkQueue:
         n = self.store.n_rows
         status = self.store.col("status")
         wid = self.store.col("worker_id")
-        need = np.full(W, k, np.int64)
+        # quota capped by the maintained per-partition READY counts: a
+        # partition can never yield more than it has, so capping changes
+        # nothing about what gets claimed — but the scan loop now stops as
+        # soon as every AVAILABLE row is found instead of walking the whole
+        # suffix hunting for rows that do not exist (heavy-tail k>1 claims
+        # on dried-up partitions used to pay a full O(store) rescan here)
+        total_ready = int(self._ready.sum()) + self._ready_neg
+        need = np.minimum(np.full(W, k, np.int64), self.ready_counts())
         parts: List[np.ndarray] = []
         pos = start
         block = max(4096, 16 * k * W)
@@ -304,9 +378,11 @@ class WorkQueue:
         order = np.argsort(wid[rows], kind="stable")   # worker-major, row-
         claimed = rows[order]                          # sorted within worker
         n_claimed = np.bincount(wid[rows], minlength=W)
-        if need.any():
-            # full scan happened and deficits remain: pool = every READY row
-            # of the suffix not claimed above, ascending (reference order)
+        if (n_claimed < k).any() and total_ready > len(rows):
+            # deficits remain AND unclaimed READY rows exist (beyond-quota
+            # rows of loaded partitions, or orphaned partitions): only then
+            # is the steal pool materialized, via one suffix scan — when the
+            # counts show nothing is left the scan is skipped entirely
             left = np.zeros(n - start, bool)
             left[np.nonzero(status[start:] == int(Status.READY))[0]] = True
             left[rows - start] = False
@@ -418,6 +494,7 @@ class WorkQueue:
             if len(retry):
                 self.store.update(retry, status=int(Status.READY))
                 self._lower_cursors(retry, self.store.col("worker_id")[retry])
+                self._ready_delta(self.store.col("worker_id")[retry], +1)
             if len(dead):
                 self.store.update(dead, status=int(Status.FAILED),
                                   end_time=now)
@@ -442,11 +519,30 @@ class WorkQueue:
                     self.store.col("task_id")[idx] % len(live)]
                 self.store.update(idx, worker_id=new_w)
             self._lower_cursors(idx, self.store.col("worker_id")[idx])
+            self._ready_delta(self.store.col("worker_id")[idx], +1)
             self._append_log("requeue_worker", {
                 "worker": worker_id, "n": len(idx), "rows": idx,
                 "trials": trials,
                 "new_worker": self.store.col("worker_id")[idx]})
             return len(idx)
+
+    # ------------------------------------------------------------- steering
+    def prune(self, rows: np.ndarray) -> int:
+        """Steering's data reduction: mark the given READY/BLOCKED rows
+        PRUNED, with txn logging and ready-count maintenance. Lives here —
+        not in the steering engine — so every status write that touches the
+        incremental ready counts stays inside the WorkQueue."""
+        rows = np.asarray(rows)
+        if not len(rows):
+            return 0
+        with self.store.txn():
+            st = self.store.col("status")[rows]
+            was_ready = rows[st == int(Status.READY)]
+            if len(was_ready):
+                self._ready_delta(self.store.col("worker_id")[was_ready], -1)
+            self.store.update(rows, status=int(Status.PRUNED))
+            self._append_log("steer_prune", {"n": len(rows), "rows": rows})
+        return len(rows)
 
     # --------------------------------------------------------------- elastic
     def resize(self, new_workers: int) -> int:
@@ -466,6 +562,7 @@ class WorkQueue:
             # re-hash reassigned every READY/BLOCKED row into [0, W'), so no
             # READY orphan can exist right after a resize
             self._orphan_lo = self._NO_ORPHANS
+            self._recount_ready()        # same READY set, new partition keys
             self._append_log("resize", {"workers": new_workers,
                                         "moved": moved, "rows": idx,
                                         "assign": new_assign})
@@ -473,11 +570,15 @@ class WorkQueue:
 
     # ------------------------------------------------------------ invariants
     def _check_transition(self, idx: np.ndarray, to: Status) -> None:
+        """Vectorized legality check: one gather into the precomputed
+        boolean matrix (schema.LEGAL_TRANSITIONS) indexed by
+        (current_status, to) — no per-distinct-status Python loop."""
         cur = self.store.col("status")[np.asarray(idx)]
-        for c in np.unique(cur):
-            if to not in TRANSITIONS[Status(int(c))]:
-                raise ValueError(
-                    f"illegal transition {Status(int(c)).name} -> {to.name}")
+        bad = ~LEGAL_TRANSITIONS[cur, int(to)]
+        if bad.any():
+            c = int(cur[np.argmax(bad)])
+            raise ValueError(
+                f"illegal transition {Status(c).name} -> {to.name}")
 
     def check_invariants(self) -> None:
         """Property-test hooks: every task in exactly one status; RUNNING
@@ -499,8 +600,17 @@ class WorkQueue:
         in_range = (rw >= 0) & (rw < self.num_workers)
         assert not (ready_rows[in_range]
                     < self._cursor[rw[in_range]]).any()
+        # incremental ready counts must equal a fresh recount, exactly
+        want = np.bincount(rw[rw >= 0].astype(np.int64),
+                           minlength=self._ready.size) if rw.size \
+            else np.zeros(self._ready.size, np.int64)
+        if want.size < self._ready.size:
+            want = np.concatenate(
+                [want, np.zeros(self._ready.size - want.size, np.int64)])
+        assert np.array_equal(self._ready, want), (self._ready, want)
+        assert self._ready_neg == int((rw < 0).sum())
 
     # ------------------------------------------------------------- counters
     def counts(self) -> Dict[str, int]:
-        st = self.store.col("status")
-        return {s.name: int(np.sum(st == int(s))) for s in Status}
+        stats = self.store.stats()           # one bincount (_status_stats)
+        return {s.name: stats[int(s)] for s in Status}

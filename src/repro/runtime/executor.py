@@ -126,6 +126,7 @@ class TrainExecutor:
         if self.checkpointer and self.checkpoint_every \
                 and self.step and self.step % self.checkpoint_every == 0:
             self.checkpointer.save(self.step, self.state, self.wq)
+            self._maybe_compact_log()
         if self._steer_future is not None and self._steer_future.done():
             self.last_steering = self._steer_future.result()
             metrics_out["steering"] = self.last_steering
@@ -135,8 +136,11 @@ class TrainExecutor:
             if self.replica is not None:
                 # catch the replica up to this tick's commits (O(delta) log
                 # replay), then sweep ITS store — the live arrays are never
-                # handed to the analyst thread at all
+                # handed to the analyst thread at all. The sync acked the
+                # replica's consumer offset; compaction piggybacks when a
+                # durable checkpoint anchors history
                 self.replica.sync()
+                self._maybe_compact_log()
                 view = self.replica.snapshot_view()
             else:
                 # snapshot NOW (consistent with this tick's commits);
@@ -146,6 +150,16 @@ class TrainExecutor:
             self._steer_future = self._steer_pool.submit(
                 self.steering.run_all, time.time(), view)
         return metrics_out
+
+    def _maybe_compact_log(self) -> None:
+        """Compact the txn log only once a DURABLE checkpoint has acked an
+        offset: truncation is then 'since last checkpoint' by construction,
+        so `SteeringEngine.at_version` keeps its documented degradation path
+        (base snapshot = the checkpoint). Without a checkpoint consumer the
+        log is left whole — genesis time-travel stays available and memory
+        is bounded by the caller's own `wq.compact_log()` policy instead."""
+        if self.wq.log.has_consumer("checkpointer"):
+            self.wq.compact_log()
 
     def run(self, max_ticks: int = 10_000) -> List[Dict[str, float]]:
         for _ in range(max_ticks):
@@ -168,6 +182,8 @@ class TrainExecutor:
         """Release the steering analyst thread (ticks after close raise)."""
         self._drain_steering()
         self._steer_pool.shutdown(wait=True)
+        if self.replica is not None:
+            self.replica.close()     # stop pinning the log compaction floor
 
     def __del__(self):
         try:

@@ -1,0 +1,523 @@
+"""Batched (hot-plane) txn-log replay + consumer-offset-aware compaction.
+
+The two contracts of PR 3's tentpole:
+- batched replay of ANY op sequence is bit-identical to the record-at-a-time
+  oracle and to the primary store (property-tested over random workloads);
+- truncation never changes what a consumer observes: a replica syncing
+  across truncates stays bit-identical while retained-log memory is bounded,
+  and reads that would need dropped records fail loudly (LogCompactedError)
+  instead of replaying an incomplete delta.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Status, SteeringEngine, WorkQueue
+from repro.core.replication import DeltaReplicator, replay, replay_reference
+from repro.core.schema import LEGAL_TRANSITIONS, TRANSITIONS
+from repro.core.store import ColumnStore
+from repro.core.transactions import LogCompactedError, TxnLog
+
+
+def drive_random_ops(wq, steer, rng, rounds):
+    """Random mixed workload emitting every replayable op kind, with long
+    claim/finish runs AND interleaved stretches (both replay shapes)."""
+    for r in range(rounds):
+        kind = int(rng.integers(0, 10))
+        if kind < 4:                       # per-worker claim bursts
+            for _ in range(int(rng.integers(1, 6))):
+                w = int(rng.integers(0, wq.num_workers))
+                wq.claim(w, k=int(rng.integers(1, 3)), now=float(r),
+                         allow_steal=bool(rng.integers(0, 2)))
+        elif kind < 6:
+            wq.claim_all(k=int(rng.integers(1, 3)), now=float(r))
+        elif kind == 6:
+            running = np.nonzero(
+                wq.store.col("status") == int(Status.RUNNING))[0]
+            if len(running):
+                take = running[rng.random(len(running)) < 0.7]
+                if len(take):
+                    dom = rng.normal(0.5, 0.3, (len(take), 3)) \
+                        if rng.integers(0, 2) else None
+                    wq.finish(take, now=float(r) + 0.5, domain_out=dom)
+        elif kind == 7:
+            running = np.nonzero(
+                wq.store.col("status") == int(Status.RUNNING))[0]
+            if len(running):
+                wq.fail(running[: max(len(running) // 3, 1)],
+                        now=float(r) + 0.2)
+        elif kind == 8:
+            steer.q8_patch_ready(0, "in0", float(rng.uniform(0, 9)))
+            steer.prune("in1", 0.0, float(rng.uniform(0, 0.2)))
+        else:
+            if rng.integers(0, 2) and wq.num_workers > 2:
+                wq.resize(wq.num_workers - 1)
+            else:
+                wq.requeue_worker(int(rng.integers(0, wq.num_workers)))
+        if rng.integers(0, 4) == 0:
+            wq.add_tasks(int(rng.integers(0, 3)), int(rng.integers(1, 9)),
+                         now=float(r))
+
+
+def assert_stores_equal(a, b, cols):
+    for name in cols:
+        assert np.array_equal(a.col(name), b.col(name),
+                              equal_nan=True), name
+
+
+# ------------------------------------------------- batched replay oracle
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), workers=st.integers(1, 6),
+       rounds=st.integers(1, 24))
+def test_batched_replay_bit_identical_to_reference_and_primary(
+        seed, workers, rounds):
+    rng = np.random.default_rng(seed)
+    wq = WorkQueue(num_workers=workers)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, int(rng.integers(4, 32)),
+                 domain_in=None, now=0.0)
+    drive_random_ops(wq, steer, rng, rounds)
+    records = wq.log.tail(0)
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    n_ref = replay_reference(ref, records)
+    n_bat = replay(bat, records)
+    assert n_ref == n_bat == len(records)
+    assert_stores_equal(ref, bat, wq.store.cols)
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+    assert ref.version == bat.version == wq.store.version
+
+
+def test_batched_replay_claims_finishes_heavy_runs():
+    """The gate workload shape: long single-op runs replayed off the planes."""
+    W = 8
+    wq = WorkQueue(num_workers=W, capacity=1 << 12)
+    wq.add_tasks(0, 256)
+    claimed = [wq.claim(r % W, k=1, now=float(r)) for r in range(256)]
+    for r, rows in enumerate(claimed):
+        wq.finish(rows, now=float(r) + 0.5,
+                  domain_out=np.full((len(rows), 3), float(r)))
+    records = wq.log.tail(0)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 12)
+    replay(bat, records)
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+
+
+def test_batched_replay_mixed_dom_and_empty_finish_records():
+    """Mixed dom/no-dom and zero-row finish records must not fool the
+    all-single-row or all-carry-dom fast paths."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    r1 = wq.claim(0, k=2, now=0.0)
+    r2 = wq.claim(1, k=2, now=0.0)
+    wq.finish(np.empty(0, np.int64), now=0.5)              # zero rows
+    wq.finish(r1, now=1.0, domain_out=np.ones((2, 3)))     # with dom
+    wq.finish(r2, now=2.0)                                 # without dom
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay(bat, wq.log.tail(0))
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+
+
+def test_batched_replay_mixed_dom_widths_in_one_run():
+    """Consecutive finishes with DIFFERENT domain_out widths (legal via the
+    public API) keep their drifted dom rows out of the plane buffer AND
+    must not crash the dict fallback's concatenation — dom applies record
+    by record instead."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    r1 = wq.claim(0, k=2, now=0.0)
+    r2 = wq.claim(1, k=2, now=0.0)
+    wq.finish(r1, now=1.0, domain_out=np.full((2, 2), 0.25))   # width 2
+    wq.finish(r2, now=2.0, domain_out=np.full((2, 3), 0.75))   # width 3
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay_reference(ref, wq.log.tail(0))
+    replay(bat, wq.log.tail(0))
+    assert_stores_equal(ref, bat, wq.store.cols)
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+
+
+def test_width_drift_only_degrades_its_own_run():
+    """A width-drifted finish run must not poison the plane for LATER
+    width-consistent runs: both the drifted run (dict path) and the later
+    runs (plane path) replay bit-exactly."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 12)
+    ra = wq.claim(0, k=3, now=0.0)
+    rb = wq.claim(1, k=3, now=0.0)
+    wq.finish(ra[:1], now=1.0, domain_out=np.full((1, 3), 0.1))  # sets width
+    wq.finish(ra[1:2], now=1.5, domain_out=np.full((1, 2), 0.2))  # drift!
+    wq.claim(0, k=1, now=2.0)                      # breaks the finish run
+    rows_later = np.concatenate([ra[2:], rb])      # width-consistent run
+    for i, row in enumerate(rows_later):
+        wq.finish(np.asarray([row]), now=3.0 + i,
+                  domain_out=np.full((1, 3), float(i)))
+    fin_plane = wq.log._planes["finish"]
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay_reference(ref, wq.log.tail(0))
+    replay(bat, wq.log.tail(0))
+    assert_stores_equal(ref, bat, wq.store.cols)
+    # the later run's dom rows DID make it into the plane buffer
+    assert fin_plane.dom.n == 1 + len(rows_later)
+
+
+# ------------------------------------------------------------- compaction
+def test_replica_syncs_across_truncates_bit_identical_and_bounded():
+    rng = np.random.default_rng(3)
+    wq = WorkQueue(num_workers=4)
+    steer = SteeringEngine(wq)
+    rep = DeltaReplicator(wq, sync_every=6)
+    wq.add_tasks(0, 48, domain_in=rng.uniform(0, 1, (48, 3)))
+    max_retained, truncates = 0, 0
+    for r in range(30):
+        drive_random_ops(wq, steer, rng, 1)
+        if rep.maybe_sync():
+            truncates += 1 if wq.compact_log() else 0
+        max_retained = max(max_retained, wq.log.n_retained)
+    rep.sync()
+    wq.compact_log()
+    assert truncates >= 1                      # synced across >=1 truncate
+    assert wq.log.base > 0
+    # memory bound: the retained log never held the full history
+    assert max_retained < len(wq.log)
+    view = wq.store.snapshot_view()
+    assert rep.store.version == wq.store.version
+    assert_stores_equal(view, rep.store, wq.store.cols)
+    # and a full steering sweep agrees (the e_replica_lag hard-fail)
+    import json
+    a = json.dumps(steer.run_all(99.0, view=view), sort_keys=True,
+                   default=str)
+    b = json.dumps(steer.run_all(99.0, view=rep.snapshot_view()),
+                   sort_keys=True, default=str)
+    assert a == b
+
+
+def test_truncate_respects_slowest_consumer_and_explicit_bound():
+    log = TxnLog()
+    for i in range(10):
+        log.append("op", {"i": i}, store_version=i + 1)
+    assert log.truncate() == 0                 # no consumers: no-op
+    log.register_consumer("fast", 8)
+    log.register_consumer("slow", 3)
+    assert log.truncate() == 3                 # floor = slowest consumer
+    assert log.base == 3 and len(log) == 10 and log.n_retained == 7
+    assert log.truncate(upto=5) == 0           # never past the slowest ack
+    log.ack("slow", 6)
+    assert log.truncate(upto=5) == 2           # explicit bound caps below
+    assert log.base == 5
+    log.ack("slow", 99)                        # ack past the end is clamped
+    log.ack("fast", 99)
+    assert log.truncate() == 5
+    assert log.n_retained == 0 and len(log) == 10
+    assert log.append("op", {"i": 10}, store_version=11) == 10
+
+
+def test_compacted_reads_raise_instead_of_incomplete_delta():
+    log = TxnLog()
+    for i in range(8):
+        log.append("op", {"i": i}, store_version=2 * (i + 1))
+    log.register_consumer("c", 5)
+    assert log.truncate() == 5
+    assert log.horizon_version == 10           # max dropped store_version
+    with pytest.raises(LogCompactedError):
+        log.tail(0)
+    with pytest.raises(LogCompactedError):
+        log.tail_for_version(9)                # needs dropped record v10
+    with pytest.raises(LogCompactedError):
+        log.records_between(3, 14)
+    # at/after the horizon everything still works, absolutely indexed
+    assert [r.payload["i"] for r in log.tail_for_version(10)] == [5, 6, 7]
+    assert log.index_after_version(12) == 6
+    assert [r.payload["i"] for r in log.records_between(10, 14)] == [5, 6]
+
+
+def test_at_version_degrades_to_since_last_checkpoint():
+    wq = WorkQueue(num_workers=2)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 8)
+    checkpoint = wq.store.snapshot_view()      # "last checkpoint"
+    wq.claim_all(k=1, now=0.0)
+    mid = wq.store.snapshot_view()
+    wq.claim_all(k=1, now=1.0)
+    # everything up to the checkpoint is durably elsewhere: compact it
+    wq.log.register_consumer("ckpt",
+                             wq.log.index_after_version(checkpoint.version))
+    # genesis replay still fine pre-truncate
+    tv = steer.at_version(mid.version)
+    assert tv.version == mid.version
+    assert wq.log.truncate() > 0 or wq.log.base == 0
+    if wq.log.base:                            # compacted: genesis raises,
+        with pytest.raises(LogCompactedError):
+            steer.at_version(mid.version)
+    tv2 = steer.at_version(mid.version, base=checkpoint)   # base still works
+    assert np.array_equal(tv2.col("status"), mid.col("status"))
+
+
+def test_checkpointer_acks_log_consumer(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 6)
+    wq.claim_all(k=1, now=0.0)
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(1, {"x": np.zeros(2)}, wq)
+    assert wq.log.consumer_floor() == len(wq.log)
+    n = len(wq.log)
+    assert wq.compact_log() == n               # whole prefix checkpointed
+    wq.claim_all(k=1, now=1.0)                 # life goes on, absolute idx
+    assert len(wq.log) == n + 1 and wq.log.n_retained == 1
+
+
+def test_async_checkpointer_acks_only_after_durable_publish(tmp_path):
+    """The ack that licenses compaction must follow the atomic publish:
+    after wait() the consumer offset reflects the snapshot-time log length
+    (not the write-completion-time one)."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 6)
+    ck = Checkpointer(str(tmp_path), async_write=True)
+    n_at_save = len(wq.log)
+    ck.save(1, {"x": np.zeros(2)}, wq)
+    wq.claim_all(k=1, now=0.0)            # races the background write
+    ck.wait()
+    assert wq.log.consumer_floor() == n_at_save
+    assert ck.latest_step() == 1          # durable before the ack
+
+
+def test_records_held_across_truncate_replay_via_dict_fallback():
+    """Txn lists snapshotted BEFORE a truncate lose their plane entries —
+    replaying them afterwards must take the dict-payload path, never slice
+    the rebased plane buffers (silent wrong-rows corruption)."""
+    W = 2
+    wq = WorkQueue(num_workers=W)
+    wq.add_tasks(0, 8)
+    for r in range(8):
+        wq.claim(r % W, k=1, now=float(r))
+    held = wq.log.tail(0)                      # snapshot before compaction
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay_reference(ref, held)
+    wq.log.register_consumer("c", 5)
+    assert wq.log.truncate() == 5              # drops 4 of the held claims
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay(bat, held)                          # plane is rebased: fallback
+    assert_stores_equal(ref, bat, wq.store.cols)
+
+
+def test_malformed_raw_append_does_not_poison_the_plane():
+    """A raw append with a hot op name but a garbage field value must leave
+    the plane untouched (exception-safe add) so later legitimate runs still
+    replay bit-exactly off it."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    rows = wq.claim(0, k=4, now=0.0)
+    wq.finish(rows[:1], now=1.0)
+    bad = wq.log.append("finish", {"rows": np.array([9]), "now": "oops"},
+                        store_version=wq.store.version)
+    assert wq.log.records[-1].plane is None    # fell back to dict payload
+    for i in range(1, 4):                      # legitimate multi-record run
+        wq.finish(rows[i: i + 1], now=2.0 + i)
+    held = [r for r in wq.log.tail(0) if r.version != bad]
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay_reference(ref, held)
+    replay(bat, held)
+    assert_stores_equal(ref, bat, wq.store.cols)
+
+
+def test_zero_width_domain_out_does_not_misalign_the_plane():
+    """domain_out with zero columns is legal through the public finish API
+    and must neither crash plane accumulation nor shift later entries."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    rows = wq.claim(0, k=4, now=0.0)
+    wq.finish(rows[:1], now=1.0, domain_out=np.empty((1, 0)))
+    for i in range(1, 4):
+        wq.finish(rows[i: i + 1], now=2.0 + i,
+                  domain_out=np.full((1, 3), float(i)))
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    replay_reference(ref, wq.log.tail(0))
+    replay(bat, wq.log.tail(0))
+    assert_stores_equal(ref, bat, wq.store.cols)
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+
+
+def test_restore_resumes_absolute_log_offsets_and_horizon(tmp_path):
+    """A restored WorkQueue's log continues at the persisted absolute
+    offset with the compaction horizon at the checkpoint version, so
+    pre-crash time-travel raises instead of replaying an empty delta."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 6)
+    wq.claim_all(k=1, now=0.0)
+    old_version = wq.store.version - 1
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(1, {"x": np.zeros(2)}, wq)
+    n_log = len(wq.log)
+    _, _, wq2 = ck.restore({"x": np.zeros(2)})
+    assert len(wq2.log) == n_log and wq2.log.base == n_log
+    assert wq2.log.horizon_version == wq.store.version
+    with pytest.raises(LogCompactedError):
+        SteeringEngine(wq2).at_version(old_version)
+    base = wq2.store.snapshot_view()           # checkpoint-as-base works
+    wq2.claim_all(k=1, now=1.0)
+    tv = SteeringEngine(wq2).at_version(wq2.store.version, base=base)
+    assert np.array_equal(tv.col("status"), wq2.store.col("status"))
+
+
+def test_ack_does_not_resurrect_closed_consumer():
+    """sync() after close() must not re-pin the compaction floor."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    rep = DeltaReplicator(wq)
+    rep.sync()
+    rep.close()
+    wq.claim_all(k=1, now=0.0)
+    rep.sync()                                 # acks a released name: no-op
+    assert wq.log.consumer_floor() is None
+    assert wq.log.ack("never-registered", 3) is False
+
+
+def test_dropped_replica_unpins_compaction_floor():
+    """A DeltaReplicator that is garbage-collected without close() must not
+    pin the consumer floor forever (that would disable compaction and
+    reintroduce the unbounded-log memory leak)."""
+    import gc
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    rep = DeltaReplicator(wq)
+    rep.sync()
+    wq.claim_all(k=1, now=0.0)
+    assert wq.log.consumer_floor() is not None
+    del rep
+    gc.collect()
+    assert wq.log.consumer_floor() is None     # finalizer unregistered it
+    # and deterministic close() does the same without waiting for GC
+    rep2 = DeltaReplicator(wq)
+    rep2.sync()
+    rep2.close()
+    assert wq.log.consumer_floor() is None
+
+
+# ------------------------------------------------ satellites: fast checks
+def test_legality_matrix_matches_transitions():
+    for frm, tos in TRANSITIONS.items():
+        for to in Status:
+            assert LEGAL_TRANSITIONS[int(frm), int(to)] == (to in tos), \
+                (frm, to)
+
+
+def test_vectorized_check_transition_still_raises():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    rows = wq.claim(0, k=2)
+    wq.finish(rows, now=1.0)
+    with pytest.raises(ValueError, match="illegal transition"):
+        wq.finish(rows, now=2.0)
+
+
+def test_ready_counts_track_every_transition():
+    rng = np.random.default_rng(5)
+    wq = WorkQueue(num_workers=3)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 24, domain_in=rng.uniform(0, 1, (24, 3)))
+    drive_random_ops(wq, steer, rng, 12)
+    st_, wid = wq.store.col("status"), wq.store.col("worker_id")
+    rw = wid[st_ == int(Status.READY)]
+    want = np.bincount(rw[(rw >= 0) & (rw < wq.num_workers)],
+                       minlength=wq.num_workers)
+    assert np.array_equal(wq.ready_counts(), want)
+
+
+def test_steal_victim_from_counts_after_prune():
+    """Pruned rows must leave the counts, or _steal picks a dry victim."""
+    wq = WorkQueue(num_workers=3)
+    wq.add_tasks(0, 9, domain_in=np.stack(
+        [np.arange(9.0), np.arange(9.0), np.arange(9.0)], axis=1))
+    steer = SteeringEngine(wq)
+    # prune worker 0's partition rows (task_id % 3 == 0 -> in0 in {0,3,6})
+    n = steer.prune("in0", -0.5, 0.5)
+    assert n == 1
+    while len(wq.claim(1, k=1)):
+        pass                                   # drain worker 1's partition
+    stolen = wq.claim(1, k=1, allow_steal=True)
+    assert len(stolen) == 1
+    assert wq.store.col("task_id")[stolen[0]] % 3 != 1
+
+
+def test_claim_all_pool_rescues_negative_worker_id_rows():
+    """READY rows with worker_id < 0 (schema default, reachable via the
+    documented out-of-band mutation + invalidate_cursors flow) are outside
+    every partition, but claim_all's steal pool must still hand them out —
+    same as claim_all_reference and the pre-counts suffix-scan pool."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 2)
+    wq.store.update(np.asarray([0, 1]), worker_id=-1)
+    wq.invalidate_cursors(np.asarray([0, 1]))
+    ref = WorkQueue(num_workers=2, store=wq.store.from_view(
+        wq.store.snapshot_view(), wq.store.schema))
+    out = wq.claim_all(k=1, now=0.0)
+    want = ref.claim_all_reference(k=1, now=0.0)
+    assert {w: v.tolist() for w, v in out.items()} \
+        == {w: v.tolist() for w, v in want.items()}
+    assert sum(len(v) for v in out.values()) == 2   # both rows rescued
+
+
+def test_q1_q6_match_per_group_reference_loops():
+    rng = np.random.default_rng(7)
+    wq = WorkQueue(num_workers=5)
+    steer = SteeringEngine(wq)
+    for a in range(3):
+        wq.add_tasks(a, 20, now=0.0)
+    for r in range(4):
+        out = wq.claim_all(k=2, now=float(r) * 10)
+        rows = np.concatenate([v for v in out.values() if len(v)])
+        wq.fail(rows[: len(rows) // 5], now=float(r) * 10 + 1)
+        wq.finish(rows[len(rows) // 5:], now=float(r) * 10 + 2,
+                  domain_out=rng.normal(0.5, 0.3,
+                                        (len(rows) - len(rows) // 5, 3)))
+    now, horizon = 40.0, 25.0
+    st_, wid, t0 = (wq.store.col(c) for c in
+                    ("status", "worker_id", "start_time"))
+    fails = wq.store.col("fail_trials")
+    recent = (t0 >= now - horizon) & (st_ != int(Status.EMPTY))
+    want_q1 = {}
+    for w in np.unique(wid[recent]):           # the seed per-worker loop
+        m = recent & (wid == w)
+        want_q1[int(w)] = {
+            "started": int(m.sum()),
+            "finished": int((st_[m] == int(Status.FINISHED)).sum()),
+            "failures": int(fails[m].sum())}
+    assert steer.q1_recent_status_by_node(now, horizon) == want_q1
+
+    act, t1 = wq.store.col("activity_id"), wq.store.col("end_time")
+    fin = st_ == int(Status.FINISHED)
+    open_acts = np.unique(act[np.isin(
+        st_, [int(Status.READY), int(Status.RUNNING)])])
+    want_q6 = {}
+    for a in open_acts:                        # the seed per-activity loop
+        m = fin & (act == a)
+        if m.any():
+            d = (t1 - t0)[m]
+            want_q6[int(a)] = (float(d.mean()), float(d.max()))
+    got_q6 = steer.q6_activity_times()
+    assert set(got_q6) == set(want_q6)
+    for a in want_q6:
+        assert got_q6[a][0] == pytest.approx(want_q6[a][0], rel=1e-12)
+        assert got_q6[a][1] == want_q6[a][1]
+    assert list(got_q6) == sorted(got_q6, key=lambda a: -got_q6[a][0])
+
+
+def test_q2_plain_argsort_matches_lexsort():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 12)
+    rows = wq.claim(0, k=6)
+    wq.finish(rows, now=1.0)
+    bi = np.asarray([5, 3, 5, 9, 3, 7])        # ties exercise stability
+    wq.store.update(rows, bytes_in=bi)
+    steer = SteeringEngine(wq)
+    got = steer.q2_bytes_by_task(0, now=2.0, horizon=10.0)
+    st_ = wq.store.col("status")
+    want = rows[np.lexsort((st_[rows], -bi))]
+    assert np.array_equal(got, want)
