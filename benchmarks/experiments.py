@@ -15,7 +15,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.simkit import SimResult, run_centralized, run_distributed, \
-    run_replica_lag
+    run_replica_lag, run_wire_ship
 from repro.configs import risers_workflow as RW
 
 PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
@@ -220,13 +220,62 @@ def exp_replica_lag(scale: float = 1.0) -> List[Dict]:
                 "across at least one TxnLog.truncate")
         rows.append({
             "exp": "e_replica_lag", "mode": "speedup", "workers": workers,
+            # what would cross the NIC: the codec's exact encoded frame
+            # bytes, not the payload_nbytes estimate (kept alongside)
             "bytes_ratio_full_over_delta": round(
+                f["bytes_shipped"]
+                / max(d["encoded_bytes_shipped"], 1), 2),
+            "payload_ratio_full_over_delta": round(
                 f["bytes_shipped"] / max(d["bytes_shipped"], 1), 2),
+            "encoded_over_payload": d["encoded_over_payload"],
             "sync_wall_ratio": round(
                 f["sync_wall_s"] / max(d["sync_wall_s"], 1e-9), 2),
             "delta_bytes_per_record": round(
                 d["bytes_shipped"] / max(d["log_records"], 1), 1),
         })
+    return rows
+
+
+def exp_wire_ship(scale: float = 1.0) -> List[Dict]:
+    """Cross-process wire shipping: encode + ship + decode + replay for real.
+
+    Runs :func:`benchmarks.simkit.run_wire_ship`: two replica OS processes
+    fed wire-encoded txn-log deltas over a pipe (the drill replica at the
+    executor's sync cadence, the bulk replica in one sustained catch-up).
+    HARD-FAILS unless the drill replica (a) lives in a DIFFERENT process,
+    (b) synced across at least one ``TxnLog.truncate``, (c) produces a
+    Q1-Q7 sweep and store columns bit-identical to a primary
+    ``snapshot_view()`` at the same version, and (d) requeues every RUNNING
+    row on remote ``promote()`` — the acceptance criteria of the wire
+    layer, enforced on every run, not reported as soft metrics.
+    """
+    n = max(int(4_000 * scale), 200)
+    rows: List[Dict] = []
+    for workers in (8, 39):
+        r = run_wire_ship(workers, n, sync_every=64)
+        if r["remote_pid"] == r["parent_pid"]:
+            raise AssertionError(
+                f"wire ship at W={workers} never crossed a process "
+                f"boundary: replica pid == parent pid {r['parent_pid']}")
+        if not (r["cols_equal"] and r["sweep_equal"]
+                and r["bulk_cols_equal"]):
+            raise AssertionError(
+                f"shipped replica diverged from primary at W={workers}: "
+                f"cols_equal={r['cols_equal']} "
+                f"sweep_equal={r['sweep_equal']} "
+                f"bulk_cols_equal={r['bulk_cols_equal']}")
+        if r["log_truncated_records"] <= 0:
+            raise AssertionError(
+                f"wire drill at W={workers} never truncated its txn log — "
+                "the parity check must run against a replica that shipped "
+                "across at least one TxnLog.truncate")
+        if not r["recovered_no_running"]:
+            raise AssertionError(
+                f"remote promote() at W={workers} left RUNNING rows in the "
+                "recovered store")
+        rows.append({"exp": "e_wire_ship", "workers": workers, **{
+            k: (round(v, 5) if isinstance(v, float) else v)
+            for k, v in r.items()}})
     return rows
 
 
@@ -343,7 +392,9 @@ def exp_kernel_claim(scale: float = 1.0) -> List[Dict]:
     """Claim hot-path microbench, host AND device.
 
     Host: the vectorized claim_all fast-path vs the seed O(n·W) loop
-    (claim_all_reference) on a 100k-task store — the ≥5x speedup gate.
+    (claim_all_reference) on a 100k-task store — the ≥5x speedup gate —
+    at k=1 (the stable worker-sort path) AND k=4 (the segmented
+    argpartition path, the heavy-tail batched-claim shape).
     Device: the wq_claim op's jnp oracle latency vs store size (kernel
     semantics, what the TPU path executes).
     """
@@ -357,29 +408,33 @@ def exp_kernel_claim(scale: float = 1.0) -> List[Dict]:
     n_host = max(1024, int(100_000 * scale))
     rounds = 3
     host_us: Dict[tuple, float] = {}
-    for w in (64, 936):
-        for impl in ("seed_loop", "vectorized"):
-            wq = WorkQueue(num_workers=w, capacity=2 * n_host)
-            wq.add_tasks(0, n_host)
-            claim = (wq.claim_all_reference if impl == "seed_loop"
-                     else wq.claim_all)
-            t0 = time.perf_counter()
-            claimed = 0
-            for r in range(rounds):
-                out = claim(k=1, now=float(r))
-                claimed += sum(len(v) for v in out.values())
-            us = (time.perf_counter() - t0) / rounds * 1e6
-            host_us[(w, impl)] = us
-            rows.append({"exp": "claim_kernel", "path": "host", "impl": impl,
-                         "rows": n_host, "workers": w,
-                         "us_per_claim_all": round(us, 1),
-                         "tasks_claimed": claimed})
-    for w in (64, 936):
-        rows.append({
-            "exp": "claim_kernel", "path": "host", "impl": "speedup",
-            "rows": n_host, "workers": w,
-            "speedup": round(host_us[(w, "seed_loop")]
-                             / max(host_us[(w, "vectorized")], 1e-9), 2)})
+    for k in (1, 4):
+        for w in (64, 936):
+            for impl in ("seed_loop", "vectorized"):
+                wq = WorkQueue(num_workers=w, capacity=2 * n_host)
+                wq.add_tasks(0, n_host)
+                claim = (wq.claim_all_reference if impl == "seed_loop"
+                         else wq.claim_all)
+                t0 = time.perf_counter()
+                claimed = 0
+                for r in range(rounds):
+                    out = claim(k=k, now=float(r))
+                    claimed += sum(len(v) for v in out.values())
+                us = (time.perf_counter() - t0) / rounds * 1e6
+                host_us[(k, w, impl)] = us
+                rows.append({"exp": "claim_kernel", "path": "host",
+                             "impl": impl, "k": k,
+                             "rows": n_host, "workers": w,
+                             "us_per_claim_all": round(us, 1),
+                             "tasks_claimed": claimed})
+    for k in (1, 4):
+        for w in (64, 936):
+            rows.append({
+                "exp": "claim_kernel", "path": "host", "impl": "speedup",
+                "k": k, "rows": n_host, "workers": w,
+                "speedup": round(host_us[(k, w, "seed_loop")]
+                                 / max(host_us[(k, w, "vectorized")],
+                                       1e-9), 2)})
 
     # ---- device path: wq_claim op latency vs store size ------------------
     rng = np.random.default_rng(0)

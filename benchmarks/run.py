@@ -43,6 +43,7 @@ def main() -> None:
         "e8_centralized_vs_distributed":
             lambda: E.exp8_centralized_vs_distributed(args.scale),
         "e_replica_lag": lambda: E.exp_replica_lag(args.scale),
+        "e_wire_ship": lambda: E.exp_wire_ship(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
         "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
         "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
@@ -102,6 +103,12 @@ def _headline(name: str, rows) -> str:
             eq = all(r.get("sweep_equal", True) for r in rows
                      if r["mode"] == "delta")
             return f"full/delta_bytes_min={br}x;sweep_equal={eq}"
+        if name == "e_wire_ship":
+            mbps = min(r["ship_mbps_bulk"] for r in rows)
+            ratio = max(r["encoded_bytes_ratio"] for r in rows)
+            eq = all(r["cols_equal"] and r["sweep_equal"] for r in rows)
+            return (f"ship_mbps_bulk_min={mbps};encoded/payload={ratio};"
+                    f"remote_parity={eq}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

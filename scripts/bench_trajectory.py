@@ -2,13 +2,19 @@
 a committed ``BENCH_PR<n>.json`` at the repo root, and fail CI when any of
 the enforced floors regresses:
 
-- claim fast-path speedup (vectorized claim_all vs the seed loop, >=5x)
+- claim fast-path speedup (vectorized claim_all vs the seed loop, >=5x, at
+  k=1 AND at k=4 — the segmented-argpartition batched-claim path)
 - replica sweep parity after delta catch-up ACROSS a TxnLog.truncate
 - batched txn-log replay speedup vs record-at-a-time (>=10x on a
   claims/finishes-heavy ~100k-record log), bit-parity enforced inside the
   experiment itself
 - steering-sweep latency (full Q1-Q7 run_all on a ~100k-row snapshot,
   recorded every PR and bounded by --max-sweep-ms)
+- cross-process wire shipping (e_wire_ship): a ShippedDeltaReplicator in a
+  SEPARATE OS process, synced across a TxnLog.truncate, must sweep
+  bit-identically to a primary snapshot (hard-checked inside the
+  experiment) and sustain --min-ship-mbps of encode+ship+replay throughput
+  on the bulk catch-up; the encoded-bytes/payload ratio is recorded
 
 Each PR appends one snapshot file; the accumulated ``BENCH_*.json`` series
 IS the performance trajectory of the repo (CI prints it on every run, so a
@@ -38,7 +44,10 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
     from benchmarks import experiments as E
 
     claim_rows = E.exp_kernel_claim(scale_claim)
-    speedups = [r["speedup"] for r in claim_rows if r.get("impl") == "speedup"]
+    sp_k1 = [r["speedup"] for r in claim_rows
+             if r.get("impl") == "speedup" and r.get("k", 1) == 1]
+    sp_kn = [r["speedup"] for r in claim_rows
+             if r.get("impl") == "speedup" and r.get("k", 1) > 1]
     replay_rows = E.exp_replay_throughput(scale_claim)  # raises on mismatch
     replay = next(r for r in replay_rows if r["impl"] == "speedup")
     sweep = E.exp_steering_sweep(scale_claim)[0]
@@ -47,9 +56,14 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
               if r["mode"] == "speedup"]
     truncs = [r.get("log_truncated_records", 0) for r in lag_rows
               if r["mode"] == "delta"]
+    # raises unless the shipped replica lives in another process, synced
+    # across a truncate, and swept bit-identically to the primary
+    wire_rows = E.exp_wire_ship(scale_replica)
     return {
-        "claim_speedup_min": min(speedups),
-        "claim_speedup_max": max(speedups),
+        "claim_speedup_min": min(sp_k1),
+        "claim_speedup_max": max(sp_k1),
+        "claim_k4_speedup_min": min(sp_kn),
+        "claim_k4_speedup_max": max(sp_kn),
         "replay_speedup": replay["speedup"],
         "replay_records": replay["records"],
         "sweep_ms": sweep["ms_per_sweep"],
@@ -58,6 +72,14 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
         "replica_sweep_equal": all(r.get("sweep_equal", True)
                                    for r in lag_rows if r["mode"] == "delta"),
         "replica_log_truncated_min": min(truncs),
+        "ship_mbps": min(r["ship_mbps_bulk"] for r in wire_rows),
+        "ship_mbps_incremental": min(r["ship_mbps"] for r in wire_rows),
+        "encoded_bytes_ratio": max(r["encoded_bytes_ratio"]
+                                   for r in wire_rows),
+        "wire_records_shipped": sum(r["records_shipped"] + r["bulk_records"]
+                                    for r in wire_rows),
+        "wire_remote_parity": all(r["cols_equal"] and r["sweep_equal"]
+                                  for r in wire_rows),
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -85,6 +107,10 @@ def main() -> None:
     ap.add_argument("--max-sweep-ms", type=float, default=500.0,
                     help="ceiling for one full Q1-Q7 steering sweep on the "
                          "~100k-row store (0 records without enforcing)")
+    ap.add_argument("--min-ship-mbps", type=float, default=5.0,
+                    help="floor for the cross-process bulk catch-up's "
+                         "encode+ship+replay throughput (e_wire_ship; "
+                         "0 records without enforcing)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="claim/replay/sweep scale (1.0 = the gated "
                          "100k-task / 100k-record runs)")
@@ -100,15 +126,28 @@ def main() -> None:
     print("bench trajectory (committed BENCH_PR*.json + this run):")
     for pt in trajectory():
         print(f"  {pt['file']}: claim_speedup_min={pt.get('claim_speedup_min')}"
+              f" claim_k4={pt.get('claim_k4_speedup_min')}"
               f" replay_speedup={pt.get('replay_speedup')}"
               f" sweep_ms={pt.get('sweep_ms')}"
-              f" replica_bytes_ratio_min={pt.get('replica_bytes_ratio_min')}")
+              f" replica_bytes_ratio_min={pt.get('replica_bytes_ratio_min')}"
+              f" ship_mbps={pt.get('ship_mbps')}")
 
     failures = []
     if snap["claim_speedup_min"] < args.min_claim_speedup:
         failures.append(
             f"claim host speedup {snap['claim_speedup_min']}x is below the "
             f"{args.min_claim_speedup}x gate")
+    if snap["claim_k4_speedup_min"] < args.min_claim_speedup:
+        failures.append(
+            f"k=4 claim host speedup {snap['claim_k4_speedup_min']}x "
+            f"(segmented argpartition) is below the "
+            f"{args.min_claim_speedup}x gate")
+    if args.min_ship_mbps > 0 and snap["ship_mbps"] < args.min_ship_mbps:
+        failures.append(
+            f"cross-process ship throughput {snap['ship_mbps']} MB/s is "
+            f"below the {args.min_ship_mbps} MB/s gate")
+    if not snap["wire_remote_parity"]:
+        failures.append("shipped-replica remote parity failed")
     if snap["replay_speedup"] < args.min_replay_speedup:
         failures.append(
             f"batched replay speedup {snap['replay_speedup']}x is below the "
@@ -128,11 +167,14 @@ def main() -> None:
             print(f"FAIL: {f}", file=sys.stderr)
         sys.exit(1)
     print(f"OK: claim_speedup_min={snap['claim_speedup_min']}x "
+          f"k4={snap['claim_k4_speedup_min']}x "
           f"(gate {args.min_claim_speedup}x), "
           f"replay_speedup={snap['replay_speedup']}x "
           f"(gate {args.min_replay_speedup}x), "
           f"sweep_ms={snap['sweep_ms']} (gate {args.max_sweep_ms}ms), "
-          f"replica_bytes_ratio_min={snap['replica_bytes_ratio_min']}x")
+          f"replica_bytes_ratio_min={snap['replica_bytes_ratio_min']}x, "
+          f"ship_mbps={snap['ship_mbps']} "
+          f"(gate {args.min_ship_mbps} MB/s)")
 
 
 if __name__ == "__main__":

@@ -142,7 +142,18 @@ in-memory column-store ops — i.e., what the TPU adaptation actually costs.
         "e7_steering_overhead": "E7 steering overhead (Fig 13): paper <5%",
         "e8_centralized_vs_distributed": "E8 Chiron vs d-Chiron (Fig 14):"
                                          " paper ~91% faster (~11x)",
-        "claim_kernel": "On-device claim op latency (wq_claim semantics)",
+        "claim_kernel": "Claim fast-path (host k=1 sort / k=4 segmented"
+                        " argpartition vs seed loop; device wq_claim op)",
+        "e_replica_lag": "Replica catch-up: delta txn-log replay vs"
+                         " full-copy (encoded wire bytes vs payload model;"
+                         " parity hard-checked across a truncate)",
+        "e_wire_ship": "Cross-process wire shipping: spawned replica fed"
+                       " zero-copy columnar frames over a pipe (throughput"
+                       " + bit-parity + remote failover, all hard-checked)",
+        "replay_throughput": "Batched hot-plane txn-log replay vs"
+                             " record-at-a-time (bit-parity enforced)",
+        "steering_sweep": "Full Q1-Q7 steering sweep latency on a ~100k-row"
+                          " snapshot",
     }
     for name, rows in bench.items():
         md.append(f"### {heads.get(name, name)}\n")

@@ -45,15 +45,23 @@ a record a lagging replica still needs.
 from __future__ import annotations
 
 import itertools
+import multiprocessing
+import os
+import pickle
+import struct
+import threading
+import time
+import traceback
 import weakref
 from operator import attrgetter, itemgetter
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import wire
 from repro.core.schema import Status
 from repro.core.store import ColumnStore
-from repro.core.transactions import LogCompactedError, Txn
+from repro.core.transactions import LogCompactedError, Txn, plane_run
 from repro.core.workqueue import WorkQueue
 
 
@@ -232,24 +240,9 @@ _BATCH = {
 # The TxnLog accumulates claims/claim_alls/finishes into columnar planes at
 # append time (_HotPlane), so a consecutive run replays as O(1) array
 # slices: zero per-record payload reconstruction — the per-record Python
-# toll the dict-extraction batchers above still pay.
-def _plane_run(recs: Sequence[Txn]):
-    """(plane, lo, hi) when the whole run lives contiguously in one plane.
-
-    Records held by a caller across a ``TxnLog.truncate`` may predate the
-    plane's base — their plane entries are gone, so they must route to the
-    dict-payload fallback (their frozen payloads are intact); a negative
-    offset here would silently slice the wrong retained entries.
-    """
-    first, last = recs[0], recs[-1]
-    plane = first.plane
-    if plane is None or last.plane is not plane \
-            or last.pidx - first.pidx + 1 != len(recs) \
-            or first.pidx < plane.base:
-        return None
-    return plane, first.pidx - plane.base, last.pidx + 1 - plane.base
-
-
+# toll the dict-extraction batchers above still pay. Run eligibility
+# (contiguity, truncation survival) is transactions.plane_run, shared with
+# the wire codec so replay and shipping route runs identically.
 def _plane_fields(plane, lo: int, hi: int):
     off = plane.off.view(lo, hi + 1)
     rows = plane.rows.view(int(off[0]), int(off[-1]))
@@ -293,7 +286,7 @@ def _plane_finish(store: ColumnStore, plane, lo: int, hi: int) -> bool:
 
 
 def _run_via_plane(store: ColumnStore, op: str, recs: Sequence[Txn]) -> bool:
-    sl = _plane_run(recs)
+    sl = plane_run(recs)
     if sl is None:
         return False
     plane, lo, hi = sl
@@ -329,7 +322,8 @@ def replay_reference(store: ColumnStore, records: Iterable[Txn]) -> int:
     return n
 
 
-def replay(store: ColumnStore, records: Iterable[Txn]) -> int:
+def replay(store: ColumnStore, records: Iterable[Txn],
+           progress: Optional[Callable[[Sequence[Txn]], None]] = None) -> int:
     """Apply a txn-log delta onto a (restored) store, in log order, with
     consecutive same-op runs coalesced into one vectorized update each.
 
@@ -338,6 +332,13 @@ def replay(store: ColumnStore, records: Iterable[Txn]) -> int:
     would apply last-wins in log order regardless. The version pin lands on
     the LAST record of each run — intermediate versions are unobservable
     inside a single replay call. Returns the number of records applied.
+
+    ``progress`` (when given) is invoked with each applied-and-version-
+    pinned batch of records — per run on the vectorized path, per record on
+    the fallback path. It is the commit hook consumers use to keep their
+    offset/bytes accounting TRANSACTIONAL with the applied prefix: if a
+    later record raises, everything already passed to ``progress`` is
+    durably applied and must not be replayed (or re-counted) on retry.
     """
     n = 0
     for op, run in itertools.groupby(records, key=attrgetter("op")):
@@ -348,6 +349,10 @@ def replay(store: ColumnStore, records: Iterable[Txn]) -> int:
             # dict-payload extraction covers everything the planes can't
             if not _run_via_plane(store, op, recs):
                 batch(store, list(map(attrgetter("payload"), recs)))
+            store.set_version(recs[-1].store_version)
+            n += len(recs)
+            if progress is not None:
+                progress(recs)
         else:
             try:
                 fn = _APPLY[op]
@@ -357,8 +362,10 @@ def replay(store: ColumnStore, records: Iterable[Txn]) -> int:
                     "DeltaReplicator cannot replay it") from None
             for rec in recs:
                 fn(store, rec.payload)
-        store.set_version(recs[-1].store_version)
-        n += len(recs)
+                store.set_version(rec.store_version)
+                n += 1
+                if progress is not None:
+                    progress((rec,))
     return n
 
 
@@ -375,14 +382,26 @@ class DeltaReplicator:
     workers are presumed dead — the same semantics as requeue).
 
     Accounting for the e_replica_lag experiment: ``delta_bytes`` sums the
-    payload wire sizes actually shipped; ``full_copy_bytes`` sums what a
-    full-snapshot sync at each of the same sync points would have shipped
-    (n_rows x row_nbytes), the baseline cost this subsystem removes.
+    payload sizes of the applied records (the in-memory cost model);
+    ``encoded_bytes`` sums their exact wire-codec frame sizes (what a NIC
+    would carry — :func:`repro.core.wire.frames_nbytes`); ``full_copy_bytes``
+    sums what a full-snapshot sync at each of the same sync points would
+    have shipped (n_rows x row_nbytes), the baseline cost this subsystem
+    removes. All three advance TRANSACTIONALLY with the consumed offset
+    (via replay's progress hook): a sync that raises mid-tail has counted
+    exactly the records it durably applied, so a retry resumes at the
+    failure point instead of re-applying — and re-counting — the prefix.
     """
 
-    def __init__(self, wq: WorkQueue, sync_every: int = 64):
+    def __init__(self, wq: WorkQueue, sync_every: int = 64,
+                 account_encoded: bool = True):
         self.wq = wq
         self.sync_every = sync_every
+        # encoded_bytes is a benchmark-facing metric (what shipping the
+        # applied delta would put on a NIC); sizing it pays pickle cost for
+        # cold runs, so callers that never ship (the executor's in-process
+        # analyst) opt out and keep the sync hot path free of it
+        self.account_encoded = account_encoded
         view = wq.store.snapshot_view()
         self.store = ColumnStore.from_view(view, wq.store.schema)
         self.store.blobs = dict(wq.store.blobs)     # side table: restore-only
@@ -399,6 +418,7 @@ class DeltaReplicator:
         self.records_applied = 0
         self.sync_count = 0
         self.delta_bytes = 0
+        self.encoded_bytes = 0
         self.full_copy_bytes = 0
 
     # --------------------------------------------------------------- lag
@@ -437,20 +457,39 @@ class DeltaReplicator:
                 # forward-only clamp would have produced a no-op anyway
                 hi = self.offset
         recs = log.slice(self.offset, hi)
-        applied = replay(self.store, recs)
-        self.offset = hi
-        log.ack(self.consumer, hi)
-        for r in recs:
-            if r.op == "resize":                # topology rides the log too
-                self.num_workers = int(r.payload["workers"])
-            self.delta_bytes += r.payload_nbytes()
+        applied_recs: List[Txn] = []
+
+        def committed(run: Sequence[Txn]) -> None:
+            # replay's commit hook: these records are durably applied, so
+            # the consumed offset and the bytes counters advance together —
+            # a raise later in the tail leaves them counted exactly once,
+            # and the retry's log.slice starts past them (the regression
+            # the old post-replay accounting loop double-paid)
+            self.offset += len(run)
+            applied_recs.extend(run)
+            for r in run:
+                if r.op == "resize":            # topology rides the log too
+                    self.num_workers = int(r.payload["workers"])
+                self.delta_bytes += r.payload_nbytes()
+            self.records_applied += len(run)
+
+        try:
+            applied = replay(self.store, recs, progress=committed)
+        finally:
+            # ack whatever prefix was applied even on a mid-tail raise:
+            # compaction may safely drop records this replica consumed.
+            # Encoded bytes are sized over the whole applied prefix at once
+            # so cold runs frame exactly as the encoder would ship them
+            # (per-callback sizing would charge one frame per record)
+            if self.account_encoded:
+                self.encoded_bytes += wire.frames_nbytes(applied_recs)
+            log.ack(self.consumer, self.offset)
         if upto_version is not None and upto_version > self.store.version:
             # caller vouches the log is complete through upto_version (all
             # writes used the logged API); pin even if the last record
             # committed earlier, so view.version == primary snapshot version
             # (forward only — never rewind past already-applied state)
             self.store.set_version(upto_version)
-        self.records_applied += applied
         self.sync_count += 1
         self.full_copy_bytes += self.store.n_rows * self.store.row_nbytes()
         return applied
@@ -487,6 +526,336 @@ class DeltaReplicator:
 # delta-fed. Callers that used ReplicaSet(wq).sync()/recover() keep working
 # with sync cost dropped from O(store) to O(delta).
 ReplicaSet = DeltaReplicator
+
+
+# ------------------------------------------------------- cross-process wire
+# Control tags of the replica wire protocol. Every parent request gets
+# exactly one reply; deltas are the only bulk payload and ship as wire
+# frames (repro.core.wire), not pickles.
+#   parent -> child:  I init (snapshot)   D delta frames   S sweep request
+#                     X state fetch       P promote/recover  Q quit
+#   child -> parent:  A ack(offset, version)   R sweep result
+#                     Y state   W recovered snapshot   E error (traceback)
+_PIN_NONE = -(1 << 62)
+_DHDR = struct.Struct("<qqq")            # lo offset, hi offset, version pin
+_ACK = struct.Struct("<qq")              # absolute offset, store version
+
+
+def _shipped_replica_main(conn) -> None:
+    """Entry point of the replica OS process.
+
+    Owns a private :class:`ColumnStore` restored from the primary's
+    snapshot, applies decoded wire deltas with the same :func:`replay` the
+    in-process replicator uses, and acks the ABSOLUTE log offset after each
+    apply — the primary forwards that ack into ``TxnLog``'s consumer-floor
+    machinery, so compaction semantics are identical across the process
+    boundary. Steering sweeps (``S``) run HERE, against this process's
+    store: the analyst never touches a primary array, not even a
+    copy-on-write one.
+    """
+    store: Optional[ColumnStore] = None
+    num_workers = 1
+    offset = 0
+    # sweep wrapper cached across requests (its construction recounts READY
+    # rows, O(store)); rebuilt only when the store or topology changes —
+    # run_all itself reads nothing but the pinned snapshot view
+    engine = None
+    while True:
+        try:
+            msg = conn.recv_bytes()
+        except (EOFError, OSError):
+            return                       # primary gone: nothing to serve
+        tag, body = msg[:1], msg[1:]
+        try:
+            if tag == b"Q":
+                return
+            if tag == b"I":
+                snap, num_workers, offset = pickle.loads(body)
+                store = ColumnStore.restore(snap)
+                engine = None
+                conn.send_bytes(b"A" + _ACK.pack(offset, store.version))
+            elif tag == b"D":
+                lo, hi, pin = _DHDR.unpack_from(body)
+                recs = wire.decode_delta(body[_DHDR.size:])
+                replay(store, recs)
+                for r in recs:
+                    if r.op == "resize":     # topology rides the log too
+                        num_workers = int(r.payload["workers"])
+                        engine = None
+                if pin != _PIN_NONE and pin > store.version:
+                    store.set_version(pin)
+                offset = hi
+                conn.send_bytes(b"A" + _ACK.pack(offset, store.version))
+            elif tag == b"S":
+                (now,) = struct.unpack_from("<d", body)
+                if engine is None:
+                    from repro.core.steering import SteeringEngine
+                    engine = SteeringEngine(
+                        WorkQueue(num_workers, store=store))
+                res = engine.run_all(now, view=store.snapshot_view())
+                conn.send_bytes(b"R" + pickle.dumps(
+                    res, protocol=pickle.HIGHEST_PROTOCOL))
+            elif tag == b"X":
+                conn.send_bytes(b"Y" + pickle.dumps(
+                    {"snapshot": store.snapshot(), "pid": os.getpid(),
+                     "num_workers": num_workers, "offset": offset},
+                    protocol=pickle.HIGHEST_PROTOCOL))
+            elif tag == b"P":
+                st = store.col("status")
+                running = np.nonzero(st == int(Status.RUNNING))[0]
+                if len(running):             # workers presumed dead with
+                    store.update(running,    # the primary: requeue
+                                 status=int(Status.READY))
+                conn.send_bytes(b"W" + pickle.dumps(
+                    (store.snapshot(), num_workers),
+                    protocol=pickle.HIGHEST_PROTOCOL))
+            else:
+                raise ValueError(f"unknown wire control tag {tag!r}")
+        except Exception:                                 # noqa: BLE001
+            try:
+                conn.send_bytes(b"E" + pickle.dumps(traceback.format_exc()))
+            except Exception:                             # noqa: BLE001
+                return
+
+
+class ShippedDeltaReplicator:
+    """Delta replication across a REAL process boundary.
+
+    The replica is a separate OS process (``spawn`` by default: a fresh
+    interpreter, no shared address space) fed over a pipe: every ``sync``
+    encodes the unconsumed log tail with the zero-copy wire codec, ships
+    the frames, and advances its consumer offset only when the remote acks
+    the absolute offset back — so ``TxnLog.truncate``'s consumer-floor
+    machinery bounds log memory EXACTLY as it does for in-process replicas,
+    and a replica that dies mid-ship re-syncs from its last acked offset
+    (respawn restores from a fresh primary snapshot, which the floor
+    guarantees is at or past every un-acked record) without parity loss.
+
+    ``remote_sweep`` runs a full Q1-Q7 steering sweep inside the replica
+    process and ships the result back — the executor's ``analyst="remote"``
+    mode, the paper's decoupled offline-analysis path made structural.
+    ``recover``/``promote`` perform failover on the remote side (RUNNING
+    tasks requeue THERE) and materialize the recovered WorkQueue locally.
+
+    Thread contract: all wire I/O serializes on one internal lock, so the
+    executor's analyst thread (sweeps) and scheduler thread (syncs) can
+    share the replicator; the child services one request at a time.
+    """
+
+    def __init__(self, wq: WorkQueue, sync_every: int = 64,
+                 start_method: str = "spawn"):
+        self.wq = wq
+        self.sync_every = sync_every
+        self.consumer = f"replica-{next(_replica_seq)}"
+        self._ctx = multiprocessing.get_context(start_method)
+        self._mu = threading.Lock()
+        self.process: Optional[multiprocessing.Process] = None
+        self.conn = None
+        self.offset = 0
+        self.replica_version = -1
+        self.num_workers = wq.num_workers
+        self.records_applied = 0
+        self.sync_count = 0
+        self.spawn_count = 0
+        self.delta_bytes = 0             # payload cost model (payload_nbytes)
+        self.encoded_bytes = 0           # exact bytes that crossed the pipe
+        self.encode_wall_s = 0.0
+        self.ship_wall_s = 0.0           # send + remote decode/apply + ack
+        wq.log.register_consumer(self.consumer, 0)
+        self._unregister = weakref.finalize(
+            self, wq.log.unregister_consumer, self.consumer)
+        with self._mu:
+            self._spawn()
+
+    # ------------------------------------------------------------ process
+    def _spawn(self) -> None:
+        """(Re)start the replica process from a fresh primary snapshot.
+
+        The new consumer offset is the log index right after the snapshot
+        version — never below the last remote ack (the snapshot is newer by
+        construction), so compaction already performed against that ack
+        stays sound.
+        """
+        snap = self.wq.store.snapshot()
+        self.offset = max(self.offset,
+                          self.wq.log.index_after_version(snap["version"]))
+        parent_conn, child_conn = self._ctx.Pipe()
+        self.process = self._ctx.Process(
+            target=_shipped_replica_main, args=(child_conn,),
+            daemon=True, name=f"{self.consumer}-remote")
+        self.process.start()
+        child_conn.close()
+        self.conn = parent_conn
+        self.spawn_count += 1
+        reply = self._request(b"I" + pickle.dumps(
+            (snap, self.wq.num_workers, self.offset),
+            protocol=pickle.HIGHEST_PROTOCOL))
+        _, self.replica_version = _ACK.unpack_from(reply, 1)
+        self.num_workers = self.wq.num_workers
+        self.wq.log.ack(self.consumer, self.offset)
+
+    def _kill(self, graceful: bool = False) -> None:
+        p, c = self.process, self.conn
+        self.process = None
+        self.conn = None
+        if c is not None:
+            if graceful and p is not None and p.is_alive():
+                try:
+                    c.send_bytes(b"Q")
+                except (BrokenPipeError, OSError):
+                    pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if p is not None:
+            p.join(timeout=5)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5)
+
+    def _request(self, msg: bytes, timeout: float = 120.0) -> bytes:
+        """One request/reply round trip. ``E`` replies kill the child (its
+        store may hold a partial apply) and surface the remote traceback."""
+        self.conn.send_bytes(msg)
+        if not self.conn.poll(timeout):
+            self._kill()
+            raise TimeoutError(
+                f"remote replica silent for {timeout}s; killed")
+        reply = self.conn.recv_bytes()
+        if reply[:1] == b"E":
+            detail = pickle.loads(reply[1:])
+            self._kill()
+            raise RuntimeError(f"remote replica failed:\n{detail}")
+        return reply
+
+    @property
+    def remote_pid(self) -> Optional[int]:
+        return self.process.pid if self.process is not None else None
+
+    # --------------------------------------------------------------- lag
+    def lag(self) -> int:
+        """Log records the replica is behind the primary."""
+        return len(self.wq.log) - self.offset
+
+    def maybe_sync(self) -> bool:
+        if self.lag() >= self.sync_every:
+            self.sync()
+            return True
+        return False
+
+    # -------------------------------------------------------------- sync
+    def sync(self, upto_version: Optional[int] = None) -> int:
+        """Encode + ship the unconsumed tail; returns #records shipped.
+
+        Semantics match :meth:`DeltaReplicator.sync` (forward-only,
+        ``upto_version`` bisected and pinned remotely) with one addition:
+        the consumer offset, byte counters, and ``log.ack`` advance only
+        after the remote acks the absolute offset — accounting is
+        transactional with what the replica durably consumed. A dead child
+        triggers one respawn-from-snapshot + retry.
+        """
+        with self._mu:
+            return self._sync_locked(upto_version)
+
+    def _sync_locked(self, upto_version: Optional[int],
+                     _retry: bool = True) -> int:
+        log = self.wq.log
+        if self.process is None or not self.process.is_alive():
+            self._spawn()
+        if upto_version is None:
+            hi = len(log)
+        else:
+            try:
+                hi = max(log.index_after_version(upto_version), self.offset)
+            except LogCompactedError:
+                hi = self.offset         # already past it (consumer floor)
+        pin = _PIN_NONE
+        if upto_version is not None and upto_version > self.replica_version:
+            pin = int(upto_version)
+        if hi == self.offset and pin == _PIN_NONE:
+            return 0
+        recs = log.slice(self.offset, hi)
+        t0 = time.perf_counter()
+        buf = wire.delta_to_bytes(recs)
+        t1 = time.perf_counter()
+        try:
+            reply = self._request(
+                b"D" + _DHDR.pack(self.offset, hi, pin) + buf)
+        except (BrokenPipeError, EOFError, OSError):
+            # died mid-ship: nothing past the last ack was consumed; the
+            # respawn snapshot covers every un-acked record, so parity is
+            # preserved — re-issue against the new offset
+            if not _retry:
+                raise
+            self._kill()
+            self._spawn()
+            return self._sync_locked(upto_version, _retry=False)
+        t2 = time.perf_counter()
+        off, self.replica_version = _ACK.unpack_from(reply, 1)
+        if off != hi:
+            raise RuntimeError(
+                f"remote replica acked offset {off}, expected {hi}")
+        self.offset = hi
+        log.ack(self.consumer, hi)
+        self.encode_wall_s += t1 - t0
+        self.ship_wall_s += t2 - t1
+        self.encoded_bytes += len(buf)
+        for r in recs:
+            if r.op == "resize":
+                self.num_workers = int(r.payload["workers"])
+            self.delta_bytes += r.payload_nbytes()
+        self.records_applied += len(recs)
+        self.sync_count += 1
+        return len(recs)
+
+    # ------------------------------------------------------------ analyst
+    def remote_sweep(self, now: float) -> Dict[str, object]:
+        """Run a full Q1-Q7 steering sweep IN the replica process (against
+        its own store at its caught-up version) and return the result."""
+        with self._mu:
+            if self.process is None or not self.process.is_alive():
+                self._spawn()
+            reply = self._request(b"S" + struct.pack("<d", float(now)))
+            return pickle.loads(reply[1:])
+
+    def fetch_remote_state(self) -> Dict[str, object]:
+        """{snapshot, pid, num_workers, offset} straight from the replica
+        process — the bit-parity and process-isolation evidence the
+        e_wire_ship experiment hard-checks."""
+        with self._mu:
+            if self.process is None or not self.process.is_alive():
+                self._spawn()
+            reply = self._request(b"X")
+            return pickle.loads(reply[1:])
+
+    # ----------------------------------------------------------- failover
+    def recover(self) -> WorkQueue:
+        """Failover: drain the surviving log tail into the replica, requeue
+        its RUNNING tasks remotely, and materialize the recovered WorkQueue
+        here (the replica store BECOMES the new primary store)."""
+        with self._mu:
+            self._sync_locked(None)
+            reply = self._request(b"P")
+            snap, num_workers = pickle.loads(reply[1:])
+        store = ColumnStore.restore(snap)
+        wq = WorkQueue(num_workers, store=store)
+        wq._next_task_id = int(store.col("task_id").max() + 1) \
+            if store.n_rows else 0
+        return wq
+
+    def promote(self) -> WorkQueue:
+        """Recover + release the replica process: the returned WorkQueue is
+        now the primary and nothing keeps consuming the old log."""
+        wq = self.recover()
+        self.close()
+        return wq
+
+    def close(self) -> None:
+        """Quit the replica process and stop pinning the compaction floor."""
+        with self._mu:
+            self._kill(graceful=True)
+        self._unregister()       # idempotent; detaches the GC finalizer too
 
 
 class FullCopyReplica:

@@ -39,7 +39,7 @@ import bisect
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -211,6 +211,31 @@ class _HotPlane:
         self.n += 1
         return self.base + self.n - 1
 
+    def slice_fields(self, lo: int, hi: int) -> Dict[str, Any]:
+        """Raw field views of plane entries [lo, hi) — the wire codec's
+        zero-copy export (and the replay fast-path's source arrays).
+
+        ``off``/``dom_off`` carry hi-lo+1 entries and are NOT re-based:
+        consumers subtract ``off[0]`` themselves (the codec re-bases into
+        the frame, replay indexes the shared buffer directly). ``dom`` is
+        the 2-D output-row block for the slice's dom range, or None when
+        the plane never saw a domain payload.
+        """
+        off = self.off.view(lo, hi + 1)
+        out: Dict[str, Any] = {
+            "off": off,
+            "rows": self.rows.view(int(off[0]), int(off[-1])),
+            "now": self.now.view(lo, hi),
+        }
+        if self.worker is not None:
+            out["worker"] = self.worker.view(lo, hi)
+        if self.dom_off is not None:
+            doff = out["dom_off"] = self.dom_off.view(lo, hi + 1)
+            out["dom_flag"] = self.dom_flag.view(lo, hi)
+            out["dom"] = None if self.dom is None else \
+                self.dom.view(int(doff[0]), int(doff[-1]))
+        return out
+
     def truncate(self, upto_pidx: int) -> None:
         """Drop plane entries with index < upto_pidx (log compaction)."""
         d = min(max(upto_pidx - self.base, 0), self.n)
@@ -243,6 +268,26 @@ _HOT_OPS = {
     "claim_all": (False, False),
     "finish": (False, True),
 }
+
+
+def plane_run(recs: Sequence["Txn"]):
+    """(plane, lo, hi) when a same-op run lives contiguously in one plane.
+
+    Shared by batched replay (plane-slice fast path) and the wire codec
+    (hot-frame eligibility): both must route a run to the dict-payload path
+    whenever its plane entries are gone or split. Records held by a caller
+    across a ``TxnLog.truncate`` may predate the plane's base — their plane
+    entries were trimmed, so they must replay/encode from their (intact)
+    frozen payloads; a negative offset here would silently slice the wrong
+    retained entries.
+    """
+    first, last = recs[0], recs[-1]
+    plane = first.plane
+    if plane is None or last.plane is not plane \
+            or last.pidx - first.pidx + 1 != len(recs) \
+            or first.pidx < plane.base:
+        return None
+    return plane, first.pidx - plane.base, last.pidx + 1 - plane.base
 
 
 class TxnLog:

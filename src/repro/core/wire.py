@@ -1,0 +1,323 @@
+"""Zero-copy columnar wire codec for txn-log delta shipping.
+
+The paper's replicas live on OTHER hosts: the transaction-log delta must
+actually cross a NIC, and the cost of crossing it is the cost of the bytes
+ON THE WIRE, not of the Python objects in memory. This codec turns a log
+tail into length-prefixed frames a socket/pipe can ship:
+
+HOT frames (claim / claim_all / finish — the ops that dominate real logs)
+ship a *plane slice*: the txn log already accumulates these ops into
+columnar hot planes at append time (:class:`~repro.core.transactions._HotPlane`),
+so a consecutive same-op run encodes as a handful of contiguous typed
+buffers (row indices, per-record scalars, domain outputs) framed verbatim —
+no per-record dict traversal, no pickling on the hot path. Decoding is
+``np.frombuffer`` over the received buffer: the arrays alias the wire bytes
+(zero-copy), and the decoded records carry a receive-side plane so
+:func:`repro.core.replication.replay` takes its O(1)-slice fast path on the
+replica too.
+
+COLD frames cover everything else (inserts, fails, steering, resizes, runs
+whose plane entries were dropped by a ``TxnLog.truncate``): self-describing
+pickled ``(op, store_version, payload)`` triples. Cold ops are rare by the
+paper's op inventory (Fig. 12), so the fallback's per-record cost never
+sits on the replication hot path.
+
+Frame layout (all little-endian)::
+
+    header  : magic u16 | ftype u8 | opcode u8 | n_records u32 | body u64
+    HOT body: versions i64[n] | off i64[n+1] (re-based, off[0]==0)
+              | rows i64[off[n]] | now f64[n]
+              | claim only:  worker i32[n]
+              | finish only: has_dom u8 | width u32
+                             | dom f64[off[n] * width]  (has_dom == 1 only)
+    COLD body: pickle([(op, store_version, payload), ...])
+
+``off`` is the cumulative per-record row count (n+1 entries), so a frame is
+fully self-delimiting: every section length derives from the header and the
+previously parsed sections. A hot finish frame is only emitted when the
+run is *plane-servable* (every written row carries domain outputs, or none
+does — the same condition replay's plane path checks); mixed or
+width-drifted runs fall back to a cold frame, which preserves their frozen
+payloads bit-exactly.
+"""
+from __future__ import annotations
+
+import itertools
+import pickle
+import struct
+from operator import attrgetter
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.transactions import Txn, plane_run
+
+MAGIC = 0x5157                       # "WQ"
+FT_HOT = 1
+FT_COLD = 2
+
+_HDR = struct.Struct("<HBBIQ")       # magic, ftype, opcode, n_records, body
+_FIN = struct.Struct("<BI")          # has_dom, dom width
+
+_OPCODES = {"claim": 1, "claim_all": 2, "finish": 3}
+_OPS = {v: k for k, v in _OPCODES.items()}
+
+
+class WireError(ValueError):
+    """Malformed or truncated wire frame."""
+
+
+def _mv(arr: np.ndarray):
+    """Byte view of a contiguous array — what the frame ships verbatim.
+    (Zero-size arrays — e.g. a width-0 domain block — have no castable
+    buffer; they contribute zero bytes.)"""
+    if arr.size == 0:
+        return b""
+    return memoryview(np.ascontiguousarray(arr)).cast("B")
+
+
+def _dom_servable(fields: Dict[str, Any], n_rows: int) -> Optional[bool]:
+    """Whether a finish run's dom sub-update is wire-servable as one block.
+
+    Returns True (every row carries dom), False (no row does), or None —
+    mixed / width-drifted runs that must ship as a cold frame (mirrors the
+    conditions of the replay plane path).
+    """
+    doff = fields["dom_off"]
+    d0, d1 = int(doff[0]), int(doff[-1])
+    if d1 > d0:
+        return True if d1 - d0 == n_rows else None
+    return None if int(fields["dom_flag"].sum()) else False
+
+
+# ------------------------------------------------------------------ encode
+def _hot_frame(op: str, recs: Sequence[Txn]) -> Optional[List[Any]]:
+    """Frame chunks for one plane-contiguous hot run, or None when the run
+    cannot be served off its plane (then it ships as a cold frame)."""
+    sl = plane_run(recs)
+    if sl is None:
+        return None
+    plane, lo, hi = sl
+    f = plane.slice_fields(lo, hi)
+    n = len(recs)
+    off = f["off"].astype(np.int64)          # re-based copy: off[0] == 0
+    off -= off[0]
+    n_rows = int(off[-1])
+    chunks: List[Any] = [
+        None,                                # header patched in below
+        _mv(np.fromiter(map(attrgetter("store_version"), recs),
+                        np.int64, n)),
+        _mv(off),
+        _mv(f["rows"]),
+        _mv(f["now"]),
+    ]
+    if op == "claim":
+        chunks.append(_mv(f["worker"]))
+    elif op == "finish":
+        servable = _dom_servable(f, n_rows)
+        if servable is None:
+            return None
+        if servable:
+            dom = f["dom"]
+            chunks.append(_FIN.pack(1, dom.shape[1]))
+            chunks.append(_mv(dom))
+        else:
+            chunks.append(_FIN.pack(0, 0))
+    body = sum(len(c) for c in chunks[1:])
+    chunks[0] = _HDR.pack(MAGIC, FT_HOT, _OPCODES[op], n, body)
+    return chunks
+
+
+def _cold_frame(recs: Sequence[Txn]) -> List[Any]:
+    blob = pickle.dumps(
+        [(r.op, r.store_version, r.payload) for r in recs],
+        protocol=pickle.HIGHEST_PROTOCOL)
+    return [_HDR.pack(MAGIC, FT_COLD, 0, len(recs), len(blob)), blob]
+
+
+def iter_frames(records: Iterable[Txn]) -> Iterable[List[Any]]:
+    """Frames (each a list of bytes-like chunks) for a log delta, one frame
+    per consecutive same-op run — the unit :func:`replay` coalesces."""
+    for op, run in itertools.groupby(records, key=attrgetter("op")):
+        recs = list(run)
+        frame = _hot_frame(op, recs) if op in _OPCODES else None
+        yield frame if frame is not None else _cold_frame(recs)
+
+
+def delta_to_bytes(records: Iterable[Txn]) -> bytes:
+    """One contiguous buffer holding every frame of the delta — what a
+    ``send_bytes`` ships (a writev-style transport can send ``iter_frames``
+    chunks without this join)."""
+    return b"".join(c for frame in iter_frames(records) for c in frame)
+
+
+def frames_nbytes(records: Iterable[Txn]) -> int:
+    """Exact encoded wire size of a delta: ``len(delta_to_bytes(records))``
+    without materializing the hot buffers (cold runs must still pickle —
+    their size is not knowable otherwise; they are rare by construction)."""
+    total = 0
+    for op, run in itertools.groupby(records, key=attrgetter("op")):
+        recs = list(run)
+        n = len(recs)
+        sl = plane_run(recs) if op in _OPCODES else None
+        if sl is not None:
+            plane, lo, hi = sl
+            f = plane.slice_fields(lo, hi)
+            n_rows = int(f["off"][-1] - f["off"][0])
+            servable = _dom_servable(f, n_rows) if op == "finish" else False
+            if op != "finish" or servable is not None:
+                total += _HDR.size + 8 * n + 8 * (n + 1) + 8 * n_rows + 8 * n
+                if op == "claim":
+                    total += 4 * n
+                elif op == "finish":
+                    total += _FIN.size
+                    if servable:
+                        total += 8 * n_rows * f["dom"].shape[1]
+                continue
+        total += _HDR.size + len(pickle.dumps(
+            [(r.op, r.store_version, r.payload) for r in recs],
+            protocol=pickle.HIGHEST_PROTOCOL))
+    return total
+
+
+# ------------------------------------------------------------------ decode
+class _RxField:
+    """Receive-side buffer with the ``.view(lo, hi)`` surface the replay
+    plane path slices — backed directly by the wire bytes (zero-copy)."""
+
+    __slots__ = ("data",)
+
+    def __init__(self, data: np.ndarray):
+        self.data = data
+
+    def view(self, lo: int, hi: int) -> np.ndarray:
+        return self.data[lo:hi]
+
+
+class _RxPlane:
+    """Decoded hot frame, shaped like the sender's ``_HotPlane`` slice so
+    ``replay`` serves the run as O(1) views of the received buffer."""
+
+    __slots__ = ("base", "n", "off", "rows", "now", "worker",
+                 "dom_off", "dom", "dom_flag")
+
+    def __init__(self, n: int, off, rows, now, worker=None,
+                 dom=None, has_dom: bool = False):
+        self.base = 0
+        self.n = n
+        self.off = _RxField(off)
+        self.rows = _RxField(rows)
+        self.now = _RxField(now)
+        self.worker = _RxField(worker) if worker is not None else None
+        # reconstructed dom locator: a servable finish frame has dom rows
+        # exactly aligned with its written rows (dom_off == off, every flag
+        # set) or none at all — the only two shapes hot frames ship
+        self.dom_off = _RxField(off if has_dom
+                                else np.zeros(n + 1, np.int64))
+        self.dom = _RxField(dom) if dom is not None else None
+        self.dom_flag = _RxField(
+            np.ones(n, np.int8) if has_dom else np.zeros(n, np.int8))
+
+    def record_payload(self, i: int, op: str) -> Dict[str, Any]:
+        """Materialize one record's payload dict (replay's single-record and
+        dict-batch fallbacks need it; plane-path runs never call this)."""
+        lo, hi = int(self.off.data[i]), int(self.off.data[i + 1])
+        p: Dict[str, Any] = {"rows": self.rows.data[lo:hi],
+                             "now": float(self.now.data[i])}
+        if self.worker is not None:
+            p["worker"] = int(self.worker.data[i])
+        if op == "finish" and self.dom is not None:
+            p["domain_out"] = self.dom.data[lo:hi]
+        return p
+
+
+class WireTxn:
+    """Decoded log record: replayable via :func:`repro.core.replication.replay`
+    (op/store_version/plane/pidx drive the plane fast path; ``payload``
+    materializes lazily from the received buffers when a fallback needs it)."""
+
+    __slots__ = ("op", "store_version", "plane", "pidx", "_payload")
+
+    def __init__(self, op: str, store_version: int, plane: Optional[_RxPlane],
+                 pidx: int, payload: Optional[Dict[str, Any]] = None):
+        self.op = op
+        self.store_version = store_version
+        self.plane = plane
+        self.pidx = pidx
+        self._payload = payload
+
+    @property
+    def payload(self) -> Dict[str, Any]:
+        if self._payload is None:
+            self._payload = self.plane.record_payload(self.pidx, self.op)
+        return self._payload
+
+    def __repr__(self) -> str:                        # pragma: no cover
+        return f"WireTxn({self.op!r}, v={self.store_version})"
+
+
+def decode_delta(buf) -> List[WireTxn]:
+    """Parse a frame buffer back into replayable records, in log order.
+
+    Hot frames decode as ``np.frombuffer`` views of ``buf`` — no copies of
+    the row/scalar/domain sections; cold frames unpickle their payloads.
+    """
+    out: List[WireTxn] = []
+    pos, end_all = 0, len(buf)
+    while pos < end_all:
+        if pos + _HDR.size > end_all:
+            raise WireError("truncated frame header")
+        magic, ftype, opcode, n, body = _HDR.unpack_from(buf, pos)
+        if magic != MAGIC:
+            raise WireError(f"bad frame magic {magic:#x} at offset {pos}")
+        pos += _HDR.size
+        end = pos + body
+        if end > end_all:
+            raise WireError("truncated frame body")
+        if ftype == FT_COLD:
+            for op, sv, payload in pickle.loads(buf[pos:end]):
+                out.append(WireTxn(op, sv, None, -1, payload))
+        elif ftype == FT_HOT:
+            op = _OPS.get(opcode)
+            if op is None:
+                raise WireError(f"unknown hot opcode {opcode}")
+            versions = np.frombuffer(buf, np.int64, n, pos)
+            pos += 8 * n
+            off = np.frombuffer(buf, np.int64, n + 1, pos)
+            pos += 8 * (n + 1)
+            n_rows = int(off[-1])
+            rows = np.frombuffer(buf, np.int64, n_rows, pos)
+            pos += 8 * n_rows
+            now = np.frombuffer(buf, np.float64, n, pos)
+            pos += 8 * n
+            worker = dom = None
+            has_dom = False
+            if op == "claim":
+                worker = np.frombuffer(buf, np.int32, n, pos)
+                pos += 4 * n
+            elif op == "finish":
+                flag, width = _FIN.unpack_from(buf, pos)
+                pos += _FIN.size
+                has_dom = bool(flag)
+                if has_dom:
+                    # width 0 is legal (a domain_out with no columns):
+                    # frombuffer of zero elements cannot infer the row
+                    # count, so shape it explicitly
+                    dom = np.frombuffer(
+                        buf, np.float64, n_rows * width, pos
+                    ).reshape(n_rows, width) if width else \
+                        np.empty((n_rows, 0), np.float64)
+                    pos += 8 * n_rows * width
+            if pos != end:
+                # the parsed sections must consume the body EXACTLY: a
+                # mismatch means n_records/off disagree with the header,
+                # and frombuffer would have read misaligned garbage
+                raise WireError(
+                    f"hot frame body mismatch: parsed {pos} != {end}")
+            plane = _RxPlane(n, off, rows, now, worker, dom, has_dom)
+            out.extend(WireTxn(op, int(versions[i]), plane, i)
+                       for i in range(n))
+        else:
+            raise WireError(f"unknown frame type {ftype}")
+        pos = end
+    return out

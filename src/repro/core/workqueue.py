@@ -331,11 +331,14 @@ class WorkQueue:
 
         Scans in geometrically growing blocks and stops as soon as every
         worker's budget is met — for dense round-robin partitions that is
-        one small block, independent of store size. Per block: stable
-        worker-sort + bincount segment offsets give in-partition ranks; rank
-        below the worker's remaining quota == claimed. The leftover pool for
-        stealing is only materialized when quotas stay unmet after a full
-        scan (and the suffix is cheap to rescan exactly then).
+        one small block, independent of store size. Per block, k == 1 uses
+        a stable worker-sort + bincount segment offsets for in-partition
+        ranks (rank below the remaining quota == claimed); k > 1 uses a
+        SEGMENTED ARGPARTITION over the exact per-partition ready counts
+        (:meth:`_block_take_argpartition`) — selection instead of a full
+        sort of the block's ready rows. The leftover pool for stealing is
+        only materialized when quotas stay unmet after a full scan (and the
+        suffix is cheap to rescan exactly then).
 
         Returns (claimed rows in worker-major order, per-worker claim counts,
         leftover READY rows in ascending row order).
@@ -352,30 +355,34 @@ class WorkQueue:
         # on dried-up partitions used to pay a full O(store) rescan here)
         total_ready = int(self._ready.sum()) + self._ready_neg
         need = np.minimum(np.full(W, k, np.int64), self.ready_counts())
+        take_block = self._block_take_sort if k == 1 \
+            else self._block_take_argpartition
         parts: List[np.ndarray] = []
         pos = start
-        block = max(4096, 16 * k * W)
+        # k > 1 right-sizes the first block to the QUOTA the ready counts
+        # prove is claimable (~2 rows scanned per claim on a round-robin
+        # suffix) instead of 16x it — selection cost tracks what gets
+        # claimed, and geometric growth still covers skewed layouts
+        block = max(4096, 16 * k * W) if k == 1 else max(1024, 2 * k * W)
         while pos < n and need.any():
             end = min(n, pos + block)
             rr = np.nonzero(status[pos:end] == int(Status.READY))[0] + pos
             if rr.size:
-                rw = wid[rr]
-                order = np.argsort(rw, kind="stable")  # groups workers,
-                srows = rr[order]                      # keeps row order
-                sw = rw[order]                         # within each
-                lo = int(np.searchsorted(sw, 0))       # partition ids
-                hi = int(np.searchsorted(sw, W))       # outside [0, W)
-                seg_rows, seg_w = srows[lo:hi], sw[lo:hi]
-                counts = np.bincount(seg_w, minlength=W)
-                offs = np.cumsum(counts) - counts
-                rank = np.arange(len(seg_rows)) - np.repeat(offs, counts)
-                take = rank < need[seg_w]
-                parts.append(seg_rows[take])
+                got, counts = take_block(rr, wid[rr], need)
+                parts.append(got)
                 need -= np.minimum(counts, need)
             pos = end
             block *= 2
         rows = np.concatenate(parts) if parts else np.empty(0, np.int64)
-        order = np.argsort(wid[rows], kind="stable")   # worker-major, row-
+        if k == 1:
+            # blocks are ascending and the sort path keeps row order within
+            # each partition: stable sort by worker suffices
+            order = np.argsort(wid[rows], kind="stable")
+        else:
+            # argpartition leaves rows unordered within a partition: lexsort
+            # the <= k*W claimed rows back to (worker-major, row-ascending),
+            # the reference order the cursor advance and callers rely on
+            order = np.lexsort((rows, wid[rows]))
         claimed = rows[order]                          # sorted within worker
         n_claimed = np.bincount(wid[rows], minlength=W)
         if (n_claimed < k).any() and total_ready > len(rows):
@@ -391,6 +398,65 @@ class WorkQueue:
         else:
             pool = np.empty(0, np.int64)
         return claimed, n_claimed, pool
+
+    def _block_take_sort(self, rr: np.ndarray, rw: np.ndarray,
+                         need: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """k == 1 block selection: stable worker-sort + bincount ranks.
+
+        Returns (claimed rows of this block — row-ascending within each
+        partition, in-range partition counts). One stable sort groups the
+        partitions while keeping row order, so in-segment position IS the
+        rank; partition ids outside [0, W) are dropped by the searchsorted
+        bounds (they belong to the steal pool).
+        """
+        W = self.num_workers
+        order = np.argsort(rw, kind="stable")      # groups workers,
+        srows = rr[order]                          # keeps row order
+        sw = rw[order]                             # within each
+        lo = int(np.searchsorted(sw, 0))           # partition ids
+        hi = int(np.searchsorted(sw, W))           # outside [0, W)
+        seg_rows, seg_w = srows[lo:hi], sw[lo:hi]
+        counts = np.bincount(seg_w, minlength=W)
+        offs = np.cumsum(counts) - counts
+        rank = np.arange(len(seg_rows)) - np.repeat(offs, counts)
+        return seg_rows[rank < need[seg_w]], counts
+
+    def _block_take_argpartition(self, rr: np.ndarray, rw: np.ndarray,
+                                 need: np.ndarray
+                                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """k > 1 block selection: segmented argpartition, no full sort.
+
+        Composite key (partition-major, row-minor) makes the global sorted
+        order partition-contiguous; one multi-kth ``np.argpartition`` with a
+        pin at every partition's END (so segments cannot bleed into each
+        other) plus a pin at every partition's QUOTA CUT (exact ready
+        counts bound the cut) places each partition's ``need[w]``
+        lowest-index ready rows — the exact rows the reference loop claims —
+        in its quota window, in O(R) selection passes instead of the
+        O(R log R) stable sort the k == 1 path pays. The claimed rows come
+        back UNORDERED within each partition; the caller re-orders the
+        (small) claimed set, never the block.
+        """
+        W = self.num_workers
+        ok = (rw >= 0) & (rw < W)              # out-of-range ids: steal pool
+        rr_in = rr[ok]
+        rw_in = rw[ok].astype(np.int64, copy=False)
+        counts = np.bincount(rw_in, minlength=W)
+        take = np.minimum(counts, need)
+        tot = int(take.sum())
+        if not tot:
+            return np.empty(0, np.int64), counts
+        key = rw_in * np.int64(self.store.n_rows + 1) + rr_in
+        ends = np.cumsum(counts)
+        offs = ends - counts
+        kth = np.unique(np.concatenate(
+            [ends[counts > 0] - 1, (offs + take - 1)[take > 0]]))
+        part = np.argpartition(key, kth)
+        seg = np.repeat(np.arange(W), take)    # quota-window positions:
+        within = np.arange(tot) \
+            - np.repeat(np.cumsum(take) - take, take)
+        return rr_in[part[offs[seg] + within]], counts
 
     def _advance_orphan_watermark(self, pool: np.ndarray,
                                   wid: np.ndarray) -> None:

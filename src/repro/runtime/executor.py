@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.risers_workflow import WorkflowConfig
-from repro.core.replication import DeltaReplicator
+from repro.core.replication import DeltaReplicator, ShippedDeltaReplicator
 from repro.core.schema import Status
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import SecondarySupervisor, Supervisor
@@ -67,12 +67,19 @@ class TrainExecutor:
         # sweeps read a delta-caught-up REPLICA store fed only by the txn
         # log — the paper's "steering never touches the transactional hot
         # path", made structural: the analyst thread never holds a single
-        # live array.
-        if analyst not in ("snapshot", "replica"):
+        # live array. analyst="remote": the replica lives in a SEPARATE OS
+        # process fed wire-encoded deltas over a pipe; sweeps execute in
+        # that process and only the result ships back — the paper's
+        # distributed topology (analytical node != data node) for real.
+        if analyst not in ("snapshot", "replica", "remote"):
             raise ValueError(f"unknown analyst mode {analyst!r}")
         self.analyst = analyst
-        self.replica = DeltaReplicator(self.wq) \
-            if analyst == "replica" else None
+        self.replica = None
+        if analyst == "replica":
+            # nothing ships in-process: skip the wire-size accounting
+            self.replica = DeltaReplicator(self.wq, account_encoded=False)
+        elif analyst == "remote":
+            self.replica = ShippedDeltaReplicator(self.wq)
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.steer_every = steer_every
@@ -134,21 +141,29 @@ class TrainExecutor:
         if self.steer_every and self.step % self.steer_every == 0 \
                 and self._steer_future is None:
             if self.replica is not None:
-                # catch the replica up to this tick's commits (O(delta) log
-                # replay), then sweep ITS store — the live arrays are never
-                # handed to the analyst thread at all. The sync acked the
-                # replica's consumer offset; compaction piggybacks when a
-                # durable checkpoint anchors history
+                # catch the replica up to this tick's commits (O(delta)
+                # wire ship for "remote", in-process log replay for
+                # "replica"); the sync acked the replica's consumer
+                # offset, so compaction piggybacks once a durable
+                # checkpoint anchors history
                 self.replica.sync()
                 self._maybe_compact_log()
-                view = self.replica.snapshot_view()
+            if self.analyst == "remote":
+                # run the sweep IN the replica process: the analyst thread
+                # only waits on the result pipe — no store array, live or
+                # copied, crosses back
+                self._steer_future = self._steer_pool.submit(
+                    self.replica.remote_sweep, time.time())
             else:
-                # snapshot NOW (consistent with this tick's commits);
-                # analyze it on the steering thread while the next ticks
-                # keep claiming
-                view = self.wq.store.snapshot_view()
-            self._steer_future = self._steer_pool.submit(
-                self.steering.run_all, time.time(), view)
+                # replica: sweep the caught-up shadow store — the live
+                # arrays are never handed to the analyst thread at all.
+                # snapshot: COW view of the live store at this tick's
+                # commits, analyzed while the next ticks keep claiming
+                view = self.replica.snapshot_view() \
+                    if self.replica is not None \
+                    else self.wq.store.snapshot_view()
+                self._steer_future = self._steer_pool.submit(
+                    self.steering.run_all, time.time(), view)
         return metrics_out
 
     def _maybe_compact_log(self) -> None:

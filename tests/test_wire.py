@@ -1,0 +1,311 @@
+"""Wire codec + cross-process shipped replication.
+
+Round-trip property: encode -> decode -> replay of any logged workload is
+bit-identical to record-at-a-time replay of the original records (mixed
+dom widths, no-dom finishes, zero-width doms, records straddling a
+``TxnLog.truncate``). Process tests: a ``ShippedDeltaReplicator`` in a
+spawned OS process stays bit-identical to the primary across truncations,
+survives being killed mid-ship (re-sync from the last acked offset), and
+performs recover/promote remotely. Plus the delta-bytes accounting
+regression: sync bookkeeping is transactional with the applied offset.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Status, SteeringEngine, WorkQueue
+from repro.core import wire
+from repro.core.replication import DeltaReplicator, ShippedDeltaReplicator, \
+    replay, replay_reference
+from repro.core.store import ColumnStore
+
+
+def sweep_key(res):
+    return json.dumps(res, sort_keys=True, default=str)
+
+
+def fresh_store(wq):
+    return ColumnStore(wq.store.schema, capacity=max(256, 2 * wq.store.n_rows))
+
+
+def assert_stores_equal(a, b, names):
+    for name in names:
+        assert np.array_equal(a.col(name), b.col(name),
+                              equal_nan=True), name
+    assert a.version == b.version
+
+
+def mixed_workload(wq, rng, rounds=10, widths=(3, 2, 0)):
+    """Claims, finishes with MIXED domain widths (incl. zero-width and
+    no-dom), fails, requeue, steering patch/prune, resize — every op kind,
+    with finish runs that are plane-servable, width-drifted, and mixed."""
+    steer = SteeringEngine(wq)
+    for r in range(rounds):
+        out = wq.claim_all(k=int(rng.integers(1, 3)), now=float(r))
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if len(rows) == 0:
+            break
+        if r % 4 == 2 and len(rows) > 1:
+            wq.fail(rows[:1], now=float(r) + 0.1)
+            rows = rows[1:]
+        if r == 3:
+            victim = wq.num_workers - 1
+            wid = wq.store.col("worker_id")[rows]
+            wq.requeue_worker(victim)
+            rows = rows[wid != victim]
+        for ch in np.array_split(rows, min(3, max(len(rows), 1))):
+            if not len(ch):
+                continue
+            if rng.integers(0, 4) == 0:
+                wq.finish(ch, now=float(r) + 0.5)          # no dom payload
+            else:
+                w = int(widths[int(rng.integers(0, len(widths)))])
+                wq.finish(ch, now=float(r) + 0.5,
+                          domain_out=rng.normal(0.5, 0.3, (len(ch), w)))
+        if r == 4:
+            steer.q8_patch_ready(0, "in0", 7.0, predicate=lambda v: v > 0.5)
+        if r == 5:
+            wq.add_tasks(0, 3, domain_in=np.full((3, 3), 0.05),
+                         now=float(r))         # guaranteed prune matches
+            steer.prune("in1", 0.0, 0.1)
+        if r == 6 and wq.num_workers > 2:
+            wq.resize(wq.num_workers - 1)
+
+
+# ------------------------------------------------------------ codec core
+def test_wire_roundtrip_every_op_type_bit_exactly():
+    rng = np.random.default_rng(0)
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 48, domain_in=rng.uniform(0, 1, (48, 3)))
+    mixed_workload(wq, rng)
+    recs = wq.log.tail(0)
+    ops = {r.op for r in recs}
+    assert {"insert", "claim_all", "finish", "fail", "requeue_worker",
+            "steer_patch", "steer_prune", "resize"} <= ops
+    buf = wire.delta_to_bytes(recs)
+    assert wire.frames_nbytes(recs) == len(buf)
+    dec = wire.decode_delta(buf)
+    assert len(dec) == len(recs)
+    s_ref, s_dec = fresh_store(wq), fresh_store(wq)
+    replay_reference(s_ref, recs)
+    replay(s_dec, dec)
+    assert_stores_equal(s_ref, s_dec, wq.store.cols)
+    assert_stores_equal(wq.store, s_dec, wq.store.cols)
+
+
+def test_wire_single_record_hot_frames_and_claim_op():
+    """Per-worker claim records (worker column on the wire) and 1-record
+    hot runs (replayed through the lazy payload path) round-trip."""
+    wq = WorkQueue(num_workers=3)
+    wq.add_tasks(0, 9)
+    for w in range(3):
+        wq.claim(w, k=1, now=float(w) + 0.25)
+        wq.finish(wq.store.where(worker_id=w,
+                                 status=int(Status.RUNNING)),
+                  now=float(w) + 0.5,
+                  domain_out=np.full((1, 3), w, float))
+    recs = wq.log.tail(0)
+    dec = wire.decode_delta(wire.delta_to_bytes(recs))
+    # claim/finish alternate: every hot run is a single record, so replay
+    # must reconstruct payloads lazily from the received plane
+    s_dec = fresh_store(wq)
+    replay(s_dec, dec)
+    assert_stores_equal(wq.store, s_dec, wq.store.cols)
+    claims = [d for d in dec if d.op == "claim"]
+    assert [d.payload["worker"] for d in claims] == [0, 1, 2]
+
+
+def test_wire_records_straddling_truncate_fall_back_to_cold_frames():
+    """Records held across a TxnLog.truncate lose their plane entries; the
+    codec must ship them from their frozen payloads (cold frames), not
+    mis-slice retained plane rows."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 12)
+    for r in range(4):
+        wq.claim(r % 2, k=1, now=float(r))
+    held = wq.log.tail(0)                   # hold refs across the truncate
+    wq.log.register_consumer("c", len(wq.log))
+    wq.log.truncate()
+    assert wq.log.base > 0
+    for r in range(4, 6):
+        wq.claim(r % 2, k=1, now=float(r))  # appended AFTER the truncate
+    recs = held + wq.log.tail(wq.log.base)
+    buf = wire.delta_to_bytes(recs)
+    assert wire.frames_nbytes(recs) == len(buf)
+    dec = wire.decode_delta(buf)
+    # the pre-truncate hot-op records must have shipped cold (no rx plane)
+    assert any(d.plane is None and d.op == "claim"
+               for d in dec[:len(held)])
+    s_ref, s_dec = fresh_store(wq), fresh_store(wq)
+    replay_reference(s_ref, recs)
+    replay(s_dec, dec)
+    assert_stores_equal(s_ref, s_dec, wq.store.cols)
+
+
+def test_wire_rejects_garbage():
+    with pytest.raises(wire.WireError):
+        wire.decode_delta(b"\x00" * 32)
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 2)
+    buf = wire.delta_to_bytes(wq.log.tail(0))
+    with pytest.raises(wire.WireError):
+        wire.decode_delta(buf[: len(buf) - 3])
+
+
+@settings(max_examples=15, deadline=None)
+@given(workers=st.integers(1, 6), tasks=st.integers(0, 60),
+       seed=st.integers(0, 99))
+def test_property_wire_roundtrip_random_workloads(workers, tasks, seed):
+    rng = np.random.default_rng(seed)
+    wq = WorkQueue(num_workers=workers)
+    if tasks:
+        wq.add_tasks(0, tasks, domain_in=rng.uniform(0, 1, (tasks, 3)))
+    mixed_workload(wq, rng, rounds=8)
+    recs = wq.log.tail(0)
+    buf = wire.delta_to_bytes(recs)
+    assert wire.frames_nbytes(recs) == len(buf)
+    dec = wire.decode_delta(buf)
+    s_ref, s_dec = fresh_store(wq), fresh_store(wq)
+    replay_reference(s_ref, recs)
+    replay(s_dec, dec)
+    assert_stores_equal(s_ref, s_dec, wq.store.cols)
+    assert_stores_equal(wq.store, s_dec, wq.store.cols)
+
+
+# ------------------------------------------- delta-bytes accounting fix
+def test_sync_accounting_transactional_on_midtail_failure():
+    """A sync that raises mid-tail must have counted (and consumed) exactly
+    the applied prefix — retrying neither re-applies nor re-counts it."""
+    wq = WorkQueue(num_workers=2)
+    rep = DeltaReplicator(wq)
+    wq.add_tasks(0, 8)
+    wq.claim(0, k=1, now=0.0)
+    prefix = wq.log.tail(0)
+    wq.log.append("mystery_op", {"n": 1}, store_version=wq.store.version)
+    wq.claim(1, k=1, now=1.0)
+    want_bytes = sum(r.payload_nbytes() for r in prefix)
+    want_encoded = wire.frames_nbytes(prefix)
+    with pytest.raises(ValueError, match="mystery_op"):
+        rep.sync()
+    assert rep.delta_bytes == want_bytes
+    assert rep.encoded_bytes == want_encoded
+    assert rep.offset == len(prefix)          # consumed exactly the prefix
+    assert rep.records_applied == len(prefix)
+    with pytest.raises(ValueError, match="mystery_op"):
+        rep.sync()                             # retry: nothing re-counted
+    assert rep.delta_bytes == want_bytes
+    assert rep.records_applied == len(prefix)
+
+
+def test_sync_transient_failure_then_retry_counts_each_record_once(
+        monkeypatch):
+    """Transient apply failure: the retry applies (and counts) only the
+    un-consumed suffix, and the replica still reaches bit-parity."""
+    from repro.core import replication as R
+    wq = WorkQueue(num_workers=2)
+    rep = DeltaReplicator(wq)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 8)
+    wq.claim(0, k=2, now=0.0)
+    steer.q8_patch_ready(0, "in0", 3.0)        # single-record _APPLY run
+    wq.claim(1, k=2, now=1.0)
+    orig = R._APPLY["steer_patch"]
+    boom = {"armed": True}
+
+    def flaky(store, p):
+        if boom.pop("armed", False):
+            raise RuntimeError("transient apply failure")
+        orig(store, p)
+
+    monkeypatch.setitem(R._APPLY, "steer_patch", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        rep.sync()
+    applied_at_failure = rep.records_applied
+    assert 0 < applied_at_failure < len(wq.log)
+    rep.sync()                                 # retry resumes, not restarts
+    assert rep.records_applied == len(wq.log)
+    assert rep.delta_bytes == sum(r.payload_nbytes()
+                                  for r in wq.log.tail(0))
+    assert rep.encoded_bytes > 0
+    view = wq.store.snapshot_view()
+    for name in wq.store.cols:
+        assert np.array_equal(view.col(name), rep.store.col(name),
+                              equal_nan=True), name
+
+
+# --------------------------------------------------- cross-process ship
+def test_shipped_replicator_parity_across_truncate_and_promote():
+    rng = np.random.default_rng(3)
+    wq = WorkQueue(num_workers=4)
+    steer = SteeringEngine(wq)
+    rep = ShippedDeltaReplicator(wq, sync_every=8)
+    assert rep.remote_pid is not None and rep.remote_pid != os.getpid()
+    wq.add_tasks(0, 48, domain_in=rng.uniform(0, 1, (48, 3)))
+    mixed_workload(wq, rng, rounds=6)
+    rep.sync()
+    assert wq.compact_log() > 0                # replica acked -> truncate
+    mixed_workload(wq, rng, rounds=3)          # ship ACROSS the truncate
+    view = wq.store.snapshot_view()
+    rep.sync(upto_version=view.version)
+    assert sweep_key(rep.remote_sweep(42.0)) \
+        == sweep_key(steer.run_all(42.0, view=view))
+    state = rep.fetch_remote_state()
+    assert state["pid"] != os.getpid()
+    for name in wq.store.cols:
+        assert np.array_equal(view.col(name), state["snapshot"]["cols"][name],
+                              equal_nan=True), name
+    assert rep.encoded_bytes > 0
+    wq2 = rep.promote()                        # remote failover
+    assert (wq2.store.col("status") != int(Status.RUNNING)).all()
+    assert wq2.num_workers == rep.num_workers
+    assert wq2.add_tasks(0, 2).min() >= wq.store.n_rows  # fresh ids
+
+
+def test_shipped_replica_death_mid_ship_resyncs_without_parity_loss():
+    rng = np.random.default_rng(4)
+    wq = WorkQueue(num_workers=3)
+    steer = SteeringEngine(wq)
+    rep = ShippedDeltaReplicator(wq, sync_every=4)
+    wq.add_tasks(0, 30, domain_in=rng.uniform(0, 1, (30, 3)))
+    mixed_workload(wq, rng, rounds=4)
+    rep.sync()
+    acked = rep.offset
+    rep.process.kill()                         # dies with un-shipped state
+    mixed_workload(wq, rng, rounds=3)
+    rep.sync()                                 # respawn + catch-up
+    assert rep.spawn_count == 2
+    assert rep.offset >= acked                 # never rewinds past the ack
+    view = wq.store.snapshot_view()
+    rep.sync(upto_version=view.version)
+    assert sweep_key(rep.remote_sweep(77.0)) \
+        == sweep_key(steer.run_all(77.0, view=view))
+    state = rep.fetch_remote_state()
+    for name in wq.store.cols:
+        assert np.array_equal(view.col(name), state["snapshot"]["cols"][name],
+                              equal_nan=True), name
+    rep.close()
+    assert not wq.log.has_consumer(rep.consumer)
+
+
+def test_shipped_remote_error_surfaces_and_respawns():
+    """A poison record makes the REMOTE replay fail: the error must carry
+    the remote traceback, and the next sync must recover via respawn."""
+    wq = WorkQueue(num_workers=2)
+    rep = ShippedDeltaReplicator(wq)
+    wq.add_tasks(0, 4)
+    wq.log.append("mystery_op", {"n": 1}, store_version=wq.store.version)
+    with pytest.raises(RuntimeError, match="mystery_op"):
+        rep.sync()
+    wq.claim(0, k=1, now=1.0)
+    rep.sync()                        # fresh snapshot skips the poison rec
+    state = rep.fetch_remote_state()
+    view = wq.store.snapshot_view()
+    for name in wq.store.cols:
+        assert np.array_equal(view.col(name), state["snapshot"]["cols"][name],
+                              equal_nan=True), name
+    rep.close()
