@@ -239,15 +239,20 @@ def exp_replica_lag(scale: float = 1.0) -> List[Dict]:
 def exp_wire_ship(scale: float = 1.0) -> List[Dict]:
     """Cross-process wire shipping: encode + ship + decode + replay for real.
 
-    Runs :func:`benchmarks.simkit.run_wire_ship`: two replica OS processes
-    fed wire-encoded txn-log deltas over a pipe (the drill replica at the
-    executor's sync cadence, the bulk replica in one sustained catch-up).
-    HARD-FAILS unless the drill replica (a) lives in a DIFFERENT process,
-    (b) synced across at least one ``TxnLog.truncate``, (c) produces a
-    Q1-Q7 sweep and store columns bit-identical to a primary
+    Runs :func:`benchmarks.simkit.run_wire_ship`: replica OS processes fed
+    wire-encoded txn-log deltas over the configured transport — pipe by
+    default, TCP when ``REPRO_WIRE_TRANSPORT=tcp`` (the CI socket-loopback
+    leg) — with the drill replica at the executor's sync cadence, the bulk
+    replica in one sustained catch-up, and a 3-member ReplicaGroup fan-out
+    drill. HARD-FAILS unless the drill replica (a) lives in a DIFFERENT
+    process, (b) synced across at least one ``TxnLog.truncate``, (c)
+    produces a Q1-Q7 sweep and store columns bit-identical to a primary
     ``snapshot_view()`` at the same version, and (d) requeues every RUNNING
-    row on remote ``promote()`` — the acceptance criteria of the wire
-    layer, enforced on every run, not reported as soft metrics.
+    row on remote ``promote()`` — plus the fabric criteria: every fan-out
+    member sweeps bit-identically after one broadcast sync, and after
+    killing the leader ``promote()`` elects the highest-acked survivor and
+    leaves no RUNNING row. The acceptance criteria of the wire layer,
+    enforced on every run, not reported as soft metrics.
     """
     n = max(int(4_000 * scale), 200)
     rows: List[Dict] = []
@@ -273,6 +278,16 @@ def exp_wire_ship(scale: float = 1.0) -> List[Dict]:
             raise AssertionError(
                 f"remote promote() at W={workers} left RUNNING rows in the "
                 "recovered store")
+        if not r["fanout_sweep_equal"]:
+            raise AssertionError(
+                f"fan-out at W={workers}: a ReplicaGroup member's sweep "
+                "diverged from the primary after broadcast sync")
+        if not (r["fanout_elected_highest_acked"]
+                and r["fanout_promote_no_running"]):
+            raise AssertionError(
+                f"fan-out failover at W={workers}: "
+                f"elected_highest_acked={r['fanout_elected_highest_acked']} "
+                f"promote_no_running={r['fanout_promote_no_running']}")
         rows.append({"exp": "e_wire_ship", "workers": workers, **{
             k: (round(v, 5) if isinstance(v, float) else v)
             for k, v in r.items()}})

@@ -16,6 +16,40 @@ import sys
 import time
 
 
+# what each registered experiment measures — what `--list` prints and
+# `--only` accepts (substring match); kept in lockstep with `runs` below
+# (main() fails loudly if the two ever drift)
+DESCRIPTIONS = {
+    "e1_strong_scaling": "Fig 9a: fixed 13k tasks, 120->960 cores, "
+                         "threads sweep (makespan efficiency)",
+    "e2_weak_scaling": "Fig 9b: workload grows with cores "
+                       "(6k/12k/23.4k tasks on 10/20/39 nodes)",
+    "e3_workload_tasks": "Fig 10a: fixed duration, varying #tasks, "
+                         "paper vs adapted access latency",
+    "e4_workload_duration": "Fig 10b: fixed #tasks, varying duration, "
+                            "paper vs adapted access latency",
+    "e5_dbms_overhead": "Fig 11: DBMS access time vs total makespan "
+                        "across task durations",
+    "e6_access_breakdown": "Fig 12: time share per DBMS access kind "
+                           "(claims/finishes dominate)",
+    "e7_steering_overhead": "Fig 13 at 10x tasks: makespan with vs "
+                            "without concurrent snapshot steering sweeps",
+    "e8_centralized_vs_distributed": "Fig 14: Chiron (one master) vs "
+                                     "d-Chiron (partitioned WQ) makespan",
+    "e_replica_lag": "delta txn-log replay vs full-copy replica sync "
+                     "(encoded wire bytes; parity across a truncate)",
+    "e_wire_ship": "cross-process replicas over pipe/TCP: ship "
+                   "throughput, varint compression, 3-replica fan-out "
+                   "parity + leader-kill promote (all hard-checked)",
+    "claim_kernel": "claim_all fast-path vs seed loop at k=1/k=4 "
+                    "(the >=5x gate) + device wq_claim op latency",
+    "replay_throughput": "batched hot-plane txn-log replay vs "
+                         "record-at-a-time (the >=10x gate, bit-parity)",
+    "steering_sweep": "full Q1-Q7 sweep latency on a ~100k-row snapshot "
+                      "(the --max-sweep-ms gate)",
+}
+
+
 def main() -> None:
     root = pathlib.Path(__file__).resolve().parent.parent
     sys.path.insert(0, str(root))          # the benchmarks package itself
@@ -24,11 +58,20 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--only", default="")
+    ap.add_argument("--list", action="store_true",
+                    help="print every registered experiment with its "
+                         "one-line description (what --only accepts) and "
+                         "exit")
     ap.add_argument("--min-claim-speedup", type=float, default=0.0,
                     help="exit nonzero unless the claim_kernel host "
                          "speedup (vectorized vs seed loop) meets this "
                          "floor — the CI regression gate")
     args = ap.parse_args()
+
+    if args.list:
+        for name, desc in DESCRIPTIONS.items():
+            print(f"{name:32s} {desc}")
+        return
 
     from benchmarks import experiments as E
 
@@ -48,6 +91,10 @@ def main() -> None:
         "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
         "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
     }
+    missing = set(runs) ^ set(DESCRIPTIONS)
+    if missing:                            # keep --list honest forever
+        raise RuntimeError(f"experiments without (or with stale) "
+                           f"descriptions: {sorted(missing)}")
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     only = [t for t in args.only.split(",") if t]
@@ -105,10 +152,12 @@ def _headline(name: str, rows) -> str:
             return f"full/delta_bytes_min={br}x;sweep_equal={eq}"
         if name == "e_wire_ship":
             mbps = min(r["ship_mbps_bulk"] for r in rows)
-            ratio = max(r["encoded_bytes_ratio"] for r in rows)
-            eq = all(r["cols_equal"] and r["sweep_equal"] for r in rows)
-            return (f"ship_mbps_bulk_min={mbps};encoded/payload={ratio};"
-                    f"remote_parity={eq}")
+            comp = min(r["compression_ratio"] for r in rows)
+            eq = all(r["cols_equal"] and r["sweep_equal"]
+                     and r["fanout_sweep_equal"] for r in rows)
+            tr = rows[0]["transport"]
+            return (f"ship_mbps_bulk_min={mbps};compression={comp}x;"
+                    f"transport={tr};remote+fanout_parity={eq}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

@@ -331,12 +331,16 @@ def run_replica_lag(num_workers: int, num_tasks: int,
 
 def run_wire_ship(num_workers: int, num_tasks: int,
                   mean_dur_s: float = 1.0, *, activities: int = 3,
-                  sync_every: int = 64, seed: int = 0) -> Dict:
+                  sync_every: int = 64, seed: int = 0,
+                  transport: Optional[str] = None,
+                  fanout: int = 3) -> Dict:
     """Cross-process delta shipping drill: the wire layer measured for real.
 
     Two :class:`ShippedDeltaReplicator`\\ s — each a separate OS process fed
-    wire-encoded frames over a pipe — ride one deterministic workflow (the
-    same op mix as :func:`run_replica_lag`):
+    wire-encoded frames over the configured transport (``"pipe"`` or
+    ``"tcp"``; default from ``REPRO_WIRE_TRANSPORT``, which is how CI runs
+    the socket path) — ride one deterministic workflow (the same op mix as
+    :func:`run_replica_lag`):
 
     * the DRILL replica syncs every ``sync_every`` records (the executor's
       steady-state cadence) and, after a mid-run ``TxnLog.truncate``, keeps
@@ -348,16 +352,35 @@ def run_wire_ship(num_workers: int, num_tasks: int,
       the paper's Experiment 6 shows dominating — long same-op runs, i.e.
       big contiguous hot frames) in ONE shot — sustained
       encode+ship+decode+replay throughput, the ``ship_mbps_bulk`` the
-      trajectory gate bounds. The drill's ``ship_mbps`` stays the mixed-
-      workload number (short alternating runs: per-frame overhead, not
-      bandwidth, and recorded as such).
+      trajectory gate bounds, now measured on the NEGOTIATED (compressed)
+      wire bytes. ``compression_ratio`` compares the bulk log's hot-frame
+      bytes under the raw codec vs the negotiated one (cold pickles are
+      byte-identical either way and excluded; ``compression_ratio_total``
+      keeps them in). The drill's ``ship_mbps`` stays the mixed-workload
+      number (short alternating runs: per-frame overhead, not bandwidth,
+      and recorded as such).
 
-    ``encoded_bytes`` are the exact frame bytes that crossed the pipe;
+    A third phase exercises the FABRIC: a ``fanout``-member
+    :class:`ReplicaGroup` rides a fresh workload — every member must sweep
+    bit-identically to the primary after one broadcast sync
+    (``fanout_sweep_equal``), the broadcast's straggler spread is recorded
+    (``fanout_lag_ms``), and failover is drilled by advancing one member
+    ahead (the leader), killing its process, and checking ``promote()``
+    elects the highest-acked SURVIVOR (``fanout_elected_highest_acked``)
+    and requeues every RUNNING row.
+
+    ``encoded_bytes`` are the exact frame bytes that crossed the wire;
     ``payload_bytes`` is the in-memory ``payload_nbytes`` cost model those
     frames replace — their ratio is what the NIC would actually see.
     """
     import os
 
+    from repro.core import wire
+    from repro.core.replication import ReplicaGroup
+
+    if fanout < 2:
+        raise ValueError("the fan-out drill kills the leader and checks "
+                         "the survivor election — it needs fanout >= 2")
     rng = np.random.default_rng(seed)
     wf = WorkflowConfig(activities=tuple(f"a{i}" for i in range(activities)))
     wq = WorkQueue(num_workers=num_workers,
@@ -365,7 +388,8 @@ def run_wire_ship(num_workers: int, num_tasks: int,
     sup = Supervisor(wq, wf)
     sup.seed(max(num_tasks // activities, 1), duration_s=mean_dur_s, rng=rng)
     steer = SteeringEngine(wq)
-    rep = ShippedDeltaReplicator(wq, sync_every=sync_every)
+    rep = ShippedDeltaReplicator(wq, sync_every=sync_every,
+                                 transport=transport)
 
     clock = 0.0
     rounds = 0
@@ -410,7 +434,8 @@ def run_wire_ship(num_workers: int, num_tasks: int,
     # frames): the multi-host shape the wire layer exists for.
     n_bulk = max(num_tasks, 500)
     wq_b = WorkQueue(num_workers=num_workers, capacity=2 * n_bulk)
-    bulk = ShippedDeltaReplicator(wq_b, sync_every=1 << 62)
+    bulk = ShippedDeltaReplicator(wq_b, sync_every=1 << 62,
+                                  transport=transport)
     wq_b.add_tasks(0, n_bulk, domain_in=rng.uniform(0, 1, (n_bulk, 3)))
     claimed = [wq_b.claim(r % num_workers, k=1, now=float(r))
                for r in range(n_bulk)]
@@ -418,8 +443,18 @@ def run_wire_ship(num_workers: int, num_tasks: int,
         if len(brow):
             wq_b.finish(brow, now=float(r) + 0.5,
                         domain_out=rng.normal(0.5, 0.3, (len(brow), 3)))
+    # compression accounting on the exact records the bulk sync will ship:
+    # hot-frame bytes raw vs negotiated codec (cold pickles are identical
+    # across codecs — the ratio the varint planes actually deliver)
+    bulk_recs = wq_b.log.tail(0)
+    enc_raw = wire.frames_nbytes_detail(bulk_recs, "raw")
+    enc_neg = wire.frames_nbytes_detail(bulk_recs, bulk.codec)
     bulk.sync()
     bulk_bytes = bulk.encoded_bytes
+    if bulk_bytes != enc_neg["total"]:
+        raise AssertionError(
+            f"bulk encoded-bytes accounting diverged from the codec "
+            f"oracle: shipped {bulk_bytes}, sized {enc_neg['total']}")
     bulk_wall = bulk.encode_wall_s + bulk.ship_wall_s
     bulk_records = bulk.records_applied
     bulk_state = bulk.fetch_remote_state()
@@ -456,6 +491,48 @@ def run_wire_ship(num_workers: int, num_tasks: int,
     remote_pid = state["pid"]
     drill_bytes = rep.encoded_bytes
     drill_wall = rep.encode_wall_s + rep.ship_wall_s
+
+    # ---- fan-out: N replicas per partition, broadcast + election ---------
+    # A fresh workload rides an N-member ReplicaGroup: one broadcast sync,
+    # then every member's REMOTE sweep must match the primary bit-exactly.
+    # Failover drill: the leader (synced ahead of the others) is killed and
+    # promote() must elect the highest-acked SURVIVOR.
+    n_fan = max(min(num_tasks, 400), 4 * num_workers)
+    wq_f = WorkQueue(num_workers=num_workers, capacity=4 * n_fan)
+    steer_f = SteeringEngine(wq_f)
+    grp = ReplicaGroup(wq_f, n_replicas=fanout, sync_every=sync_every,
+                       transport=transport)
+    wq_f.add_tasks(0, n_fan, domain_in=rng.uniform(0, 1, (n_fan, 3)))
+    out = wq_f.claim_all(k=1, now=0.0)
+    rows_f = np.concatenate([v for v in out.values() if len(v)])
+    wq_f.finish(rows_f[len(rows_f) // 2:], now=1.0,
+                domain_out=rng.normal(0.5, 0.3,
+                                      (len(rows_f) - len(rows_f) // 2, 3)))
+    view_f = wq_f.store.snapshot_view()
+    grp.sync(upto_version=view_f.version)
+    fan_ref = _sweep_fingerprint(steer_f.run_all(2.0, view=view_f))
+    fanout_sweep_equal = all(
+        _sweep_fingerprint(m.remote_sweep(2.0)) == fan_ref
+        for m in grp.members)
+    fanout_lag_ms = grp.fanout_lag_s() * 1e3
+    # leader = member 0, synced past everyone else, then killed
+    wq_f.add_tasks(0, num_workers, now=3.0)
+    grp.members[0].sync()
+    grp.members[1].sync()
+    wq_f.add_tasks(0, num_workers, now=4.0)
+    grp.members[0].sync()
+    leader = grp.members[0]
+    leader.process.kill()
+    leader.process.join()
+    elected = grp.elect()
+    fanout_elected_highest_acked = (
+        elected is not leader
+        and elected.offset == max(m.offset for m in grp.members
+                                  if m is not leader))
+    wq_fp = grp.promote()
+    fanout_promote_no_running = bool(
+        (wq_fp.store.col("status") != int(Status.RUNNING)).all())
+
     res: Dict = {
         "rounds": rounds, "store_rows": int(wq.store.n_rows),
         "log_records": len(wq.log),
@@ -472,6 +549,16 @@ def run_wire_ship(num_workers: int, num_tasks: int,
         "bulk_encoded_bytes": int(bulk_bytes),
         "bulk_cols_equal": bool(bulk_cols_equal),
         "ship_mbps_bulk": round(bulk_bytes / max(bulk_wall, 1e-9) / 1e6, 2),
+        "transport": rep.transport, "codec": rep.codec,
+        "compression_ratio": round(
+            enc_raw["hot"] / max(enc_neg["hot"], 1), 4),
+        "compression_ratio_total": round(
+            enc_raw["total"] / max(enc_neg["total"], 1), 4),
+        "fanout_n": int(fanout),
+        "fanout_sweep_equal": bool(fanout_sweep_equal),
+        "fanout_lag_ms": round(fanout_lag_ms, 3),
+        "fanout_elected_highest_acked": bool(fanout_elected_highest_acked),
+        "fanout_promote_no_running": bool(fanout_promote_no_running),
         "log_truncated_records": int(wq.log.base),
         "compact_dropped": int(truncated),
         "parent_pid": int(os.getpid()), "remote_pid": int(remote_pid),

@@ -14,7 +14,17 @@ the enforced floors regresses:
   SEPARATE OS process, synced across a TxnLog.truncate, must sweep
   bit-identically to a primary snapshot (hard-checked inside the
   experiment) and sustain --min-ship-mbps of encode+ship+replay throughput
-  on the bulk catch-up; the encoded-bytes/payload ratio is recorded
+  on the bulk catch-up — measured on the NEGOTIATED (varint-compressed)
+  wire bytes; the encoded-bytes/payload ratio is recorded
+- hot-frame compression (--min-compression): the varint codec's raw/
+  compressed hot-frame byte ratio on the claims/finishes-heavy bulk log
+  must hold its floor (decode bit-parity is hard-checked in the experiment
+  and the wire tests)
+- replica fan-out (e_wire_ship's ReplicaGroup drill): every member of the
+  3-replica group must sweep bit-identically after a broadcast sync, and
+  promote() must elect the highest-acked survivor after the leader dies
+  (hard-checked inside the experiment); the broadcast straggler spread is
+  recorded as fanout_lag_ms
 
 Each PR appends one snapshot file; the accumulated ``BENCH_*.json`` series
 IS the performance trajectory of the repo (CI prints it on every run, so a
@@ -80,6 +90,17 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
                                     for r in wire_rows),
         "wire_remote_parity": all(r["cols_equal"] and r["sweep_equal"]
                                   for r in wire_rows),
+        "wire_transport": wire_rows[0]["transport"],
+        "wire_codec": wire_rows[0]["codec"],
+        "compression_ratio": min(r["compression_ratio"] for r in wire_rows),
+        "compression_ratio_total": min(r["compression_ratio_total"]
+                                       for r in wire_rows),
+        "fanout_n": min(r["fanout_n"] for r in wire_rows),
+        "fanout_lag_ms": max(r["fanout_lag_ms"] for r in wire_rows),
+        "fanout_parity": all(r["fanout_sweep_equal"]
+                             and r["fanout_elected_highest_acked"]
+                             and r["fanout_promote_no_running"]
+                             for r in wire_rows),
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -109,8 +130,13 @@ def main() -> None:
                          "~100k-row store (0 records without enforcing)")
     ap.add_argument("--min-ship-mbps", type=float, default=5.0,
                     help="floor for the cross-process bulk catch-up's "
-                         "encode+ship+replay throughput (e_wire_ship; "
-                         "0 records without enforcing)")
+                         "encode+ship+replay throughput (e_wire_ship, "
+                         "measured on the compressed wire; 0 records "
+                         "without enforcing)")
+    ap.add_argument("--min-compression", type=float, default=2.0,
+                    help="floor for the varint codec's raw/compressed "
+                         "hot-frame byte ratio on the bulk log "
+                         "(0 records without enforcing)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="claim/replay/sweep scale (1.0 = the gated "
                          "100k-task / 100k-record runs)")
@@ -130,7 +156,8 @@ def main() -> None:
               f" replay_speedup={pt.get('replay_speedup')}"
               f" sweep_ms={pt.get('sweep_ms')}"
               f" replica_bytes_ratio_min={pt.get('replica_bytes_ratio_min')}"
-              f" ship_mbps={pt.get('ship_mbps')}")
+              f" ship_mbps={pt.get('ship_mbps')}"
+              f" compression={pt.get('compression_ratio')}")
 
     failures = []
     if snap["claim_speedup_min"] < args.min_claim_speedup:
@@ -148,6 +175,15 @@ def main() -> None:
             f"below the {args.min_ship_mbps} MB/s gate")
     if not snap["wire_remote_parity"]:
         failures.append("shipped-replica remote parity failed")
+    if args.min_compression > 0 \
+            and snap["compression_ratio"] < args.min_compression:
+        failures.append(
+            f"hot-frame compression {snap['compression_ratio']}x is below "
+            f"the {args.min_compression}x gate")
+    if not snap["fanout_parity"]:
+        failures.append(
+            "replica fan-out failed: a group member diverged or promote() "
+            "elected the wrong replica after the leader died")
     if snap["replay_speedup"] < args.min_replay_speedup:
         failures.append(
             f"batched replay speedup {snap['replay_speedup']}x is below the "
@@ -174,7 +210,11 @@ def main() -> None:
           f"sweep_ms={snap['sweep_ms']} (gate {args.max_sweep_ms}ms), "
           f"replica_bytes_ratio_min={snap['replica_bytes_ratio_min']}x, "
           f"ship_mbps={snap['ship_mbps']} "
-          f"(gate {args.min_ship_mbps} MB/s)")
+          f"(gate {args.min_ship_mbps} MB/s), "
+          f"compression={snap['compression_ratio']}x "
+          f"(gate {args.min_compression}x), "
+          f"fanout_lag_ms={snap['fanout_lag_ms']} "
+          f"[{snap['wire_transport']}/{snap['wire_codec']}]")
 
 
 if __name__ == "__main__":

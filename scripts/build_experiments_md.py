@@ -147,9 +147,11 @@ in-memory column-store ops — i.e., what the TPU adaptation actually costs.
         "e_replica_lag": "Replica catch-up: delta txn-log replay vs"
                          " full-copy (encoded wire bytes vs payload model;"
                          " parity hard-checked across a truncate)",
-        "e_wire_ship": "Cross-process wire shipping: spawned replica fed"
-                       " zero-copy columnar frames over a pipe (throughput"
-                       " + bit-parity + remote failover, all hard-checked)",
+        "e_wire_ship": "Cross-process wire shipping over the transport"
+                       " fabric (pipe/TCP): varint-compressed frames,"
+                       " 3-replica fan-out parity + leader-kill election,"
+                       " throughput + bit-parity + remote failover, all"
+                       " hard-checked",
         "replay_throughput": "Batched hot-plane txn-log replay vs"
                              " record-at-a-time (bit-parity enforced)",
         "steering_sweep": "Full Q1-Q7 steering sweep latency on a ~100k-row"

@@ -6,4 +6,6 @@ from repro.core.store import ColumnStore  # noqa: F401
 from repro.core.workqueue import WorkQueue  # noqa: F401
 from repro.core.supervisor import SecondarySupervisor, Supervisor  # noqa: F401
 from repro.core.steering import SteeringEngine  # noqa: F401
-from repro.core.replication import DeltaReplicator, ReplicaSet  # noqa: F401
+from repro.core.replication import (DeltaReplicator, ReplicaGroup,  # noqa: F401
+                                    ReplicaSet, ReplicationFabric,
+                                    ShippedDeltaReplicator)

@@ -58,6 +58,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import transport as transport_mod
 from repro.core import wire
 from repro.core.schema import Status
 from repro.core.store import ColumnStore
@@ -531,17 +532,23 @@ ReplicaSet = DeltaReplicator
 # ------------------------------------------------------- cross-process wire
 # Control tags of the replica wire protocol. Every parent request gets
 # exactly one reply; deltas are the only bulk payload and ship as wire
-# frames (repro.core.wire), not pickles.
-#   parent -> child:  I init (snapshot)   D delta frames   S sweep request
-#                     X state fetch       P promote/recover  Q quit
-#   child -> parent:  A ack(offset, version)   R sweep result
-#                     Y state   W recovered snapshot   E error (traceback)
+# frames (repro.core.wire), not pickles. The protocol is TRANSPORT-
+# AGNOSTIC: it needs only the framed send/recv of
+# :class:`repro.core.transport.Transport`, so the same replica process
+# serves over a multiprocessing pipe or a TCP socket (another host)
+# unchanged.
+#   parent -> child:  I init (snapshot + hello features)   D delta frames
+#                     S sweep request   X state fetch   P promote/recover
+#                     Q quit
+#   child -> parent:  A ack(offset, version)[+ accepted features on init]
+#                     R sweep result   Y state   W recovered snapshot
+#                     E error (traceback)
 _PIN_NONE = -(1 << 62)
 _DHDR = struct.Struct("<qqq")            # lo offset, hi offset, version pin
 _ACK = struct.Struct("<qq")              # absolute offset, store version
 
 
-def _shipped_replica_main(conn) -> None:
+def _shipped_replica_main(spec) -> None:
     """Entry point of the replica OS process.
 
     Owns a private :class:`ColumnStore` restored from the primary's
@@ -552,7 +559,17 @@ def _shipped_replica_main(conn) -> None:
     boundary. Steering sweeps (``S``) run HERE, against this process's
     store: the analyst never touches a primary array, not even a
     copy-on-write one.
+
+    ``spec`` is the picklable transport spec (``("pipe", conn)`` or
+    ``("tcp", host, port)``); the init exchange doubles as the HELLO:
+    the primary offers its codec list, the reply carries the one this
+    process accepted (wire frames self-describe, so decode needs no state
+    — the negotiation pins what the SENDER may emit).
     """
+    try:
+        conn = transport_mod.child_endpoint(spec)
+    except (OSError, EOFError):
+        return                           # primary gone before we connected
     store: Optional[ColumnStore] = None
     num_workers = 1
     offset = 0
@@ -570,10 +587,12 @@ def _shipped_replica_main(conn) -> None:
             if tag == b"Q":
                 return
             if tag == b"I":
-                snap, num_workers, offset = pickle.loads(body)
+                snap, num_workers, offset, hello = pickle.loads(body)
                 store = ColumnStore.restore(snap)
                 engine = None
-                conn.send_bytes(b"A" + _ACK.pack(offset, store.version))
+                accepted = wire.negotiate(hello.get("codecs", ("raw",)))
+                conn.send_bytes(b"A" + _ACK.pack(offset, store.version)
+                                + pickle.dumps({"codec": accepted}))
             elif tag == b"D":
                 lo, hi, pin = _DHDR.unpack_from(body)
                 recs = wire.decode_delta(body[_DHDR.size:])
@@ -622,8 +641,10 @@ class ShippedDeltaReplicator:
     """Delta replication across a REAL process boundary.
 
     The replica is a separate OS process (``spawn`` by default: a fresh
-    interpreter, no shared address space) fed over a pipe: every ``sync``
-    encodes the unconsumed log tail with the zero-copy wire codec, ships
+    interpreter, no shared address space) fed over a
+    :class:`repro.core.transport.Transport`: every ``sync`` encodes the
+    unconsumed log tail with the wire codec the hello exchange negotiated
+    (varint-compressed hot frames by default, raw as the fallback), ships
     the frames, and advances its consumer offset only when the remote acks
     the absolute offset back — so ``TxnLog.truncate``'s consumer-floor
     machinery bounds log memory EXACTLY as it does for in-process replicas,
@@ -631,11 +652,18 @@ class ShippedDeltaReplicator:
     (respawn restores from a fresh primary snapshot, which the floor
     guarantees is at or past every un-acked record) without parity loss.
 
+    ``transport="pipe"`` is the same-host default; ``transport="tcp"``
+    runs the identical protocol over a TCP socket — loopback in tests/CI,
+    any host:port in a real deployment (the ``REPRO_WIRE_TRANSPORT`` env
+    var flips the default, which is how CI exercises the socket path).
+
     ``remote_sweep`` runs a full Q1-Q7 steering sweep inside the replica
     process and ships the result back — the executor's ``analyst="remote"``
     mode, the paper's decoupled offline-analysis path made structural.
     ``recover``/``promote`` perform failover on the remote side (RUNNING
     tasks requeue THERE) and materialize the recovered WorkQueue locally.
+    :class:`ReplicaGroup` broadcasts to N of these — this class IS the
+    group's N=1 special case.
 
     Thread contract: all wire I/O serializes on one internal lock, so the
     executor's analyst thread (sweeps) and scheduler thread (syncs) can
@@ -643,14 +671,23 @@ class ShippedDeltaReplicator:
     """
 
     def __init__(self, wq: WorkQueue, sync_every: int = 64,
-                 start_method: str = "spawn"):
+                 start_method: str = "spawn",
+                 transport: Optional[str] = None,
+                 codec: Optional[str] = None):
         self.wq = wq
         self.sync_every = sync_every
+        self.transport = transport if transport is not None \
+            else os.environ.get("REPRO_WIRE_TRANSPORT", "pipe")
+        if self.transport not in ("pipe", "tcp"):
+            raise ValueError(f"unknown transport {self.transport!r}")
+        # what the hello OFFERS; the child's negotiate() picks the codec
+        self._offer = list(wire.CODECS) if codec is None else [codec, "raw"]
+        self.codec = "raw"
         self.consumer = f"replica-{next(_replica_seq)}"
         self._ctx = multiprocessing.get_context(start_method)
         self._mu = threading.Lock()
         self.process: Optional[multiprocessing.Process] = None
-        self.conn = None
+        self.tr: Optional[transport_mod.Transport] = None
         self.offset = 0
         self.replica_version = -1
         self.num_workers = wq.num_workers
@@ -658,7 +695,7 @@ class ShippedDeltaReplicator:
         self.sync_count = 0
         self.spawn_count = 0
         self.delta_bytes = 0             # payload cost model (payload_nbytes)
-        self.encoded_bytes = 0           # exact bytes that crossed the pipe
+        self.encoded_bytes = 0           # exact bytes that crossed the wire
         self.encode_wall_s = 0.0
         self.ship_wall_s = 0.0           # send + remote decode/apply + ack
         wq.log.register_consumer(self.consumer, 0)
@@ -679,35 +716,48 @@ class ShippedDeltaReplicator:
         snap = self.wq.store.snapshot()
         self.offset = max(self.offset,
                           self.wq.log.index_after_version(snap["version"]))
-        parent_conn, child_conn = self._ctx.Pipe()
+        listener = None
+        if self.transport == "tcp":
+            listener = transport_mod.TCPListener()
+            spec = ("tcp",) + listener.address
+        else:
+            parent_conn, child_conn = self._ctx.Pipe()
+            spec = ("pipe", child_conn)
         self.process = self._ctx.Process(
-            target=_shipped_replica_main, args=(child_conn,),
+            target=_shipped_replica_main, args=(spec,),
             daemon=True, name=f"{self.consumer}-remote")
-        self.process.start()
-        child_conn.close()
-        self.conn = parent_conn
+        try:
+            self.process.start()
+            if listener is not None:
+                self.tr = listener.accept(timeout=60)
+            else:
+                child_conn.close()
+                self.tr = transport_mod.PipeTransport(parent_conn)
+        finally:
+            if listener is not None:
+                listener.close()
         self.spawn_count += 1
         reply = self._request(b"I" + pickle.dumps(
-            (snap, self.wq.num_workers, self.offset),
+            (snap, self.wq.num_workers, self.offset,
+             {"codecs": self._offer}),
             protocol=pickle.HIGHEST_PROTOCOL))
         _, self.replica_version = _ACK.unpack_from(reply, 1)
+        hello = pickle.loads(reply[1 + _ACK.size:]) \
+            if len(reply) > 1 + _ACK.size else {}
+        self.codec = hello.get("codec", "raw")
         self.num_workers = self.wq.num_workers
         self.wq.log.ack(self.consumer, self.offset)
 
     def _kill(self, graceful: bool = False) -> None:
-        p, c = self.process, self.conn
+        p, t = self.process, self.tr
         self.process = None
-        self.conn = None
-        if c is not None:
+        self.tr = None
+        if t is not None:
             if graceful and p is not None and p.is_alive():
-                try:
-                    c.send_bytes(b"Q")
-                except (BrokenPipeError, OSError):
-                    pass
-            try:
-                c.close()
-            except OSError:
-                pass
+                # bounded best-effort: a dead or wedged child must never
+                # hang close()/__del__ on a full pipe or closed socket
+                t.try_send(b"Q", timeout=1.0)
+            t.close()
         if p is not None:
             p.join(timeout=5)
             if p.is_alive():
@@ -717,12 +767,12 @@ class ShippedDeltaReplicator:
     def _request(self, msg: bytes, timeout: float = 120.0) -> bytes:
         """One request/reply round trip. ``E`` replies kill the child (its
         store may hold a partial apply) and surface the remote traceback."""
-        self.conn.send_bytes(msg)
-        if not self.conn.poll(timeout):
+        self.tr.send_bytes(msg)
+        if not self.tr.poll(timeout):
             self._kill()
             raise TimeoutError(
                 f"remote replica silent for {timeout}s; killed")
-        reply = self.conn.recv_bytes()
+        reply = self.tr.recv_bytes()
         if reply[:1] == b"E":
             detail = pickle.loads(reply[1:])
             self._kill()
@@ -777,7 +827,7 @@ class ShippedDeltaReplicator:
             return 0
         recs = log.slice(self.offset, hi)
         t0 = time.perf_counter()
-        buf = wire.delta_to_bytes(recs)
+        buf = wire.delta_to_bytes(recs, codec=self.codec)
         t1 = time.perf_counter()
         try:
             reply = self._request(
@@ -852,10 +902,171 @@ class ShippedDeltaReplicator:
         return wq
 
     def close(self) -> None:
-        """Quit the replica process and stop pinning the compaction floor."""
+        """Quit the replica process and stop pinning the compaction floor.
+
+        Idempotent, and safe after a child crash: the graceful quit is a
+        bounded ``try_send`` (never blocks on a dead or full pipe), kills
+        fall back to terminate, and a second close is a no-op.
+        """
         with self._mu:
             self._kill(graceful=True)
         self._unregister()       # idempotent; detaches the GC finalizer too
+
+    def __del__(self):
+        # last-resort cleanup: must never raise or hang, even mid-interpreter
+        # shutdown or after __init__ died before the process came up
+        try:
+            self.close()
+        except Exception:                                 # noqa: BLE001
+            pass
+
+
+class ReplicaGroup:
+    """N-replica fan-out per partition: the paper's availability story at
+    cluster scale (§4 — replica placement owned by the DBMS, one consumer
+    group per partition), built by BROADCASTING the same wire deltas to N
+    independent :class:`ShippedDeltaReplicator` members.
+
+    Every member is its own registered ``TxnLog`` consumer with its own
+    acked offset, so the compaction floor is min-over-group BY CONSTRUCTION
+    (``TxnLog.truncate`` already takes the min across registered
+    consumers): a lagging member pins exactly the prefix it still needs,
+    and nothing else. ``sync`` broadcasts; per-member wall times feed the
+    fan-out lag metric (slowest minus fastest member — what an operator
+    watches for a straggling replica). ``remote_sweep`` round-robins
+    steering sweeps across members (the executor's ``analyst="remote"``
+    load-balancing); ``promote`` elects the most-caught-up LIVE member
+    (highest acked offset; liveness first — a dead leader's ack is still
+    durable via the consumer floor, but electing it would pay a respawn)
+    and releases the rest.
+
+    With ``n_replicas=1`` this is exactly one ShippedDeltaReplicator plus
+    a method veneer — the N=1 special case every pre-fabric caller keeps.
+    """
+
+    def __init__(self, wq: WorkQueue, n_replicas: int = 1,
+                 sync_every: int = 64, start_method: str = "spawn",
+                 transport: Optional[str] = None,
+                 codec: Optional[str] = None):
+        if n_replicas < 1:
+            raise ValueError("a replica group needs at least one member")
+        self.wq = wq
+        self.sync_every = sync_every
+        self.members: List[ShippedDeltaReplicator] = []
+        try:
+            for _ in range(n_replicas):
+                self.members.append(ShippedDeltaReplicator(
+                    wq, sync_every=sync_every, start_method=start_method,
+                    transport=transport, codec=codec))
+        except Exception:
+            self.close()                 # no half-built group leaks processes
+            raise
+        self._rr = 0
+        self.last_sync_wall_s: List[float] = [0.0] * n_replicas
+
+    # N=1 veneer: callers written against ShippedDeltaReplicator (the
+    # executor gotchas, notebooks) keep reading the same surface off a
+    # group — per-member figures aggregate conservatively.
+    @property
+    def remote_pid(self) -> Optional[int]:
+        """Pid of the first live member's process (see ``remote_pids``)."""
+        pids = self.remote_pids
+        return pids[0] if pids else None
+
+    @property
+    def remote_pids(self) -> List[int]:
+        return [m.remote_pid for m in self.members
+                if m.remote_pid is not None]
+
+    @property
+    def records_applied(self) -> int:
+        """Records every member has durably applied (min over the group —
+        the fan-out is only as caught up as its laggard)."""
+        return min(m.records_applied for m in self.members)
+
+    @property
+    def encoded_bytes(self) -> int:
+        """Total bytes the fan-out put on the wire (sum over members —
+        a broadcast pays the delta once per replica)."""
+        return sum(m.encoded_bytes for m in self.members)
+
+    @property
+    def codec(self) -> str:
+        return self.members[0].codec
+
+    # --------------------------------------------------------------- lag
+    def lag(self) -> int:
+        """Records the LAGGIEST member is behind (what maybe_sync bounds)."""
+        return max(m.lag() for m in self.members)
+
+    def lags(self) -> List[int]:
+        """Per-member lag in log records (index-aligned with members)."""
+        return [m.lag() for m in self.members]
+
+    def fanout_lag_s(self) -> float:
+        """Wall-time spread of the last broadcast sync: slowest member
+        minus fastest — the straggler signal of the fan-out."""
+        return max(self.last_sync_wall_s) - min(self.last_sync_wall_s)
+
+    def maybe_sync(self) -> bool:
+        if self.lag() >= self.sync_every:
+            self.sync()
+            return True
+        return False
+
+    # -------------------------------------------------------------- sync
+    def sync(self, upto_version: Optional[int] = None) -> int:
+        """Broadcast the unconsumed tail to every member; returns the max
+        records applied by any member (they may start at different acked
+        offsets after respawns). Ack/floor semantics are per member —
+        ``TxnLog.truncate`` keeps everything the slowest one still needs.
+        """
+        applied = 0
+        walls = []
+        for m in self.members:
+            t0 = time.perf_counter()
+            applied = max(applied, m.sync(upto_version))
+            walls.append(time.perf_counter() - t0)
+        self.last_sync_wall_s = walls
+        return applied
+
+    # ------------------------------------------------------------ analyst
+    def remote_sweep(self, now: float) -> Dict[str, object]:
+        """Q1-Q7 sweep on the next member, round-robin — N analysts share
+        the steering load and no single replica process becomes the
+        analytical hot spot."""
+        m = self.members[self._rr % len(self.members)]
+        self._rr += 1
+        return m.remote_sweep(now)
+
+    # ----------------------------------------------------------- failover
+    def elect(self) -> ShippedDeltaReplicator:
+        """The member ``promote`` would crown: most-caught-up (highest
+        acked offset, then replica version) among LIVE processes; if every
+        process is dead, the highest-acked one (its respawn snapshot is
+        guaranteed complete by the consumer floor)."""
+        def key(m: ShippedDeltaReplicator):
+            alive = m.process is not None and m.process.is_alive()
+            return (alive, m.offset, m.replica_version)
+        return max(self.members, key=key)
+
+    def promote(self) -> WorkQueue:
+        """Failover: promote the elected member (its replica store becomes
+        the new primary) and release every other member's process."""
+        leader = self.elect()
+        for m in self.members:
+            if m is not leader:
+                m.close()
+        return leader.promote()
+
+    def close(self) -> None:
+        for m in self.members:
+            m.close()
+
+
+# The fabric is the group plus the transport/codec policy baked into its
+# members — one name for callers that think in topology terms.
+ReplicationFabric = ReplicaGroup
 
 
 class FullCopyReplica:

@@ -379,9 +379,19 @@ class TxnLog:
     def consumer_floor(self) -> Optional[int]:
         """Smallest acked offset across registered consumers (None if no
         consumer is registered — then truncate without an explicit bound
-        is a no-op, the conservative default)."""
+        is a no-op, the conservative default). With an N-replica group
+        each member is its own consumer, so this IS the min-over-group
+        truncate floor: a lagging replica pins exactly its unconsumed
+        prefix."""
         with self._consumers_mu:
             return min(self._consumers.values()) if self._consumers else None
+
+    def consumer_offsets(self) -> Dict[str, int]:
+        """Snapshot of every registered consumer's acked offset (copy) —
+        the fabric's per-replica lag bookkeeping reads this, it never
+        reaches into the map."""
+        with self._consumers_mu:
+            return dict(self._consumers)
 
     def truncate(self, upto: Optional[int] = None) -> int:
         """Drop the consumed prefix: records with absolute index below

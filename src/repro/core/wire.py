@@ -22,6 +22,23 @@ pickled ``(op, store_version, payload)`` triples. Cold ops are rare by the
 paper's op inventory (Fig. 12), so the fallback's per-record cost never
 sits on the replication hot path.
 
+Compressed hot frames (codec ``"varint"``)
+------------------------------------------
+The integer planes of a hot run are nearly-free to shrink before they hit
+a NIC: ``store_version`` increments by ~1 per record, row indices within a
+run are nearly sorted, per-record row counts are tiny, and ``now``
+timestamps form near-arithmetic sequences. ``HOTC`` frames therefore ship
+delta + zigzag + varint streams (first value absolute, then diffs) for
+``versions``/``rows``/``worker``, plain varints for the per-record lengths
+(``off`` re-derives by cumsum), and a double-delta varint of the raw IEEE
+bit patterns for ``now`` (arithmetic timestamp sequences collapse to
+1-byte records; arbitrary floats degrade gracefully to <= 10 bytes).
+Domain outputs stay raw ``f64`` — simulation results don't varint. All
+encode/decode paths are vectorized NumPy (no per-record Python), decode is
+bit-exact vs the raw codec (the parity oracle, property-tested), and the
+codec is negotiated PER CONNECTION in the replication hello exchange —
+``raw`` stays the universal fallback.
+
 Frame layout (all little-endian)::
 
     header  : magic u16 | ftype u8 | opcode u8 | n_records u32 | body u64
@@ -30,6 +47,12 @@ Frame layout (all little-endian)::
               | claim only:  worker i32[n]
               | finish only: has_dom u8 | width u32
                              | dom f64[off[n] * width]  (has_dom == 1 only)
+    HOTC body: versions dzv[n] | lens v[n] | rows dzv[off[n]]
+              | now ddv[n]
+              | claim only:  worker dzv[n]
+              | finish only: has_dom u8 | width u32 | dom f64 (raw)
+              (v = varint, dzv = delta+zigzag varint with absolute first
+               value, ddv = double-delta varint of the u64 bit patterns)
     COLD body: pickle([(op, store_version, payload), ...])
 
 ``off`` is the cumulative per-record row count (n+1 entries), so a frame is
@@ -55,6 +78,7 @@ from repro.core.transactions import Txn, plane_run
 MAGIC = 0x5157                       # "WQ"
 FT_HOT = 1
 FT_COLD = 2
+FT_HOTC = 3                          # varint/delta compressed hot frame
 
 _HDR = struct.Struct("<HBBIQ")       # magic, ftype, opcode, n_records, body
 _FIN = struct.Struct("<BI")          # has_dom, dom width
@@ -62,9 +86,153 @@ _FIN = struct.Struct("<BI")          # has_dom, dom width
 _OPCODES = {"claim": 1, "claim_all": 2, "finish": 3}
 _OPS = {v: k for k, v in _OPCODES.items()}
 
+# Codecs this build can ENCODE and DECODE, in preference order. The
+# replication hello exchange offers the sender's list; the receiver picks
+# the first it supports (negotiate). "raw" is the universal fallback and
+# the bit-parity oracle the compressed path is tested against.
+CODECS = ("varint", "raw")
+
+
+def negotiate(offered) -> str:
+    """Receiver side of the hello exchange: first offered codec we speak."""
+    for c in offered:
+        if c in CODECS:
+            return c
+    return "raw"
+
 
 class WireError(ValueError):
     """Malformed or truncated wire frame."""
+
+
+# -------------------------------------------------------- varint primitives
+# All vectorized: the per-record Python toll is exactly what the hot-frame
+# path exists to avoid. Values are u64; signed streams go through zigzag
+# first. Encoded length is <= 10 bytes/value, 1 byte for values < 128 —
+# which deltas of nearly-sorted planes almost always are.
+def _zigzag(v: np.ndarray) -> np.ndarray:
+    """int64 -> uint64, small magnitudes (either sign) -> small codes."""
+    v = np.ascontiguousarray(v, np.int64)
+    return (v.astype(np.uint64) << np.uint64(1)) \
+        ^ (v >> np.int64(63)).astype(np.uint64)
+
+
+def _unzigzag(u: np.ndarray) -> np.ndarray:
+    u = np.ascontiguousarray(u, np.uint64)
+    return ((u >> np.uint64(1))
+            ^ (np.uint64(0) - (u & np.uint64(1)))).view(np.int64)
+
+
+def _varint_encode(u: np.ndarray) -> np.ndarray:
+    """LEB128-style encode of a u64 vector -> one uint8 stream."""
+    n = u.size
+    if n == 0:
+        return np.empty(0, np.uint8)
+    u = np.ascontiguousarray(u, np.uint64)
+    if int(u.max()) < 128:
+        # the dominant section shape: every delta fits one byte (unit row/
+        # version steps, tiny lens) — skip the whole length machinery
+        return u.astype(np.uint8)
+    nb = np.ones(n, np.int64)                   # bytes per value
+    tmp = u >> np.uint64(7)
+    while tmp.any():
+        nb += tmp != 0
+        tmp >>= np.uint64(7)
+    ends = np.cumsum(nb)
+    out = np.empty(int(ends[-1]), np.uint8)
+    pos = ends - nb
+    rem = u.copy()
+    alive = np.arange(n)
+    while alive.size:
+        chunk = rem[alive]
+        more = (chunk >> np.uint64(7)) != 0
+        out[pos[alive]] = (chunk & np.uint64(0x7F)).astype(np.uint8) \
+            | (more.astype(np.uint8) << 7)
+        rem[alive] >>= np.uint64(7)
+        pos[alive] += 1
+        alive = alive[more]
+    return out
+
+
+def _varint_decode(body: np.ndarray, count: int, cur: int):
+    """Decode ``count`` varints from ``body`` (uint8) starting at ``cur``.
+    Returns (uint64 values, cursor after the last consumed byte)."""
+    if count == 0:
+        return np.empty(0, np.uint64), cur
+    # a u64 varint is <= 10 bytes, so the section lives entirely within
+    # the next 10*count bytes — bounding the terminator scan keeps decode
+    # O(section), not O(sections x frame) (the raw f64 dom block trailing
+    # a finish frame would otherwise be re-scanned once per section)
+    b = body[cur: cur + 10 * count]
+    term = np.nonzero(b < 0x80)[0]
+    if term.size < count:
+        raise WireError("truncated varint section")
+    ends = term[:count]
+    starts = np.empty(count, np.int64)
+    starts[0] = 0
+    starts[1:] = ends[:-1] + 1
+    lens = ends - starts + 1
+    max_len = int(lens.max())
+    if max_len > 10:
+        raise WireError(f"varint of {max_len} bytes exceeds u64")
+    vals = np.zeros(count, np.uint64)
+    for j in range(max_len):
+        sel = lens > j
+        vals[sel] |= (b[starts[sel] + j].astype(np.uint64)
+                      & np.uint64(0x7F)) << np.uint64(7 * j)
+    return vals, cur + int(ends[-1]) + 1
+
+
+def _enc_delta_i64(vals: np.ndarray) -> np.ndarray:
+    """delta + zigzag + varint of an i64 vector (first value absolute)."""
+    vals = np.ascontiguousarray(vals, np.int64)
+    if vals.size == 0:
+        return np.empty(0, np.uint8)
+    d = np.empty(vals.size, np.int64)
+    d[0] = vals[0]
+    np.subtract(vals[1:], vals[:-1], out=d[1:])
+    return _varint_encode(_zigzag(d))
+
+
+def _dec_delta_i64(body: np.ndarray, count: int, cur: int):
+    u, cur = _varint_decode(body, count, cur)
+    return np.cumsum(_unzigzag(u), dtype=np.int64), cur
+
+
+def _enc_f64_dd(vals: np.ndarray) -> np.ndarray:
+    """Double-delta varint of the raw u64 bit patterns of an f64 vector.
+
+    Near-arithmetic timestamp sequences have near-constant bit-pattern
+    first differences within a binade, so the second difference is ~0 and
+    each record costs ~1 byte; the stream is exact for ANY floats (bit
+    patterns round-trip, NaN payloads included) — just not always small.
+    Layout: varint(bits[0]) | zz(d[0]) | zz(dd...), diffs modular in u64.
+    """
+    bits = np.ascontiguousarray(vals, np.float64).view(np.uint64)
+    n = bits.size
+    if n == 0:
+        return np.empty(0, np.uint8)
+    stream = np.empty(n, np.uint64)
+    stream[0] = bits[0]
+    if n > 1:
+        d = np.diff(bits)                       # modular u64
+        stream[1] = _zigzag(d[:1].view(np.int64))[0]
+        if n > 2:
+            stream[2:] = _zigzag(np.diff(d).view(np.int64))
+    return _varint_encode(stream)
+
+
+def _dec_f64_dd(body: np.ndarray, count: int, cur: int):
+    u, cur = _varint_decode(body, count, cur)
+    if count == 0:
+        return np.empty(0, np.float64), cur
+    bits = np.empty(count, np.uint64)
+    bits[0] = u[0]
+    if count > 1:
+        dd = np.ascontiguousarray(_unzigzag(u[1:])).view(np.uint64)
+        d = np.cumsum(dd, dtype=np.uint64)      # [d0, dd...] -> first diffs
+        bits[1:] = bits[0] + np.cumsum(d, dtype=np.uint64)
+    return bits.view(np.float64), cur
 
 
 def _mv(arr: np.ndarray):
@@ -91,7 +259,8 @@ def _dom_servable(fields: Dict[str, Any], n_rows: int) -> Optional[bool]:
 
 
 # ------------------------------------------------------------------ encode
-def _hot_frame(op: str, recs: Sequence[Txn]) -> Optional[List[Any]]:
+def _hot_frame(op: str, recs: Sequence[Txn],
+               codec: str = "raw") -> Optional[List[Any]]:
     """Frame chunks for one plane-contiguous hot run, or None when the run
     cannot be served off its plane (then it ships as a cold frame)."""
     sl = plane_run(recs)
@@ -103,28 +272,43 @@ def _hot_frame(op: str, recs: Sequence[Txn]) -> Optional[List[Any]]:
     off = f["off"].astype(np.int64)          # re-based copy: off[0] == 0
     off -= off[0]
     n_rows = int(off[-1])
-    chunks: List[Any] = [
-        None,                                # header patched in below
-        _mv(np.fromiter(map(attrgetter("store_version"), recs),
-                        np.int64, n)),
-        _mv(off),
-        _mv(f["rows"]),
-        _mv(f["now"]),
-    ]
-    if op == "claim":
-        chunks.append(_mv(f["worker"]))
-    elif op == "finish":
+    versions = np.fromiter(map(attrgetter("store_version"), recs),
+                           np.int64, n)
+    if codec == "varint":
+        chunks: List[Any] = [
+            None,                            # header patched in below
+            _mv(_enc_delta_i64(versions)),
+            _mv(_varint_encode(np.diff(off).astype(np.uint64))),
+            _mv(_enc_delta_i64(f["rows"])),
+            _mv(_enc_f64_dd(f["now"])),
+        ]
+        if op == "claim":
+            chunks.append(_mv(_enc_delta_i64(f["worker"])))
+    elif codec == "raw":
+        chunks = [
+            None,
+            _mv(versions),
+            _mv(off),
+            _mv(f["rows"]),
+            _mv(f["now"]),
+        ]
+        if op == "claim":
+            chunks.append(_mv(f["worker"]))
+    else:
+        raise ValueError(f"unknown wire codec {codec!r}")
+    if op == "finish":
         servable = _dom_servable(f, n_rows)
         if servable is None:
             return None
         if servable:
             dom = f["dom"]
             chunks.append(_FIN.pack(1, dom.shape[1]))
-            chunks.append(_mv(dom))
+            chunks.append(_mv(dom))          # sim outputs don't varint
         else:
             chunks.append(_FIN.pack(0, 0))
     body = sum(len(c) for c in chunks[1:])
-    chunks[0] = _HDR.pack(MAGIC, FT_HOT, _OPCODES[op], n, body)
+    chunks[0] = _HDR.pack(MAGIC, FT_HOT if codec == "raw" else FT_HOTC,
+                          _OPCODES[op], n, body)
     return chunks
 
 
@@ -135,26 +319,35 @@ def _cold_frame(recs: Sequence[Txn]) -> List[Any]:
     return [_HDR.pack(MAGIC, FT_COLD, 0, len(recs), len(blob)), blob]
 
 
-def iter_frames(records: Iterable[Txn]) -> Iterable[List[Any]]:
+def iter_frames(records: Iterable[Txn],
+                codec: str = "raw") -> Iterable[List[Any]]:
     """Frames (each a list of bytes-like chunks) for a log delta, one frame
     per consecutive same-op run — the unit :func:`replay` coalesces."""
     for op, run in itertools.groupby(records, key=attrgetter("op")):
         recs = list(run)
-        frame = _hot_frame(op, recs) if op in _OPCODES else None
+        frame = _hot_frame(op, recs, codec) if op in _OPCODES else None
         yield frame if frame is not None else _cold_frame(recs)
 
 
-def delta_to_bytes(records: Iterable[Txn]) -> bytes:
+def delta_to_bytes(records: Iterable[Txn], codec: str = "raw") -> bytes:
     """One contiguous buffer holding every frame of the delta — what a
     ``send_bytes`` ships (a writev-style transport can send ``iter_frames``
     chunks without this join)."""
-    return b"".join(c for frame in iter_frames(records) for c in frame)
+    return b"".join(c for frame in iter_frames(records, codec)
+                    for c in frame)
 
 
-def frames_nbytes(records: Iterable[Txn]) -> int:
-    """Exact encoded wire size of a delta: ``len(delta_to_bytes(records))``
-    without materializing the hot buffers (cold runs must still pickle —
-    their size is not knowable otherwise; they are rare by construction)."""
+def frames_nbytes(records: Iterable[Txn], codec: str = "raw") -> int:
+    """Exact encoded wire size of a delta: ``len(delta_to_bytes(records))``.
+
+    The raw codec is sized analytically without materializing the hot
+    buffers (cold runs must still pickle — their size is not knowable
+    otherwise; they are rare by construction). Varint sections only know
+    their size by encoding, so other codecs sum real frames.
+    """
+    if codec != "raw":
+        return sum(len(c) for frame in iter_frames(records, codec)
+                   for c in frame)
     total = 0
     for op, run in itertools.groupby(records, key=attrgetter("op")):
         recs = list(run)
@@ -178,6 +371,26 @@ def frames_nbytes(records: Iterable[Txn]) -> int:
             [(r.op, r.store_version, r.payload) for r in recs],
             protocol=pickle.HIGHEST_PROTOCOL))
     return total
+
+
+def frames_nbytes_detail(records: Iterable[Txn],
+                         codec: str = "raw") -> Dict[str, int]:
+    """Encoded size split into hot and cold frame bytes.
+
+    Cold frames are byte-identical across codecs (pickles don't
+    re-encode), so ``hot`` is the comparable base for compression ratios:
+    ``frames_nbytes_detail(recs, "raw")["hot"] /
+    frames_nbytes_detail(recs, "varint")["hot"]`` is what the varint codec
+    saves on the planes it actually touches.
+    """
+    hot = cold = 0
+    for frame in iter_frames(records, codec):
+        size = sum(len(c) for c in frame)
+        if frame[0][2] == FT_COLD:            # header byte 2 is ftype
+            cold += size
+        else:
+            hot += size
+    return {"total": hot + cold, "hot": hot, "cold": cold}
 
 
 # ------------------------------------------------------------------ decode
@@ -277,6 +490,41 @@ def decode_delta(buf) -> List[WireTxn]:
         if ftype == FT_COLD:
             for op, sv, payload in pickle.loads(buf[pos:end]):
                 out.append(WireTxn(op, sv, None, -1, payload))
+        elif ftype == FT_HOTC:
+            op = _OPS.get(opcode)
+            if op is None:
+                raise WireError(f"unknown hot opcode {opcode}")
+            body_u8 = np.frombuffer(buf, np.uint8, body, pos)
+            cur = 0
+            versions, cur = _dec_delta_i64(body_u8, n, cur)
+            lens, cur = _varint_decode(body_u8, n, cur)
+            off = np.zeros(n + 1, np.int64)
+            np.cumsum(lens.astype(np.int64), out=off[1:])
+            n_rows = int(off[-1])
+            rows, cur = _dec_delta_i64(body_u8, n_rows, cur)
+            now, cur = _dec_f64_dd(body_u8, n, cur)
+            worker = dom = None
+            has_dom = False
+            if op == "claim":
+                w64, cur = _dec_delta_i64(body_u8, n, cur)
+                worker = w64.astype(np.int32)
+            elif op == "finish":
+                flag, width = _FIN.unpack_from(buf, pos + cur)
+                cur += _FIN.size
+                has_dom = bool(flag)
+                if has_dom:
+                    dom = np.frombuffer(
+                        buf, np.float64, n_rows * width, pos + cur
+                    ).reshape(n_rows, width) if width else \
+                        np.empty((n_rows, 0), np.float64)
+                    cur += 8 * n_rows * width
+            if cur != body:
+                raise WireError(
+                    f"compressed hot frame body mismatch: "
+                    f"parsed {cur} != {body}")
+            plane = _RxPlane(n, off, rows, now, worker, dom, has_dom)
+            out.extend(WireTxn(op, int(versions[i]), plane, i)
+                       for i in range(n))
         elif ftype == FT_HOT:
             op = _OPS.get(opcode)
             if op is None:

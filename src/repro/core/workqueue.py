@@ -116,9 +116,19 @@ class WorkQueue:
 
     def compact_log(self) -> int:
         """Drop the txn-log prefix every registered consumer (checkpointer,
-        replicas) has acked past — bounds long-run log memory. A no-op when
-        no consumer is registered (nothing is provably durable elsewhere)."""
+        replicas — each member of a replica GROUP registers independently,
+        so the floor is min-over-group) has acked past — bounds long-run
+        log memory. A no-op when no consumer is registered (nothing is
+        provably durable elsewhere)."""
         return self.log.truncate()
+
+    def consumer_lags(self) -> Dict[str, int]:
+        """Log records each registered consumer still has to consume —
+        the per-replica lag surface the replication fabric (and its
+        ``fanout_lag`` benchmark metric) reports from."""
+        end = len(self.log)
+        return {name: end - off
+                for name, off in self.log.consumer_offsets().items()}
 
     # -------------------------------------------------------------- cursors
     def invalidate_cursors(self, rows: Optional[np.ndarray] = None) -> None:

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.risers_workflow import WorkflowConfig
-from repro.core.replication import DeltaReplicator, ShippedDeltaReplicator
+from repro.core.replication import DeltaReplicator, ReplicaGroup
 from repro.core.schema import Status
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import SecondarySupervisor, Supervisor
@@ -50,7 +50,7 @@ class TrainExecutor:
                  base_lr: float = 3e-4, data_cfg: Optional[DataConfig] = None,
                  checkpointer=None, checkpoint_every: int = 50,
                  steer_every: int = 0, seed: int = 0,
-                 analyst: str = "snapshot"):
+                 analyst: str = "snapshot", replicas: int = 1):
         self.cfg = cfg
         self.num_workers = num_workers
         self.base_lr = base_lr
@@ -68,9 +68,12 @@ class TrainExecutor:
         # log — the paper's "steering never touches the transactional hot
         # path", made structural: the analyst thread never holds a single
         # live array. analyst="remote": the replica lives in a SEPARATE OS
-        # process fed wire-encoded deltas over a pipe; sweeps execute in
-        # that process and only the result ships back — the paper's
-        # distributed topology (analytical node != data node) for real.
+        # process fed wire-encoded deltas over a transport (pipe, or TCP
+        # for another host); sweeps execute in that process and only the
+        # result ships back — the paper's distributed topology (analytical
+        # node != data node) for real. ``replicas`` > 1 fans the remote
+        # mode out to an N-member ReplicaGroup: deltas broadcast to every
+        # member, sweeps round-robin across them.
         if analyst not in ("snapshot", "replica", "remote"):
             raise ValueError(f"unknown analyst mode {analyst!r}")
         self.analyst = analyst
@@ -79,7 +82,7 @@ class TrainExecutor:
             # nothing ships in-process: skip the wire-size accounting
             self.replica = DeltaReplicator(self.wq, account_encoded=False)
         elif analyst == "remote":
-            self.replica = ShippedDeltaReplicator(self.wq)
+            self.replica = ReplicaGroup(self.wq, n_replicas=replicas)
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.steer_every = steer_every

@@ -101,3 +101,68 @@ def test_prov_document_is_w3c_shaped():
                         "wasDerivedFrom"}
     assert len(doc["activity"]) == 8
     assert len(doc["wasDerivedFrom"]) == 4
+
+
+def test_q8_and_prune_race_concurrent_claim_all():
+    """Q8 patches and prunes are LIVE-store transactions; claims mutate the
+    same partitions concurrently. Interleaved under the commit lock, the
+    incremental ready counts (and every other invariant) must survive —
+    check_invariants recounts them exactly."""
+    import threading
+
+    rng = np.random.default_rng(0)
+    wq = WorkQueue(num_workers=8)
+    steer = SteeringEngine(wq)
+    wq.add_tasks(0, 400, domain_in=rng.uniform(0, 1, (400, 3)))
+    stop = threading.Event()
+    errors = []
+    steered = {"patched": 0, "pruned": 0}
+
+    def analyst():
+        i = 0
+        try:
+            while not stop.is_set():
+                steered["patched"] += steer.q8_patch_ready(
+                    0, "in0", 5.0, predicate=lambda v: v > 0.6)
+                steered["pruned"] += steer.prune(
+                    "in1", 0.0, 0.001 * (i % 40))
+                i += 1
+        except Exception as e:                            # noqa: BLE001
+            errors.append(e)
+
+    t = threading.Thread(target=analyst)
+    t.start()
+    try:
+        now = 0.0
+        for r in range(40):
+            out = wq.claim_all(k=2, now=now)
+            rows = np.concatenate([v for v in out.values() if len(v)]) \
+                if any(len(v) for v in out.values()) \
+                else np.empty(0, np.int64)
+            if len(rows):
+                wq.finish(rows, now=now + 0.5,
+                          domain_out=rng.normal(0.5, 0.3, (len(rows), 3)))
+            wq.add_tasks(0, 10, domain_in=rng.uniform(0, 1, (10, 3)),
+                         now=now)
+            now += 1.0
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert steered["pruned"] > 0           # the race actually happened
+    wq.check_invariants()                  # ready counts == exact recount
+    # conservation: every row is in exactly one state, none lost or forged
+    st = wq.store.col("status")
+    assert wq.store.n_rows == 400 + 40 * 10
+    counts = wq.counts()
+    assert sum(counts.values()) - counts["EMPTY"] == wq.store.n_rows
+    # every row a prune transition ever touched must STILL be PRUNED:
+    # PRUNED is terminal and claim_all only takes READY rows, so a row
+    # resurrected to RUNNING here would mean a claim interleaved inside
+    # the prune's read-predicate/write window (the race this test exists
+    # to catch)
+    pruned_rows = [r.payload["rows"] for r in wq.log.tail(0)
+                   if r.op == "steer_prune"]
+    assert pruned_rows                     # the race actually pruned rows
+    ever_pruned = np.concatenate(pruned_rows)
+    assert (st[ever_pruned] == int(Status.PRUNED)).all()

@@ -1,0 +1,158 @@
+"""Replication fabric: N-replica fan-out groups over the wire transports.
+
+A :class:`ReplicaGroup` broadcasts the same deltas to N independent
+``ShippedDeltaReplicator`` members (each its own txn-log consumer). These
+tests pin the fabric semantics: member-for-member bit-parity after a
+broadcast sync, the min-over-group compaction floor (a lagging member pins
+exactly its unconsumed prefix), round-robin sweep dispatch, and failover
+election — promote() must crown the highest-acked SURVIVOR after the
+leader dies.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Status, SteeringEngine, WorkQueue
+from repro.core.replication import ReplicaGroup, ReplicationFabric, \
+    ShippedDeltaReplicator
+
+
+def sweep_key(res):
+    return json.dumps(res, sort_keys=True, default=str)
+
+
+def churn(wq, rng, rounds=3):
+    for r in range(rounds):
+        out = wq.claim_all(k=1, now=float(r))
+        rows = np.concatenate([v for v in out.values() if len(v)]) \
+            if any(len(v) for v in out.values()) else np.empty(0, np.int64)
+        if not len(rows):
+            break
+        half = rows[: len(rows) // 2]
+        if len(half):
+            wq.finish(half, now=float(r) + 0.5,
+                      domain_out=rng.normal(0.5, 0.3, (len(half), 3)))
+
+
+def test_group_fanout_parity_and_min_over_group_floor():
+    rng = np.random.default_rng(0)
+    wq = WorkQueue(num_workers=3)
+    steer = SteeringEngine(wq)
+    grp = ReplicaGroup(wq, n_replicas=3, sync_every=8)
+    assert ReplicationFabric is ReplicaGroup
+    assert len({m.consumer for m in grp.members}) == 3   # independent acks
+    wq.add_tasks(0, 24, domain_in=rng.uniform(0, 1, (24, 3)))
+    churn(wq, rng)
+
+    # only two members sync: the laggard's ack (its spawn offset) is the
+    # compaction floor, so nothing it still needs may be dropped
+    grp.members[0].sync()
+    grp.members[1].sync()
+    laggard_off = grp.members[2].offset
+    wq.compact_log()
+    assert wq.log.base <= laggard_off
+    lags = wq.consumer_lags()
+    assert lags[grp.members[2].consumer] > 0
+    assert lags[grp.members[0].consumer] == 0
+
+    # laggard catches up -> the floor advances and truncation happens
+    grp.members[2].sync()
+    assert wq.compact_log() > 0
+    churn(wq, rng, rounds=2)               # broadcast ACROSS the truncate
+
+    view = wq.store.snapshot_view()
+    grp.sync(upto_version=view.version)
+    assert grp.lag() == 0 and grp.lags() == [0, 0, 0]
+    ref = sweep_key(steer.run_all(7.0, view=view))
+    for m in grp.members:
+        assert sweep_key(m.remote_sweep(7.0)) == ref
+        state = m.fetch_remote_state()
+        for name in wq.store.cols:
+            assert np.array_equal(view.col(name),
+                                  state["snapshot"]["cols"][name],
+                                  equal_nan=True), (m.consumer, name)
+    assert grp.fanout_lag_s() >= 0.0
+    grp.close()
+    for m in grp.members:
+        assert not wq.log.has_consumer(m.consumer)
+
+
+def test_group_round_robin_sweep_dispatch():
+    wq = WorkQueue(num_workers=2)
+    grp = ReplicaGroup(wq, n_replicas=3)
+    calls = []
+    for i, m in enumerate(grp.members):
+        m.remote_sweep = (lambda j: lambda now: calls.append(j) or {})(i)
+    for _ in range(7):
+        grp.remote_sweep(0.0)
+    assert calls == [0, 1, 2, 0, 1, 2, 0]
+    grp.close()
+
+
+def test_group_promote_elects_highest_acked_survivor():
+    rng = np.random.default_rng(1)
+    wq = WorkQueue(num_workers=2)
+    grp = ReplicaGroup(wq, n_replicas=3, sync_every=4)
+    wq.add_tasks(0, 16, domain_in=rng.uniform(0, 1, (16, 3)))
+    churn(wq, rng, rounds=2)
+    # stagger the acks: member0 (leader) > member1 > member2
+    grp.members[0].sync()
+    grp.members[1].sync()
+    wq.add_tasks(0, 4, now=5.0)
+    grp.members[0].sync()
+    assert grp.members[0].offset > grp.members[1].offset \
+        > grp.members[2].offset
+    assert grp.elect() is grp.members[0]
+
+    grp.members[0].process.kill()          # the leader dies
+    grp.members[0].process.join()
+    elected = grp.elect()
+    assert elected is grp.members[1]       # highest-acked SURVIVOR
+
+    wq2 = grp.promote()                    # member1's store becomes primary
+    assert (wq2.store.col("status") != int(Status.RUNNING)).all()
+    assert wq2.store.n_rows == wq.store.n_rows
+    for name in ("task_id", "activity_id", "in0", "out0"):
+        assert np.array_equal(wq2.store.col(name), wq.store.col(name),
+                              equal_nan=True), name
+    for m in grp.members:                  # promote released everyone
+        assert not wq.log.has_consumer(m.consumer)
+
+
+def test_group_n1_is_the_shipped_replicator_special_case():
+    rng = np.random.default_rng(2)
+    wq = WorkQueue(num_workers=2)
+    grp = ReplicaGroup(wq, n_replicas=1)
+    assert len(grp.members) == 1
+    assert isinstance(grp.members[0], ShippedDeltaReplicator)
+    wq.add_tasks(0, 8, domain_in=rng.uniform(0, 1, (8, 3)))
+    churn(wq, rng, rounds=1)
+    view = wq.store.snapshot_view()
+    grp.sync(upto_version=view.version)
+    steer = SteeringEngine(wq)
+    assert sweep_key(grp.remote_sweep(3.0)) \
+        == sweep_key(steer.run_all(3.0, view=view))
+    grp.close()
+
+
+def test_group_rejects_empty_and_cleans_up_on_spawn_failure(monkeypatch):
+    wq = WorkQueue(num_workers=2)
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaGroup(wq, n_replicas=0)
+    # member #2 failing to spawn must not leak member #1's process/consumer
+    import repro.core.replication as R
+    real_init = R.ShippedDeltaReplicator.__init__
+    built = []
+
+    def flaky_init(self, *a, **kw):
+        if len(built) >= 1:
+            raise RuntimeError("no more replicas for you")
+        real_init(self, *a, **kw)
+        built.append(self)
+
+    monkeypatch.setattr(R.ShippedDeltaReplicator, "__init__", flaky_init)
+    with pytest.raises(RuntimeError, match="no more replicas"):
+        ReplicaGroup(wq, n_replicas=2)
+    assert built and built[0].process is None    # closed, not leaked
+    assert not wq.log.has_consumer(built[0].consumer)
