@@ -38,9 +38,10 @@ DESCRIPTIONS = {
                                      "d-Chiron (partitioned WQ) makespan",
     "e_replica_lag": "delta txn-log replay vs full-copy replica sync "
                      "(encoded wire bytes; parity across a truncate)",
-    "e_wire_ship": "cross-process replicas over pipe/TCP: ship "
-                   "throughput, varint compression, 3-replica fan-out "
-                   "parity + leader-kill promote (all hard-checked)",
+    "e_wire_ship": "cross-process replicas over pipe/TCP: pipelined "
+                   "bulk + incremental ship throughput, varint "
+                   "compression, concurrent 3-replica fan-out parity + "
+                   "leader-kill promote (all hard-checked)",
     "claim_kernel": "claim_all fast-path vs seed loop at k=1/k=4 "
                     "(the >=5x gate) + device wq_claim op latency",
     "replay_throughput": "batched hot-plane txn-log replay vs "
@@ -152,11 +153,13 @@ def _headline(name: str, rows) -> str:
             return f"full/delta_bytes_min={br}x;sweep_equal={eq}"
         if name == "e_wire_ship":
             mbps = min(r["ship_mbps_bulk"] for r in rows)
+            inc = min(r["ship_mbps"] for r in rows)
             comp = min(r["compression_ratio"] for r in rows)
             eq = all(r["cols_equal"] and r["sweep_equal"]
                      and r["fanout_sweep_equal"] for r in rows)
             tr = rows[0]["transport"]
-            return (f"ship_mbps_bulk_min={mbps};compression={comp}x;"
+            return (f"ship_mbps_bulk_min={mbps};ship_mbps_inc_min={inc};"
+                    f"compression={comp}x;"
                     f"transport={tr};remote+fanout_parity={eq}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")

@@ -148,10 +148,12 @@ in-memory column-store ops — i.e., what the TPU adaptation actually costs.
                          " full-copy (encoded wire bytes vs payload model;"
                          " parity hard-checked across a truncate)",
         "e_wire_ship": "Cross-process wire shipping over the transport"
-                       " fabric (pipe/TCP): varint-compressed frames,"
-                       " 3-replica fan-out parity + leader-kill election,"
-                       " throughput + bit-parity + remote failover, all"
-                       " hard-checked",
+                       " fabric (pipe/TCP): pipelined background shipper"
+                       " (bulk best-of-3 e2e + producer-visible"
+                       " incremental vs blocking), adaptive varint"
+                       " frames, concurrent 3-replica fan-out parity +"
+                       " leader-kill election, throughput + bit-parity +"
+                       " remote failover, all hard-checked",
         "replay_throughput": "Batched hot-plane txn-log replay vs"
                              " record-at-a-time (bit-parity enforced)",
         "steering_sweep": "Full Q1-Q7 steering sweep latency on a ~100k-row"

@@ -44,15 +44,19 @@ a record a lagging replica still needs.
 """
 from __future__ import annotations
 
+import abc
+import concurrent.futures
 import itertools
 import multiprocessing
 import os
 import pickle
+import queue
 import struct
 import threading
 import time
 import traceback
 import weakref
+from collections import deque
 from operator import attrgetter, itemgetter
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
@@ -286,11 +290,8 @@ def _plane_finish(store: ColumnStore, plane, lo: int, hi: int) -> bool:
     return True
 
 
-def _run_via_plane(store: ColumnStore, op: str, recs: Sequence[Txn]) -> bool:
-    sl = plane_run(recs)
-    if sl is None:
-        return False
-    plane, lo, hi = sl
+def _apply_plane(store: ColumnStore, op: str, plane, lo: int,
+                 hi: int) -> bool:
     if op == "claim":
         _plane_claim(store, plane, lo, hi)
     elif op == "claim_all":
@@ -300,6 +301,14 @@ def _run_via_plane(store: ColumnStore, op: str, recs: Sequence[Txn]) -> bool:
     else:
         return False
     return True
+
+
+def _run_via_plane(store: ColumnStore, op: str, recs: Sequence[Txn]) -> bool:
+    sl = plane_run(recs)
+    if sl is None:
+        return False
+    plane, lo, hi = sl
+    return _apply_plane(store, op, plane, lo, hi)
 
 
 def replay_reference(store: ColumnStore, records: Iterable[Txn]) -> int:
@@ -370,10 +379,116 @@ def replay(store: ColumnStore, records: Iterable[Txn],
     return n
 
 
+def replay_runs(store: ColumnStore, runs) -> int:
+    """Run-level replay of :func:`repro.core.wire.decode_delta_runs`
+    output — the replica child's D-message hot path.
+
+    Bit-identical to ``replay(store, decode_delta(buf))`` (shared plane
+    serving, property-tested parity): hot frames apply straight off their
+    receive plane with NO per-record object materialization — the
+    dominant decode+replay cost on bulk catch-ups — and fall back to the
+    record paths only for the shapes the plane cannot serve (single
+    records, non-servable finish runs, cold frames)."""
+    n = 0
+    for dr in runs:
+        if dr.plane is not None and dr.n > 1:
+            if not _apply_plane(store, dr.op, dr.plane, 0, dr.n):
+                _BATCH[dr.op](store,
+                              [r.payload for r in dr.materialize()])
+            store.set_version(dr.last_version)
+            n += dr.n
+        else:
+            for rec in (dr.recs if dr.recs is not None
+                        else dr.materialize()):
+                try:
+                    fn = _APPLY[rec.op]
+                except KeyError:
+                    raise ValueError(
+                        f"no apply-op for txn log record {rec.op!r}; "
+                        "DeltaReplicator cannot replay it") from None
+                fn(store, rec.payload)
+                store.set_version(rec.store_version)
+                n += 1
+    return n
+
+
 _replica_seq = itertools.count()
 
 
-class DeltaReplicator:
+class Replicator(abc.ABC):
+    """The one replication surface the executor (and everything above it)
+    programs against — the API consolidation of the four arms that accreted
+    over PRs 2-5: :class:`DeltaReplicator`, :class:`ShippedDeltaReplicator`,
+    :class:`ReplicaGroup`, :class:`FullCopyReplica`.
+
+    Contract:
+
+    * ``sync(upto_version=None)`` catches the replica up, forward-only;
+      with ``upto_version`` the replica lands exactly AT that committed
+      store version when the call returns. Pipelined arms may return at
+      ENQUEUE for the plain ``sync()`` — ``sync(upto_version=...)`` and
+      :meth:`flush` are the barriers.
+    * ``lag()`` / ``maybe_sync()`` — records behind, and the cadence
+      helper bounding it by ``sync_every``.
+    * ``recover()`` materializes a consistent :class:`WorkQueue` after
+      primary loss; ``promote()`` is recover + release.
+    * ``close()`` releases everything (consumer registrations, replica
+      processes, shipper threads). Idempotent; never hangs; never raises.
+    * ``stats()`` is the uniform observability dict benchmarks read.
+
+    Construct concrete replicators through :func:`make_replicator`; only
+    tests and benchmarks reach for the classes directly.
+    """
+
+    sync_every: int = 64
+
+    @abc.abstractmethod
+    def sync(self, upto_version: Optional[int] = None) -> int:
+        """Catch up; returns records shipped/applied/staged this call."""
+
+    @abc.abstractmethod
+    def lag(self) -> int:
+        """Log records the replica is behind the primary."""
+
+    @abc.abstractmethod
+    def recover(self) -> WorkQueue:
+        """Materialize a consistent WorkQueue from the replica."""
+
+    @abc.abstractmethod
+    def close(self) -> None:
+        """Release replica resources. Idempotent; never hangs."""
+
+    def maybe_sync(self) -> bool:
+        """Sync when lag reached ``sync_every`` — the cadence helper."""
+        if self.lag() >= self.sync_every:
+            self.sync()
+            return True
+        return False
+
+    def flush(self) -> None:
+        """Barrier for pipelined arms: returns once every enqueued delta
+        is shipped AND acked, re-raising any background ship error.
+        Synchronous arms are always flushed — the default is a no-op."""
+
+    def promote(self) -> WorkQueue:
+        """Failover: the recovered WorkQueue becomes the primary and the
+        replica's resources are released."""
+        wq = self.recover()
+        self.close()
+        return wq
+
+    def stats(self) -> Dict[str, float]:
+        """Uniform observability counters (benchmark/operator surface)."""
+        return {
+            "records_applied": int(getattr(self, "records_applied", 0)),
+            "encoded_bytes": int(getattr(self, "encoded_bytes", 0)),
+            "sync_count": int(getattr(self, "sync_count", 0)),
+            "lag": int(self.lag()),
+            "fanout_lag_s": 0.0,
+        }
+
+
+class DeltaReplicator(Replicator):
     """Replica catch-up by incremental txn-log replay.
 
     Restores a mutable shadow store from one ``snapshot_view()`` at
@@ -426,12 +541,6 @@ class DeltaReplicator:
     def lag(self) -> int:
         """Log records the replica is behind the primary."""
         return len(self.wq.log) - self.offset
-
-    def maybe_sync(self) -> bool:
-        if self.lag() >= self.sync_every:
-            self.sync()
-            return True
-        return False
 
     # -------------------------------------------------------------- sync
     def sync(self, upto_version: Optional[int] = None) -> int:
@@ -547,6 +656,18 @@ _PIN_NONE = -(1 << 62)
 _DHDR = struct.Struct("<qqq")            # lo offset, hi offset, version pin
 _ACK = struct.Struct("<qq")              # absolute offset, store version
 
+# Pipelined-shipper tuning: sentinel that stops the shipper thread, and the
+# coalescing target — consecutive staged chunks merge into one D message
+# until its encoded size reaches this, so tiny per-sync deltas stop paying
+# one round trip each (the ship_mbps_incremental collapse of PR 5). The
+# target is deliberately SMALLER than one staged chunk's encoded size on
+# bulk catch-ups: big backlogs then split into several in-flight messages,
+# and the remote's decode+replay of message k overlaps the encode and ack
+# accounting of k+1 — one round trip per ~64 KiB costs ~nothing, while the
+# overlap is where the pipelined bulk throughput comes from.
+_SHIP_QUIT = object()
+_COALESCE_TARGET_BYTES = 64 << 10
+
 
 def _shipped_replica_main(spec) -> None:
     """Entry point of the replica OS process.
@@ -595,12 +716,14 @@ def _shipped_replica_main(spec) -> None:
                                 + pickle.dumps({"codec": accepted}))
             elif tag == b"D":
                 lo, hi, pin = _DHDR.unpack_from(body)
-                recs = wire.decode_delta(body[_DHDR.size:])
-                replay(store, recs)
-                for r in recs:
-                    if r.op == "resize":     # topology rides the log too
-                        num_workers = int(r.payload["workers"])
-                        engine = None
+                runs = wire.decode_delta_runs(body[_DHDR.size:])
+                replay_runs(store, runs)
+                for dr in runs:
+                    # resize is a cold op: only cold frames carry records
+                    for r in (dr.recs or ()):
+                        if r.op == "resize":  # topology rides the log too
+                            num_workers = int(r.payload["workers"])
+                            engine = None
                 if pin != _PIN_NONE and pin > store.version:
                     store.set_version(pin)
                 offset = hi
@@ -637,7 +760,7 @@ def _shipped_replica_main(spec) -> None:
                 return
 
 
-class ShippedDeltaReplicator:
+class ShippedDeltaReplicator(Replicator):
     """Delta replication across a REAL process boundary.
 
     The replica is a separate OS process (``spawn`` by default: a fresh
@@ -665,15 +788,36 @@ class ShippedDeltaReplicator:
     :class:`ReplicaGroup` broadcasts to N of these — this class IS the
     group's N=1 special case.
 
+    Pipelined mode (``pipelined=True``, the factory default): ``sync()``
+    stages the tail (captures the log records and their hot-plane column
+    views on the CALLER's thread — the log's producer thread, per the
+    TxnLog threading contract) and returns at ENQUEUE; a daemon shipper
+    thread encodes (once, via a shareable :class:`repro.core.wire.
+    DeltaEncoder`), ships with a bounded unacked window, and harvests acks
+    — encode overlaps the remote's decode+replay instead of serializing
+    with it. The transactional semantics are unchanged: consumer offset,
+    ``log.ack`` (the compaction floor), and every byte counter advance
+    ONLY on ack; the bounded queue blocks the producer when full so the
+    replica lag stays bounded; ``flush()``/``sync(upto_version=...)`` are
+    the barriers and the error surface (a background ship failure re-raises
+    there, or on the next ``sync``). ``close``/``recover``/``promote``
+    drain the queue first. Staging must stay single-producer (the same
+    thread that appends to the log) — which TxnLog already requires.
+
     Thread contract: all wire I/O serializes on one internal lock, so the
     executor's analyst thread (sweeps) and scheduler thread (syncs) can
-    share the replicator; the child services one request at a time.
+    share the replicator; the child services one request at a time. The
+    shipper holds the lock for a whole burst, so foreign requests always
+    see a clean channel between bursts.
     """
 
     def __init__(self, wq: WorkQueue, sync_every: int = 64,
                  start_method: str = "spawn",
                  transport: Optional[str] = None,
-                 codec: Optional[str] = None):
+                 codec: Optional[wire.CodecLike] = None,
+                 pipelined: bool = False, queue_depth: int = 16,
+                 chunk_records: int = 2048, window: int = 4,
+                 encoder: Optional[wire.DeltaEncoder] = None):
         self.wq = wq
         self.sync_every = sync_every
         self.transport = transport if transport is not None \
@@ -681,8 +825,11 @@ class ShippedDeltaReplicator:
         if self.transport not in ("pipe", "tcp"):
             raise ValueError(f"unknown transport {self.transport!r}")
         # what the hello OFFERS; the child's negotiate() picks the codec
-        self._offer = list(wire.CODECS) if codec is None else [codec, "raw"]
-        self.codec = "raw"
+        name = codec if codec is None or isinstance(codec, str) \
+            else codec.name
+        self._offer = list(wire.CODECS) if name is None else [name, "raw"]
+        self.codec = "raw"               # negotiated name; hello fills it
+        self._codec: wire.Codec = wire.as_codec("raw")
         self.consumer = f"replica-{next(_replica_seq)}"
         self._ctx = multiprocessing.get_context(start_method)
         self._mu = threading.Lock()
@@ -698,11 +845,29 @@ class ShippedDeltaReplicator:
         self.encoded_bytes = 0           # exact bytes that crossed the wire
         self.encode_wall_s = 0.0
         self.ship_wall_s = 0.0           # send + remote decode/apply + ack
+        self.pipelined = bool(pipelined)
+        self.chunk_records = int(chunk_records)
+        self.window = max(1, int(window))
+        self.encoder = encoder if encoder is not None \
+            else wire.DeltaEncoder()
+        self.enq_offset = 0              # producer cursor: staged-through
+        self.messages_sent = 0           # D messages (>=1 chunk coalesced)
+        self._shipq: Optional[queue.Queue] = None
+        self._ship_thread: Optional[threading.Thread] = None
+        self._ship_error: Optional[BaseException] = None
+        self._closed = False
         wq.log.register_consumer(self.consumer, 0)
         self._unregister = weakref.finalize(
             self, wq.log.unregister_consumer, self.consumer)
         with self._mu:
             self._spawn()
+        self.enq_offset = self.offset
+        if self.pipelined:
+            self._shipq = queue.Queue(maxsize=max(2, int(queue_depth)))
+            self._ship_thread = threading.Thread(
+                target=self._ship_loop, name=f"{self.consumer}-shipper",
+                daemon=True)
+            self._ship_thread.start()
 
     # ------------------------------------------------------------ process
     def _spawn(self) -> None:
@@ -745,6 +910,10 @@ class ShippedDeltaReplicator:
         hello = pickle.loads(reply[1 + _ACK.size:]) \
             if len(reply) > 1 + _ACK.size else {}
         self.codec = hello.get("codec", "raw")
+        # the Codec OBJECT is resolved exactly once, here at hello time —
+        # everything downstream (sync, shipper thread) holds the object,
+        # not the string (satellite: no more codec= string threading)
+        self._codec = wire.as_codec(self.codec)
         self.num_workers = self.wq.num_workers
         self.wq.log.ack(self.consumer, self.offset)
 
@@ -764,10 +933,11 @@ class ShippedDeltaReplicator:
                 p.terminate()
                 p.join(timeout=5)
 
-    def _request(self, msg: bytes, timeout: float = 120.0) -> bytes:
-        """One request/reply round trip. ``E`` replies kill the child (its
-        store may hold a partial apply) and surface the remote traceback."""
-        self.tr.send_bytes(msg)
+    def _recv_reply(self, timeout: float = 120.0) -> bytes:
+        """Receive one reply frame. ``E`` replies kill the child (its
+        store may hold a partial apply) and surface the remote traceback.
+        Split out of :meth:`_request` so the pipelined shipper can harvest
+        acks for frames it sent a window ago."""
         if not self.tr.poll(timeout):
             self._kill()
             raise TimeoutError(
@@ -779,34 +949,215 @@ class ShippedDeltaReplicator:
             raise RuntimeError(f"remote replica failed:\n{detail}")
         return reply
 
+    def _request(self, msg: bytes, timeout: float = 120.0) -> bytes:
+        """One lockstep request/reply round trip."""
+        self.tr.send_bytes(msg)
+        return self._recv_reply(timeout)
+
     @property
     def remote_pid(self) -> Optional[int]:
         return self.process.pid if self.process is not None else None
 
     # --------------------------------------------------------------- lag
     def lag(self) -> int:
-        """Log records the replica is behind the primary."""
+        """Log records the replica is behind the primary (acked, not
+        merely enqueued — the pipelined cursor is ``enq_offset``)."""
         return len(self.wq.log) - self.offset
-
-    def maybe_sync(self) -> bool:
-        if self.lag() >= self.sync_every:
-            self.sync()
-            return True
-        return False
 
     # -------------------------------------------------------------- sync
     def sync(self, upto_version: Optional[int] = None) -> int:
-        """Encode + ship the unconsumed tail; returns #records shipped.
+        """Ship the unconsumed tail; returns #records shipped (synchronous
+        mode) or staged+enqueued (pipelined mode).
 
         Semantics match :meth:`DeltaReplicator.sync` (forward-only,
         ``upto_version`` bisected and pinned remotely) with one addition:
         the consumer offset, byte counters, and ``log.ack`` advance only
         after the remote acks the absolute offset — accounting is
         transactional with what the replica durably consumed. A dead child
-        triggers one respawn-from-snapshot + retry.
+        triggers respawn-from-snapshot (the snapshot is taken after every
+        staged record was appended, so it covers all of them).
+
+        Pipelined: a plain ``sync()`` returns at enqueue (backpressure
+        blocks when the bounded queue is full); ``sync(upto_version=...)``
+        additionally drains the pipeline so the replica is AT the version
+        when the call returns. A background ship error re-raises here.
         """
+        if not self.pipelined:
+            with self._mu:
+                return self._sync_locked(upto_version)
+        self._raise_ship_error()
+        log = self.wq.log
+        lo = max(self.enq_offset, self.offset)
+        if upto_version is None:
+            hi = len(log)
+        else:
+            try:
+                hi = max(log.index_after_version(upto_version), lo)
+            except LogCompactedError:
+                hi = lo                  # already past it (consumer floor)
+        n = hi - lo
+        if n:
+            # ONE queue item per sync: the shipper sees the whole staged
+            # span in a single burst, so its unacked window pipelines
+            # across every chunk instead of draining at chunk boundaries
+            self._shipq.put(wire.stage_delta(
+                log.slice(lo, hi), lo,
+                chunk_records=self.chunk_records))  # full q -> block
+            self.enq_offset = hi
+        if upto_version is not None:
+            # version-exact callers need the replica AT the version when
+            # sync returns: drain the pipeline, then let the synchronous
+            # path settle the pin-only edge under the lock
+            self.flush()
+            with self._mu:
+                self._sync_locked(upto_version)
+        return n
+
+    # ----------------------------------------------------- pipelined shipper
+    def _raise_ship_error(self) -> None:
+        err, self._ship_error = self._ship_error, None
+        if err is not None:
+            raise err
+
+    def flush(self) -> None:
+        """Block until every enqueued chunk is shipped AND acked; this is
+        the pipelined error surface (a background failure re-raises here).
+        Synchronous mode is always flushed — no-op."""
+        if not self.pipelined or self._shipq is None:
+            return
+        self._shipq.join()
+        self._raise_ship_error()
+
+    def _join_queue(self, timeout: float) -> bool:
+        """``Queue.join`` with a deadline — close()'s bounded drain."""
+        q = self._shipq
+        deadline = time.monotonic() + timeout
+        with q.all_tasks_done:
+            while q.unfinished_tasks:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                q.all_tasks_done.wait(left)
+        return True
+
+    def _ship_loop(self) -> None:
+        """Daemon shipper: dequeue staged syncs (each item is the chunk
+        list of ONE sync call), coalesce a burst, encode once (shared
+        :class:`wire.DeltaEncoder`), ship with a bounded unacked window,
+        harvest acks. Every dequeued item is task_done'd exactly once —
+        on success, error, or after close — so ``flush()``/``close()``
+        can never hang on a lost item."""
+        q = self._shipq
+        while True:
+            item = q.get()
+            if item is _SHIP_QUIT:
+                q.task_done()
+                return
+            burst = [item]
+            quit_seen = False
+            while len(burst) < 64:
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SHIP_QUIT:
+                    quit_seen = True
+                    break
+                burst.append(nxt)
+            try:
+                if not self._closed:
+                    self._ship_burst([c for item in burst for c in item])
+            except Exception as e:                        # noqa: BLE001
+                if self._ship_error is None:
+                    self._ship_error = e   # flush()/next sync re-raises
+            finally:
+                for _ in burst:
+                    q.task_done()
+            if quit_seen:
+                q.task_done()
+                return
+
+    def _ship_burst(self, chunks: Sequence) -> None:
+        """Ship one burst under the wire lock — foreign requests (sweeps,
+        fetches, recover) always see a clean channel between bursts."""
         with self._mu:
-            return self._sync_locked(upto_version)
+            if self.process is None or not self.process.is_alive():
+                self._spawn()
+            # the respawn snapshot is taken AFTER every staged record was
+            # appended, so its log index is >= every enqueued hi: chunks
+            # the snapshot already covers drop out here, never partially
+            todo = [c for c in chunks if c.hi > self.offset]
+            if not todo:
+                return
+            try:
+                self._ship_window(todo)
+            except (BrokenPipeError, EOFError, OSError):
+                # died mid-ship: nothing past the last ack was consumed;
+                # respawn from a fresh snapshot — the rest of this burst
+                # (and the whole backlog) is inside it and will be skipped
+                # by the offset filter above on the next burst
+                self._kill()
+                self._spawn()
+
+    def _ship_window(self, todo: Sequence) -> None:
+        """Encode-and-send with a bounded unacked window. Small consecutive
+        chunks coalesce into one D message until ~_COALESCE_TARGET_BYTES of
+        encoded payload (tiny per-sync deltas stop paying one round trip
+        each); up to ``window`` messages ride the wire unacked, and acks
+        harvest opportunistically while the next message encodes."""
+        t0 = time.perf_counter()
+        enc_wall = 0.0
+        outstanding: deque = deque()
+        i = 0
+        while i < len(todo):
+            group: List = []
+            bufs: List = []
+            g_bytes = 0
+            while i < len(todo) and (not group
+                                     or g_bytes < _COALESCE_TARGET_BYTES):
+                c = todo[i]
+                e0 = time.perf_counter()
+                bufs.append(self.encoder.encode_staged(c, self._codec))
+                enc_wall += time.perf_counter() - e0
+                g_bytes += len(bufs[-1])
+                group.append(c)
+                i += 1
+            lo, hi = group[0].lo, group[-1].hi
+            self.tr.send_chunks(
+                [b"D" + _DHDR.pack(lo, hi, _PIN_NONE)] + bufs)
+            self.messages_sent += 1
+            outstanding.append((hi, g_bytes, group))
+            while outstanding and (len(outstanding) >= self.window
+                                   or self.tr.poll(0)):
+                self._harvest_one(outstanding)
+        while outstanding:
+            self._harvest_one(outstanding)
+        self.encode_wall_s += enc_wall
+        self.ship_wall_s += max(time.perf_counter() - t0 - enc_wall, 0.0)
+
+    def _harvest_one(self, outstanding: deque) -> None:
+        """Consume one ack and advance the transactional state: offset,
+        compaction floor (``log.ack`` — the one TxnLog entry point that is
+        cross-thread safe by contract), and the byte counters move together
+        and only here."""
+        hi, g_bytes, group = outstanding.popleft()
+        reply = self._recv_reply()
+        off, self.replica_version = _ACK.unpack_from(reply, 1)
+        if off != hi:
+            raise RuntimeError(
+                f"remote replica acked offset {off}, expected {hi}")
+        self.offset = hi
+        self.wq.log.ack(self.consumer, hi)
+        self.encoded_bytes += g_bytes
+        n = 0
+        for c in group:
+            for run in c.runs:
+                if run.op == "resize":   # topology rides the log too
+                    self.num_workers = int(run.recs[-1].payload["workers"])
+                self.delta_bytes += wire.staged_payload_nbytes(run)
+                n += len(run.recs)
+        self.records_applied += n
+        self.sync_count += 1
 
     def _sync_locked(self, upto_version: Optional[int],
                      _retry: bool = True) -> int:
@@ -827,7 +1178,7 @@ class ShippedDeltaReplicator:
             return 0
         recs = log.slice(self.offset, hi)
         t0 = time.perf_counter()
-        buf = wire.delta_to_bytes(recs, codec=self.codec)
+        buf = self.encoder.encode_records(self.offset, hi, recs, self._codec)
         t1 = time.perf_counter()
         try:
             reply = self._request(
@@ -862,7 +1213,10 @@ class ShippedDeltaReplicator:
     # ------------------------------------------------------------ analyst
     def remote_sweep(self, now: float) -> Dict[str, object]:
         """Run a full Q1-Q7 steering sweep IN the replica process (against
-        its own store at its caught-up version) and return the result."""
+        its own store at its caught-up version) and return the result.
+        Pipelined shippers drain first — the sweep sees every delta that
+        was enqueued before this call."""
+        self.flush()
         with self._mu:
             if self.process is None or not self.process.is_alive():
                 self._spawn()
@@ -872,7 +1226,9 @@ class ShippedDeltaReplicator:
     def fetch_remote_state(self) -> Dict[str, object]:
         """{snapshot, pid, num_workers, offset} straight from the replica
         process — the bit-parity and process-isolation evidence the
-        e_wire_ship experiment hard-checks."""
+        e_wire_ship experiment hard-checks. Pipelined shippers drain
+        first."""
+        self.flush()
         with self._mu:
             if self.process is None or not self.process.is_alive():
                 self._spawn()
@@ -883,9 +1239,14 @@ class ShippedDeltaReplicator:
     def recover(self) -> WorkQueue:
         """Failover: drain the surviving log tail into the replica, requeue
         its RUNNING tasks remotely, and materialize the recovered WorkQueue
-        here (the replica store BECOMES the new primary store)."""
+        here (the replica store BECOMES the new primary store). Pipelined
+        shippers drain their queue first (no enqueued record may be lost
+        to the failover)."""
+        if self.pipelined:
+            self.sync()                  # stage whatever tail remains
+            self.flush()                 # ship + ack everything enqueued
         with self._mu:
-            self._sync_locked(None)
+            self._sync_locked(None)      # stragglers; no-op when drained
             reply = self._request(b"P")
             snap, num_workers = pickle.loads(reply[1:])
         store = ColumnStore.restore(snap)
@@ -894,23 +1255,40 @@ class ShippedDeltaReplicator:
             if store.n_rows else 0
         return wq
 
-    def promote(self) -> WorkQueue:
-        """Recover + release the replica process: the returned WorkQueue is
-        now the primary and nothing keeps consuming the old log."""
-        wq = self.recover()
-        self.close()
-        return wq
-
     def close(self) -> None:
         """Quit the replica process and stop pinning the compaction floor.
 
-        Idempotent, and safe after a child crash: the graceful quit is a
-        bounded ``try_send`` (never blocks on a dead or full pipe), kills
-        fall back to terminate, and a second close is a no-op.
+        Pipelined: the queued backlog drains (ships) first with a BOUNDED
+        wait, then the shipper thread stops — close never hangs on a
+        wedged child and never raises (a pending background ship error is
+        discarded: the replica is being released anyway). Idempotent, and
+        safe after a child crash: the graceful quit is a bounded
+        ``try_send`` (never blocks on a dead or full pipe), kills fall
+        back to terminate, and a second close is a no-op.
         """
+        t, self._ship_thread = self._ship_thread, None
+        if t is not None:
+            if t.is_alive():
+                self._join_queue(timeout=60.0)       # bounded drain
+            self._closed = True          # shipper skips anything left
+            try:
+                self._shipq.put(_SHIP_QUIT, timeout=5.0)
+            except queue.Full:
+                pass
+            t.join(timeout=10.0)
+            self._ship_error = None      # close never raises
         with self._mu:
             self._kill(graceful=True)
         self._unregister()       # idempotent; detaches the GC finalizer too
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        s.update(encode_wall_s=self.encode_wall_s,
+                 ship_wall_s=self.ship_wall_s,
+                 spawn_count=self.spawn_count,
+                 messages_sent=self.messages_sent,
+                 pipelined=float(self.pipelined))
+        return s
 
     def __del__(self):
         # last-resort cleanup: must never raise or hang, even mid-interpreter
@@ -921,24 +1299,28 @@ class ShippedDeltaReplicator:
             pass
 
 
-class ReplicaGroup:
+class ReplicaGroup(Replicator):
     """N-replica fan-out per partition: the paper's availability story at
     cluster scale (§4 — replica placement owned by the DBMS, one consumer
     group per partition), built by BROADCASTING the same wire deltas to N
     independent :class:`ShippedDeltaReplicator` members.
 
+    The broadcast is ENCODE-ONCE and CONCURRENT: every member shares one
+    :class:`repro.core.wire.DeltaEncoder`, so a delta chunk is encoded by
+    whichever member gets there first and the other N-1 ship the cached
+    bytes; ``sync`` fans out on a thread pool (one thread per member), so
+    broadcast wall is ~max(member), not the serial sum.
+
     Every member is its own registered ``TxnLog`` consumer with its own
     acked offset, so the compaction floor is min-over-group BY CONSTRUCTION
     (``TxnLog.truncate`` already takes the min across registered
     consumers): a lagging member pins exactly the prefix it still needs,
-    and nothing else. ``sync`` broadcasts; per-member wall times feed the
-    fan-out lag metric (slowest minus fastest member — what an operator
-    watches for a straggling replica). ``remote_sweep`` round-robins
-    steering sweeps across members (the executor's ``analyst="remote"``
-    load-balancing); ``promote`` elects the most-caught-up LIVE member
-    (highest acked offset; liveness first — a dead leader's ack is still
-    durable via the consumer floor, but electing it would pay a respawn)
-    and releases the rest.
+    and nothing else. ``remote_sweep`` round-robins steering sweeps across
+    members (the executor's ``analyst="remote"`` load-balancing);
+    ``promote`` elects the most-caught-up LIVE member (highest acked
+    offset; liveness first — a dead leader's ack is still durable via the
+    consumer floor, but electing it would pay a respawn) and releases the
+    rest.
 
     With ``n_replicas=1`` this is exactly one ShippedDeltaReplicator plus
     a method veneer — the N=1 special case every pre-fabric caller keeps.
@@ -947,22 +1329,34 @@ class ReplicaGroup:
     def __init__(self, wq: WorkQueue, n_replicas: int = 1,
                  sync_every: int = 64, start_method: str = "spawn",
                  transport: Optional[str] = None,
-                 codec: Optional[str] = None):
+                 codec: Optional[wire.CodecLike] = None,
+                 pipelined: bool = False, queue_depth: int = 16,
+                 chunk_records: int = 2048, window: int = 4):
         if n_replicas < 1:
             raise ValueError("a replica group needs at least one member")
         self.wq = wq
         self.sync_every = sync_every
+        # ONE encoder for the whole group: each delta chunk is encoded
+        # once, every member broadcasts the same bytes
+        self.encoder = wire.DeltaEncoder(max_entries=max(32, 4 * n_replicas))
         self.members: List[ShippedDeltaReplicator] = []
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         try:
             for _ in range(n_replicas):
                 self.members.append(ShippedDeltaReplicator(
                     wq, sync_every=sync_every, start_method=start_method,
-                    transport=transport, codec=codec))
+                    transport=transport, codec=codec, pipelined=pipelined,
+                    queue_depth=queue_depth, chunk_records=chunk_records,
+                    window=window, encoder=self.encoder))
+            if n_replicas > 1:
+                self._pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=n_replicas, thread_name_prefix="fanout")
         except Exception:
             self.close()                 # no half-built group leaks processes
             raise
         self._rr = 0
         self.last_sync_wall_s: List[float] = [0.0] * n_replicas
+        self.last_broadcast_wall_s = 0.0
 
     # N=1 veneer: callers written against ShippedDeltaReplicator (the
     # executor gotchas, notebooks) keep reading the same surface off a
@@ -1004,31 +1398,48 @@ class ReplicaGroup:
         return [m.lag() for m in self.members]
 
     def fanout_lag_s(self) -> float:
-        """Wall-time spread of the last broadcast sync: slowest member
-        minus fastest — the straggler signal of the fan-out."""
-        return max(self.last_sync_wall_s) - min(self.last_sync_wall_s)
+        """End-to-end wall of the last broadcast ``sync`` — with the
+        concurrent fan-out this is ~max(member wall), not the serial sum
+        the member-by-member loop used to pay. The straggler signal
+        (slowest minus fastest member) is :meth:`member_spread_s`."""
+        return self.last_broadcast_wall_s
 
-    def maybe_sync(self) -> bool:
-        if self.lag() >= self.sync_every:
-            self.sync()
-            return True
-        return False
+    def member_spread_s(self) -> float:
+        """Slowest minus fastest member in the last broadcast — what an
+        operator watches for a straggling replica."""
+        return max(self.last_sync_wall_s) - min(self.last_sync_wall_s)
 
     # -------------------------------------------------------------- sync
     def sync(self, upto_version: Optional[int] = None) -> int:
-        """Broadcast the unconsumed tail to every member; returns the max
-        records applied by any member (they may start at different acked
-        offsets after respawns). Ack/floor semantics are per member —
-        ``TxnLog.truncate`` keeps everything the slowest one still needs.
+        """Broadcast the unconsumed tail to every member CONCURRENTLY (one
+        pool thread per member); returns the max records applied by any
+        member (they may start at different acked offsets after respawns).
+        Ack/floor semantics are per member — ``TxnLog.truncate`` keeps
+        everything the slowest one still needs. The caller blocks until
+        every member returned, so member-side staging reads of the log
+        happen while the producer thread is parked — the TxnLog
+        single-producer contract holds.
         """
-        applied = 0
-        walls = []
-        for m in self.members:
+        def timed(m: ShippedDeltaReplicator):
             t0 = time.perf_counter()
-            applied = max(applied, m.sync(upto_version))
-            walls.append(time.perf_counter() - t0)
-        self.last_sync_wall_s = walls
-        return applied
+            n = m.sync(upto_version)
+            return n, time.perf_counter() - t0
+        b0 = time.perf_counter()
+        if self._pool is None:
+            results = [timed(m) for m in self.members]
+        else:
+            results = list(self._pool.map(timed, self.members))
+        self.last_broadcast_wall_s = time.perf_counter() - b0
+        self.last_sync_wall_s = [w for _, w in results]
+        return max(n for n, _ in results)
+
+    def flush(self) -> None:
+        """Drain every member's pipeline (concurrently when pooled)."""
+        if self._pool is None:
+            for m in self.members:
+                m.flush()
+        else:
+            list(self._pool.map(ShippedDeltaReplicator.flush, self.members))
 
     # ------------------------------------------------------------ analyst
     def remote_sweep(self, now: float) -> Dict[str, object]:
@@ -1050,6 +1461,11 @@ class ReplicaGroup:
             return (alive, m.offset, m.replica_version)
         return max(self.members, key=key)
 
+    def recover(self) -> WorkQueue:
+        """Failover WITHOUT releasing the group: the elected member drains
+        the surviving tail and materializes the recovered WorkQueue."""
+        return self.elect().recover()
+
     def promote(self) -> WorkQueue:
         """Failover: promote the elected member (its replica store becomes
         the new primary) and release every other member's process."""
@@ -1057,11 +1473,23 @@ class ReplicaGroup:
         for m in self.members:
             if m is not leader:
                 m.close()
-        return leader.promote()
+        wq = leader.promote()
+        self.close()
+        return wq
 
     def close(self) -> None:
         for m in self.members:
             m.close()
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        s["fanout_lag_s"] = self.fanout_lag_s()
+        s["member_spread_s"] = self.member_spread_s()
+        s.update(self.encoder.stats())
+        return s
 
 
 # The fabric is the group plus the transport/codec policy baked into its
@@ -1069,7 +1497,7 @@ class ReplicaGroup:
 ReplicationFabric = ReplicaGroup
 
 
-class FullCopyReplica:
+class FullCopyReplica(Replicator):
     """The pre-delta baseline: every sync deep-copies the whole store.
 
     Kept ONLY as the comparison arm of the e_replica_lag experiment (sync
@@ -1087,13 +1515,10 @@ class FullCopyReplica:
     def lag(self) -> int:
         return len(self.wq.log) - self.offset
 
-    def maybe_sync(self) -> bool:
-        if self.lag() >= self.sync_every:
-            self.sync()
-            return True
-        return False
-
-    def sync(self) -> int:
+    def sync(self, upto_version: Optional[int] = None) -> int:
+        # ``upto_version`` accepted for Replicator-API parity: a full copy
+        # is always at the primary's CURRENT version, which is >= any
+        # committed upto_version a caller could name (forward-only holds)
         applied = self.lag()
         self.snapshot = self.wq.store.snapshot()
         self.offset = len(self.wq.log)
@@ -1112,3 +1537,63 @@ class FullCopyReplica:
         wq._next_task_id = int(store.col("task_id").max() + 1) \
             if store.n_rows else 0
         return wq
+
+    def close(self) -> None:
+        """Nothing to release: the baseline registers no log consumer and
+        owns no processes — present for Replicator-API parity."""
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        s["copy_bytes"] = int(self.copy_bytes)
+        return s
+
+
+# ------------------------------------------------------------------ factory
+def make_replicator(wq: WorkQueue, mode: str = "delta", *,
+                    replicas: int = 1, sync_every: int = 64,
+                    transport: Optional[str] = None,
+                    codec: Optional[wire.CodecLike] = None,
+                    pipelined: Optional[bool] = None,
+                    start_method: str = "spawn",
+                    account_encoded: bool = True) -> Replicator:
+    """The one construction site for replicators — everything above the
+    core (the executor's ``analyst=`` modes, benchmarks, notebooks) asks
+    for a replication POLICY by name instead of hand-wiring classes.
+
+    Modes (aliases in parentheses):
+
+    * ``"delta"`` (``"local"``, ``"replica"``) — in-process
+      :class:`DeltaReplicator`: shadow store in the same address space.
+    * ``"shipped"`` — one :class:`ShippedDeltaReplicator` process;
+      PIPELINED by default (pass ``pipelined=False`` for lockstep
+      request/reply shipping).
+    * ``"remote"`` (``"group"``, ``"fabric"``) — a :class:`ReplicaGroup`
+      of ``replicas`` members; pipelined by default.
+    * ``"full"`` — the :class:`FullCopyReplica` baseline (benchmark arm).
+
+    ``transport`` ("pipe"/"tcp") and ``codec`` thread through to the
+    shipped modes; ``codec`` accepts a name ("adaptive"/"varint"/"raw")
+    or a :class:`repro.core.wire.Codec` instance.
+    """
+    m = {"local": "delta", "replica": "delta",
+         "group": "remote", "fabric": "remote"}.get(mode, mode)
+    if m in ("delta", "full", "shipped") and replicas != 1:
+        raise ValueError(
+            f"mode {mode!r} is single-replica; got replicas={replicas} "
+            "(use mode='remote' for a fan-out group)")
+    if m == "delta":
+        return DeltaReplicator(wq, sync_every=sync_every,
+                               account_encoded=account_encoded)
+    if m == "full":
+        return FullCopyReplica(wq, sync_every=sync_every)
+    if m == "shipped":
+        return ShippedDeltaReplicator(
+            wq, sync_every=sync_every, start_method=start_method,
+            transport=transport, codec=codec,
+            pipelined=True if pipelined is None else pipelined)
+    if m == "remote":
+        return ReplicaGroup(
+            wq, n_replicas=replicas, sync_every=sync_every,
+            start_method=start_method, transport=transport, codec=codec,
+            pipelined=True if pipelined is None else pipelined)
+    raise ValueError(f"unknown replicator mode {mode!r}")

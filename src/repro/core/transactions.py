@@ -127,11 +127,25 @@ class _GrowBuf:
     def view(self, lo: int, hi: int) -> np.ndarray:
         return self.data[lo: hi]
 
-    def trim_front(self, k: int) -> None:
-        """Drop the first k valid entries (compaction)."""
-        rest = self.data[k: self.n].copy()
-        self.n = len(rest)
-        self.data[: self.n] = rest
+    def trim_front(self, k: int, shift=None) -> None:
+        """Drop the first k valid entries (compaction), optionally
+        subtracting ``shift`` from the survivors (offset re-basing).
+
+        Allocates a FRESH buffer instead of moving data in place: views
+        handed out before the trim (``slice_fields`` captures staged for
+        the pipelined shipper on another thread) keep aliasing the OLD
+        buffer, whose contents stay frozen — compaction must never mutate
+        bytes a concurrent encoder may still be reading.
+        """
+        n = self.n - k
+        shape = list(self.data.shape)
+        new = np.empty(tuple(shape), self.data.dtype)
+        if shift is None:
+            new[:n] = self.data[k: self.n]
+        else:
+            new[:n] = self.data[k: self.n] - shift
+        self.data = new
+        self.n = n
 
 
 class _HotPlane:
@@ -149,8 +163,9 @@ class _HotPlane:
 
     Memory: the plane DUPLICATES the hot fields the frozen payload dict
     already copied (the buffers must stay contiguous across payload
-    lifetimes, and ``trim_front`` compacts them in place, so they cannot
-    alias the payload arrays). The overhead is ~rows*8B + ~24B/record for
+    lifetimes, so they cannot alias the payload arrays; ``trim_front``
+    compacts into a fresh allocation so already-captured views survive
+    compaction unchanged). The overhead is ~rows*8B + ~24B/record for
     the dominant ops and is bounded by the same consumer-floor truncation
     as the record list itself.
     """
@@ -237,14 +252,18 @@ class _HotPlane:
         return out
 
     def truncate(self, upto_pidx: int) -> None:
-        """Drop plane entries with index < upto_pidx (log compaction)."""
+        """Drop plane entries with index < upto_pidx (log compaction).
+
+        Every buffer re-bases via ``trim_front``'s fresh-allocation path:
+        views captured before the truncate stay valid against the old
+        buffers (see :meth:`_GrowBuf.trim_front`).
+        """
         d = min(max(upto_pidx - self.base, 0), self.n)
         if d == 0:
             return
         shift = int(self.off.data[d])
         self.rows.trim_front(shift)
-        self.off.data[: self.n + 1 - d] = self.off.data[d: self.n + 1] - shift
-        self.off.n = self.n + 1 - d
+        self.off.trim_front(d, shift=shift)
         self.now.trim_front(d)
         if self.worker is not None:
             self.worker.trim_front(d)
@@ -252,9 +271,7 @@ class _HotPlane:
             dshift = int(self.dom_off.data[d])
             if self.dom is not None:
                 self.dom.trim_front(dshift)
-            self.dom_off.data[: self.n + 1 - d] = \
-                self.dom_off.data[d: self.n + 1] - dshift
-            self.dom_off.n = self.n + 1 - d
+            self.dom_off.trim_front(d, shift=dshift)
             self.dom_flag.trim_front(d)
         self.base += d
         self.n -= d

@@ -44,10 +44,25 @@ class TransportError(ConnectionError):
 
 
 class Transport:
-    """Minimal framed-bytes interface the replication fabric speaks."""
+    """Minimal framed-bytes interface the replication fabric speaks.
+
+    Both implementations are FULL-DUPLEX: a send and a recv may be in
+    flight at once (pipe and TCP both buffer each direction
+    independently), which is what lets the pipelined shipper keep a
+    window of unacked delta frames on the wire and harvest acks while the
+    next frame encodes — the request/reply discipline still holds per
+    frame (every D gets exactly one A, in order), only the LOCKSTEP is
+    relaxed.
+    """
 
     def send_bytes(self, buf) -> None:
         raise NotImplementedError
+
+    def send_chunks(self, chunks) -> None:
+        """Ship ONE frame given as multiple bytes-like chunks (header +
+        encoded buffers), avoiding the caller-side join where the
+        transport can scatter-gather. Base implementation joins."""
+        self.send_bytes(b"".join(chunks))
 
     def recv_bytes(self) -> bytes:
         raise NotImplementedError
@@ -147,6 +162,29 @@ class TCPTransport(Transport):
                 # bulk deltas: no copy, sendall handles partial writes
                 self.sock.sendall(_LEN.pack(n))
                 self.sock.sendall(buf)
+        except OSError as e:
+            raise TransportError(f"tcp send failed: {e}") from e
+
+    def send_chunks(self, chunks) -> None:
+        """Vectored frame send: length prefix + chunks in one ``sendmsg``
+        (scatter-gather — no join copy of a multi-buffer delta frame).
+        Falls back to the join path when the kernel's iovec limit or a
+        partial write gets in the way."""
+        bufs = [memoryview(c) for c in chunks]
+        total = sum(b.nbytes for b in bufs)
+        iov = [memoryview(_LEN.pack(total))] + [b for b in bufs if b.nbytes]
+        try:
+            sent = self.sock.sendmsg(iov)
+        except OSError as e:
+            raise TransportError(f"tcp send failed: {e}") from e
+        want = _LEN.size + total
+        if sent == want:
+            return
+        # partial vectored write (large frame vs socket buffer): finish
+        # with the joined remainder — correctness over zero-copy
+        rest = b"".join(iov)[sent:]
+        try:
+            self.sock.sendall(rest)
         except OSError as e:
             raise TransportError(f"tcp send failed: {e}") from e
 

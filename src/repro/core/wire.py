@@ -68,8 +68,10 @@ from __future__ import annotations
 import itertools
 import pickle
 import struct
+import threading
+from collections import OrderedDict
 from operator import attrgetter
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -86,11 +88,11 @@ _FIN = struct.Struct("<BI")          # has_dom, dom width
 _OPCODES = {"claim": 1, "claim_all": 2, "finish": 3}
 _OPS = {v: k for k, v in _OPCODES.items()}
 
-# Codecs this build can ENCODE and DECODE, in preference order. The
+# Codec names this build can ENCODE and DECODE, in preference order. The
 # replication hello exchange offers the sender's list; the receiver picks
 # the first it supports (negotiate). "raw" is the universal fallback and
-# the bit-parity oracle the compressed path is tested against.
-CODECS = ("varint", "raw")
+# the bit-parity oracle the compressed paths are tested against.
+CODECS = ("adaptive", "varint", "raw")
 
 
 def negotiate(offered) -> str:
@@ -99,6 +101,92 @@ def negotiate(offered) -> str:
         if c in CODECS:
             return c
     return "raw"
+
+
+# ------------------------------------------------------------------ codecs
+class Codec:
+    """Per-connection encode policy, resolved ONCE at hello time.
+
+    Frames self-describe their encoding (``ftype``), so the decoder needs
+    no codec state — a ``Codec`` only decides, per hot frame, which
+    encoding the SENDER emits. ``choose`` sees the frame's shape (op,
+    record count, the exact raw body size, and how much of it is the
+    incompressible f64 domain block) and returns ``"raw"`` or
+    ``"varint"``. The ``"raw"``/``"varint"`` string spellings remain
+    accepted everywhere via :func:`as_codec` for back-compat.
+    """
+
+    name = "?"
+
+    def choose(self, op: str, n_records: int, raw_nbytes: int,
+               dom_nbytes: int) -> str:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:                        # pragma: no cover
+        return f"<Codec {self.name}>"
+
+
+class RawCodec(Codec):
+    """Always raw: the universal fallback and bit-parity oracle."""
+
+    name = "raw"
+
+    def choose(self, op, n_records, raw_nbytes, dom_nbytes) -> str:
+        return "raw"
+
+
+class VarintCodec(Codec):
+    """Always varint-compress hot frames (PR 5 behavior)."""
+
+    name = "varint"
+
+    def choose(self, op, n_records, raw_nbytes, dom_nbytes) -> str:
+        return "varint"
+
+
+class AdaptiveCodec(Codec):
+    """Per-frame choice: compress only where the varint planes pay.
+
+    * Tiny frames (< ``min_records``) ship raw — the encode setup cost
+      exceeds the handful of bytes saved, and short alternating runs are
+      exactly the incremental-sync shape whose throughput collapsed when
+      every frame paid the varint toll.
+    * Dom-heavy finish frames ship raw: domain outputs are f64 simulation
+      results that do not varint, so when they are >= ``dom_cutoff`` of
+      the raw body, the int-plane savings cannot reach 1 - dom_cutoff of
+      the frame — not worth the encode wall.
+    * Everything else (claim/claim_all runs, narrow-dom finishes — the
+      ops that dominate real logs) compresses ~3-6x and ships varint.
+    """
+
+    name = "adaptive"
+    min_records = 4
+    dom_cutoff = 2.0 / 3.0
+
+    def choose(self, op, n_records, raw_nbytes, dom_nbytes) -> str:
+        if n_records < self.min_records:
+            return "raw"
+        if dom_nbytes >= self.dom_cutoff * raw_nbytes:
+            return "raw"
+        return "varint"
+
+
+_CODECS_BY_NAME: Dict[str, Codec] = {
+    "raw": RawCodec(), "varint": VarintCodec(), "adaptive": AdaptiveCodec(),
+}
+
+CodecLike = Union[str, Codec]
+
+
+def as_codec(codec: CodecLike) -> Codec:
+    """Resolve a codec spelling (``"raw"``/``"varint"``/``"adaptive"`` or a
+    :class:`Codec` instance) to the object the encode paths consume."""
+    if isinstance(codec, Codec):
+        return codec
+    try:
+        return _CODECS_BY_NAME[codec]
+    except (KeyError, TypeError):
+        raise ValueError(f"unknown wire codec {codec!r}") from None
 
 
 class WireError(ValueError):
@@ -259,22 +347,38 @@ def _dom_servable(fields: Dict[str, Any], n_rows: int) -> Optional[bool]:
 
 
 # ------------------------------------------------------------------ encode
-def _hot_frame(op: str, recs: Sequence[Txn],
-               codec: str = "raw") -> Optional[List[Any]]:
-    """Frame chunks for one plane-contiguous hot run, or None when the run
-    cannot be served off its plane (then it ships as a cold frame)."""
-    sl = plane_run(recs)
-    if sl is None:
-        return None
-    plane, lo, hi = sl
-    f = plane.slice_fields(lo, hi)
+def _hot_frame_fields(op: str, recs: Sequence[Txn], f: Dict[str, Any],
+                      codec: Codec) -> Optional[List[Any]]:
+    """Frame chunks for one hot run from ALREADY-CAPTURED plane fields.
+
+    ``f`` is a ``slice_fields`` capture: the pipelined shipper stages it on
+    the producer thread (same thread as plane compaction, so the capture
+    is race-free) and encodes HERE from the staged views on its own thread
+    — compaction re-bases into fresh buffers, so the old views stay
+    frozen. Returns None when the run's dom sub-update is not servable
+    (ships cold instead).
+    """
     n = len(recs)
     off = f["off"].astype(np.int64)          # re-based copy: off[0] == 0
     off -= off[0]
     n_rows = int(off[-1])
+    # dom servability + size first: it gates the frame entirely, and the
+    # per-frame codec choice needs to see the incompressible dom fraction
+    dom = None
+    if op == "finish":
+        servable = _dom_servable(f, n_rows)
+        if servable is None:
+            return None
+        if servable:
+            dom = f["dom"]
+    dom_nbytes = 8 * n_rows * dom.shape[1] if dom is not None else 0
+    raw_nbytes = 8 * n + 8 * (n + 1) + 8 * n_rows + 8 * n \
+        + (4 * n if op == "claim" else 0) \
+        + (_FIN.size + dom_nbytes if op == "finish" else 0)
+    enc = codec.choose(op, n, raw_nbytes, dom_nbytes)
     versions = np.fromiter(map(attrgetter("store_version"), recs),
                            np.int64, n)
-    if codec == "varint":
+    if enc == "varint":
         chunks: List[Any] = [
             None,                            # header patched in below
             _mv(_enc_delta_i64(versions)),
@@ -284,7 +388,7 @@ def _hot_frame(op: str, recs: Sequence[Txn],
         ]
         if op == "claim":
             chunks.append(_mv(_enc_delta_i64(f["worker"])))
-    elif codec == "raw":
+    elif enc == "raw":
         chunks = [
             None,
             _mv(versions),
@@ -295,21 +399,30 @@ def _hot_frame(op: str, recs: Sequence[Txn],
         if op == "claim":
             chunks.append(_mv(f["worker"]))
     else:
-        raise ValueError(f"unknown wire codec {codec!r}")
+        raise ValueError(f"codec {codec.name!r} chose unknown "
+                         f"encoding {enc!r}")
     if op == "finish":
-        servable = _dom_servable(f, n_rows)
-        if servable is None:
-            return None
-        if servable:
-            dom = f["dom"]
+        if dom is not None:
             chunks.append(_FIN.pack(1, dom.shape[1]))
             chunks.append(_mv(dom))          # sim outputs don't varint
         else:
             chunks.append(_FIN.pack(0, 0))
     body = sum(len(c) for c in chunks[1:])
-    chunks[0] = _HDR.pack(MAGIC, FT_HOT if codec == "raw" else FT_HOTC,
+    chunks[0] = _HDR.pack(MAGIC, FT_HOT if enc == "raw" else FT_HOTC,
                           _OPCODES[op], n, body)
     return chunks
+
+
+def _hot_frame(op: str, recs: Sequence[Txn],
+               codec: CodecLike = "raw") -> Optional[List[Any]]:
+    """Frame chunks for one plane-contiguous hot run, or None when the run
+    cannot be served off its plane (then it ships as a cold frame)."""
+    sl = plane_run(recs)
+    if sl is None:
+        return None
+    plane, lo, hi = sl
+    return _hot_frame_fields(op, recs, plane.slice_fields(lo, hi),
+                             as_codec(codec))
 
 
 def _cold_frame(recs: Sequence[Txn]) -> List[Any]:
@@ -320,16 +433,17 @@ def _cold_frame(recs: Sequence[Txn]) -> List[Any]:
 
 
 def iter_frames(records: Iterable[Txn],
-                codec: str = "raw") -> Iterable[List[Any]]:
+                codec: CodecLike = "raw") -> Iterable[List[Any]]:
     """Frames (each a list of bytes-like chunks) for a log delta, one frame
     per consecutive same-op run — the unit :func:`replay` coalesces."""
+    codec = as_codec(codec)
     for op, run in itertools.groupby(records, key=attrgetter("op")):
         recs = list(run)
         frame = _hot_frame(op, recs, codec) if op in _OPCODES else None
         yield frame if frame is not None else _cold_frame(recs)
 
 
-def delta_to_bytes(records: Iterable[Txn], codec: str = "raw") -> bytes:
+def delta_to_bytes(records: Iterable[Txn], codec: CodecLike = "raw") -> bytes:
     """One contiguous buffer holding every frame of the delta — what a
     ``send_bytes`` ships (a writev-style transport can send ``iter_frames``
     chunks without this join)."""
@@ -337,7 +451,7 @@ def delta_to_bytes(records: Iterable[Txn], codec: str = "raw") -> bytes:
                     for c in frame)
 
 
-def frames_nbytes(records: Iterable[Txn], codec: str = "raw") -> int:
+def frames_nbytes(records: Iterable[Txn], codec: CodecLike = "raw") -> int:
     """Exact encoded wire size of a delta: ``len(delta_to_bytes(records))``.
 
     The raw codec is sized analytically without materializing the hot
@@ -345,7 +459,8 @@ def frames_nbytes(records: Iterable[Txn], codec: str = "raw") -> int:
     otherwise; they are rare by construction). Varint sections only know
     their size by encoding, so other codecs sum real frames.
     """
-    if codec != "raw":
+    codec = as_codec(codec)
+    if codec.name != "raw":
         return sum(len(c) for frame in iter_frames(records, codec)
                    for c in frame)
     total = 0
@@ -374,7 +489,7 @@ def frames_nbytes(records: Iterable[Txn], codec: str = "raw") -> int:
 
 
 def frames_nbytes_detail(records: Iterable[Txn],
-                         codec: str = "raw") -> Dict[str, int]:
+                         codec: CodecLike = "raw") -> Dict[str, int]:
     """Encoded size split into hot and cold frame bytes.
 
     Cold frames are byte-identical across codecs (pickles don't
@@ -391,6 +506,202 @@ def frames_nbytes_detail(records: Iterable[Txn],
         else:
             hot += size
     return {"total": hot + cold, "hot": hot, "cold": cold}
+
+
+# ----------------------------------------------------------------- staging
+# The pipelined shipper's producer/consumer split of the encode path:
+# stage_delta runs on the PRODUCER thread (the only thread allowed to
+# touch the log's planes — TxnLog's threading contract) and captures, per
+# same-op run, the plane views the frame will encode from; encode_staged
+# runs later on the shipper thread against those frozen captures only.
+# Compaction between the two is safe by construction: _GrowBuf.trim_front
+# re-bases into FRESH buffers, so a staged view keeps aliasing the old
+# (immutable) allocation, and appends only ever write past the captured
+# range (growth reallocates).
+class StagedRun:
+    """One same-op run of a staged chunk: records plus their plane capture
+    (``fields`` is None for cold runs — they encode from frozen payloads,
+    which are immutable and thread-safe by construction)."""
+
+    __slots__ = ("op", "recs", "fields")
+
+    def __init__(self, op: str, recs: Sequence[Txn],
+                 fields: Optional[Dict[str, Any]]):
+        self.op = op
+        self.recs = recs
+        self.fields = fields
+
+
+class StagedChunk:
+    """A contiguous span [lo, hi) of log records captured for deferred
+    encoding. Chunks are the shipper's queue items AND its encode units:
+    bounded size keeps encode/ship overlapped (chunk i+1 encodes while the
+    remote still replays chunk i) and bounds staged-view memory."""
+
+    __slots__ = ("lo", "hi", "runs")
+
+    def __init__(self, lo: int, hi: int, runs: List[StagedRun]):
+        self.lo = lo
+        self.hi = hi
+        self.runs = runs
+
+    @property
+    def n_records(self) -> int:
+        return self.hi - self.lo
+
+
+def stage_delta(records: Sequence[Txn], lo: int,
+                chunk_records: int = 2048) -> List[StagedChunk]:
+    """Split a log tail starting at absolute offset ``lo`` into staged
+    chunks of <= ``chunk_records`` records each, capturing every hot run's
+    plane views NOW (producer thread). Splitting a long run across chunks
+    is legal — each sub-run is still plane-contiguous and decodes to the
+    same replay — and is exactly what lets encode overlap shipping."""
+    out: List[StagedChunk] = []
+    for start in range(0, len(records), max(chunk_records, 1)):
+        sub = records[start: start + chunk_records]
+        runs: List[StagedRun] = []
+        for op, run in itertools.groupby(sub, key=attrgetter("op")):
+            recs = list(run)
+            fields = None
+            if op in _OPCODES:
+                sl = plane_run(recs)
+                if sl is not None:
+                    plane, plo, phi = sl
+                    fields = plane.slice_fields(plo, phi)
+            runs.append(StagedRun(op, recs, fields))
+        out.append(StagedChunk(lo + start, lo + start + len(sub), runs))
+    return out
+
+
+# Exact per-record payload_nbytes() totals for the hot-op payload layouts
+# (claim: worker/rows/now/ids, claim_all: n/rows/now, finish: ids/rows/now
+# + optional domain_out): fixed charge per record + 8 bytes per i64 row
+# entry. Lets replicator ack accounting stay O(runs), not O(records).
+_PAYLOAD_FIXED = {"claim": 16, "claim_all": 16, "finish": 8}
+_PAYLOAD_PER_ROW = {"claim": 16, "claim_all": 8, "finish": 16}
+
+
+def staged_payload_nbytes(run: StagedRun) -> int:
+    """Sum of ``payload_nbytes()`` over the run's records — computed from
+    the captured plane fields in O(1) for hot runs (bit-exact vs the
+    per-record sum, property-tested), per-record fallback otherwise.
+
+    Finish runs take the fast path only when ``_dom_servable`` decides
+    the capture represents the payloads exactly (every row's domain block
+    captured, or none at all): mixed and width-drifted runs keep their
+    ``domain_out`` only in the record payloads, so they cannot be sized
+    from the capture alone — same rule as hot-frame eligibility.
+    """
+    f = run.fields
+    fixed = _PAYLOAD_FIXED.get(run.op)
+    if f is None or fixed is None:
+        return sum(r.payload_nbytes() for r in run.recs)
+    off = f["off"]
+    n_rows = int(off[-1]) - int(off[0])
+    dom_nbytes = 0
+    if run.op == "finish":
+        servable = _dom_servable(f, n_rows)
+        if servable is None:
+            return sum(r.payload_nbytes() for r in run.recs)
+        if servable:
+            dom_nbytes = f["dom"].nbytes
+    return fixed * len(run.recs) + _PAYLOAD_PER_ROW[run.op] * n_rows \
+        + dom_nbytes
+
+
+def encode_staged(chunk: StagedChunk, codec: CodecLike) -> bytes:
+    """Encode one staged chunk into its frame buffer — safe on any thread
+    (touches only the chunk's frozen captures, never the live planes)."""
+    codec = as_codec(codec)
+    parts: List[Any] = []
+    for r in chunk.runs:
+        frame = None
+        if r.fields is not None:
+            frame = _hot_frame_fields(r.op, r.recs, r.fields, codec)
+        if frame is None:
+            frame = _cold_frame(r.recs)
+        parts.extend(frame)
+    return b"".join(parts)
+
+
+class DeltaEncoder:
+    """Encode-once cache for broadcast fan-out.
+
+    A :class:`~repro.core.replication.ReplicaGroup` ships the SAME log
+    span to every member; pre-PR 6 each member re-encoded it. Members now
+    share one encoder: the first caller for a ``(lo, hi, codec)`` span
+    pays the encode, concurrent and later callers get the identical bytes
+    back (``hits``). Entries are LRU-bounded — the broadcast consumes an
+    entry within one sync, so a handful of chunks of history suffices.
+
+    Thread-safe: concurrent requests for the same key block on the owning
+    encoder's completion instead of duplicating work; if the owner fails,
+    waiters fall back to encoding themselves.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        self._mu = threading.Lock()
+        self._entries: "OrderedDict[tuple, bytes]" = OrderedDict()
+        self._inflight: Dict[tuple, threading.Event] = {}
+        self.max_entries = max_entries
+        self.encodes = 0
+        self.hits = 0
+
+    def _get_or_encode(self, key, thunk) -> bytes:
+        while True:
+            with self._mu:
+                buf = self._entries.get(key)
+                if buf is not None:
+                    self.hits += 1
+                    self._entries.move_to_end(key)
+                    return buf
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = self._inflight[key] = threading.Event()
+                    break                     # we own the encode
+            ev.wait(timeout=120.0)            # another thread is encoding
+            with self._mu:
+                buf = self._entries.get(key)
+                if buf is not None:
+                    self.hits += 1
+                    return buf
+                if key not in self._inflight:
+                    # owner failed and cleared the slot without publishing:
+                    # loop back and claim the encode ourselves
+                    continue
+        try:
+            buf = thunk()
+            with self._mu:
+                self._entries[key] = buf
+                self.encodes += 1
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
+            return buf
+        finally:
+            with self._mu:
+                self._inflight.pop(key, None)
+            ev.set()
+
+    def encode_staged(self, chunk: StagedChunk, codec: CodecLike) -> bytes:
+        codec = as_codec(codec)
+        return self._get_or_encode(
+            (chunk.lo, chunk.hi, codec.name),
+            lambda: encode_staged(chunk, codec))
+
+    def encode_records(self, lo: int, hi: int, records: Sequence[Txn],
+                       codec: CodecLike) -> bytes:
+        """Synchronous-path entry: same cache key space as staged chunks
+        (identical span + codec => identical bytes), so pipelined and
+        synchronous members of one group still share encodes."""
+        codec = as_codec(codec)
+        return self._get_or_encode(
+            (lo, hi, codec.name),
+            lambda: delta_to_bytes(records, codec))
+
+    def stats(self) -> Dict[str, int]:
+        return {"encodes": self.encodes, "hits": self.hits,
+                "entries": len(self._entries)}
 
 
 # ------------------------------------------------------------------ decode
@@ -469,13 +780,52 @@ class WireTxn:
         return f"WireTxn({self.op!r}, v={self.store_version})"
 
 
-def decode_delta(buf) -> List[WireTxn]:
-    """Parse a frame buffer back into replayable records, in log order.
+class DecodedRun:
+    """One decoded frame as a run-level replay unit.
+
+    Hot frames carry their receive plane plus the per-record version
+    column — NO per-record objects (materializing one ``WireTxn`` per
+    record is the dominant decode cost on large frames, and batched
+    replay only ever looks at the run's endpoints). Cold frames keep
+    their per-record ``WireTxn`` list (``recs``), mixed ops included.
+    """
+
+    __slots__ = ("op", "plane", "versions", "recs")
+
+    def __init__(self, op: Optional[str], plane: Optional[_RxPlane],
+                 versions: Optional[np.ndarray],
+                 recs: Optional[List[WireTxn]] = None):
+        self.op = op
+        self.plane = plane
+        self.versions = versions
+        self.recs = recs
+
+    @property
+    def n(self) -> int:
+        return len(self.recs) if self.recs is not None \
+            else int(self.versions.size)
+
+    @property
+    def last_version(self) -> int:
+        return int(self.versions[-1])
+
+    def materialize(self) -> List[WireTxn]:
+        """Per-record view of the run — the replay fallback paths (and
+        :func:`decode_delta`) still speak records."""
+        if self.recs is not None:
+            return self.recs
+        return list(map(WireTxn, itertools.repeat(self.op),
+                        self.versions.tolist(),
+                        itertools.repeat(self.plane), range(self.n)))
+
+
+def _parse_frames(buf) -> List[DecodedRun]:
+    """Parse a frame buffer into run-level decode units, in log order.
 
     Hot frames decode as ``np.frombuffer`` views of ``buf`` — no copies of
     the row/scalar/domain sections; cold frames unpickle their payloads.
     """
-    out: List[WireTxn] = []
+    out: List[DecodedRun] = []
     pos, end_all = 0, len(buf)
     while pos < end_all:
         if pos + _HDR.size > end_all:
@@ -488,8 +838,9 @@ def decode_delta(buf) -> List[WireTxn]:
         if end > end_all:
             raise WireError("truncated frame body")
         if ftype == FT_COLD:
-            for op, sv, payload in pickle.loads(buf[pos:end]):
-                out.append(WireTxn(op, sv, None, -1, payload))
+            out.append(DecodedRun(None, None, None, [
+                WireTxn(op, sv, None, -1, payload)
+                for op, sv, payload in pickle.loads(buf[pos:end])]))
         elif ftype == FT_HOTC:
             op = _OPS.get(opcode)
             if op is None:
@@ -523,8 +874,7 @@ def decode_delta(buf) -> List[WireTxn]:
                     f"compressed hot frame body mismatch: "
                     f"parsed {cur} != {body}")
             plane = _RxPlane(n, off, rows, now, worker, dom, has_dom)
-            out.extend(WireTxn(op, int(versions[i]), plane, i)
-                       for i in range(n))
+            out.append(DecodedRun(op, plane, versions))
         elif ftype == FT_HOT:
             op = _OPS.get(opcode)
             if op is None:
@@ -563,9 +913,24 @@ def decode_delta(buf) -> List[WireTxn]:
                 raise WireError(
                     f"hot frame body mismatch: parsed {pos} != {end}")
             plane = _RxPlane(n, off, rows, now, worker, dom, has_dom)
-            out.extend(WireTxn(op, int(versions[i]), plane, i)
-                       for i in range(n))
+            out.append(DecodedRun(op, plane, versions))
         else:
             raise WireError(f"unknown frame type {ftype}")
         pos = end
+    return out
+
+
+def decode_delta_runs(buf) -> List[DecodedRun]:
+    """Run-level decode — the replica child's fast path: one
+    :class:`DecodedRun` per frame, records materialized only where a
+    fallback needs them (see ``repro.core.replication.replay_runs``)."""
+    return _parse_frames(buf)
+
+
+def decode_delta(buf) -> List[WireTxn]:
+    """Parse a frame buffer back into replayable records, in log order
+    (the record-level surface ``replay``/tests consume)."""
+    out: List[WireTxn] = []
+    for run in _parse_frames(buf):
+        out.extend(run.recs if run.recs is not None else run.materialize())
     return out

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.risers_workflow import WorkflowConfig
-from repro.core.replication import DeltaReplicator, ReplicaGroup
+from repro.core.replication import make_replicator
 from repro.core.schema import Status
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import SecondarySupervisor, Supervisor
@@ -78,11 +78,14 @@ class TrainExecutor:
             raise ValueError(f"unknown analyst mode {analyst!r}")
         self.analyst = analyst
         self.replica = None
-        if analyst == "replica":
-            # nothing ships in-process: skip the wire-size accounting
-            self.replica = DeltaReplicator(self.wq, account_encoded=False)
-        elif analyst == "remote":
-            self.replica = ReplicaGroup(self.wq, n_replicas=replicas)
+        if analyst != "snapshot":
+            # all replication policy lives behind the factory: "replica"
+            # maps to the in-process delta arm (nothing ships, so the
+            # wire-size accounting is skipped), "remote" to a pipelined
+            # replica group fed over the wire
+            self.replica = make_replicator(
+                self.wq, analyst, replicas=replicas,
+                account_encoded=False)
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.steer_every = steer_every

@@ -1,0 +1,372 @@
+"""Replicator API conformance + pipelined shipper edges (PR 6).
+
+One surface, four arms: every replicator class satisfies the same
+``Replicator`` contract and is constructed through ``make_replicator``.
+The pipelined shipper keeps the transactional offset/compaction-floor
+semantics of the synchronous path: property-tested bit-identical replica
+state, kill-mid-backlog respawn without offset loss, and close() that
+drains a non-empty queue without hanging. The adaptive codec picks
+varint/raw PER FRAME and stays decode-compatible with both.
+"""
+import inspect
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Status, SteeringEngine, WorkQueue
+from repro.core import wire
+from repro.core.replication import (DeltaReplicator, FullCopyReplica,
+                                    ReplicaGroup, Replicator,
+                                    ShippedDeltaReplicator, make_replicator,
+                                    replay_reference)
+from repro.core.store import ColumnStore
+
+from test_wire import assert_stores_equal, fresh_store, mixed_workload
+
+
+def drive(wq, rng, rounds=4):
+    wq.add_tasks(0, 24, domain_in=rng.uniform(0, 1, (24, 3)))
+    mixed_workload(wq, rng, rounds=rounds)
+
+
+# ------------------------------------------------------------- conformance
+STATS_KEYS = {"records_applied", "encoded_bytes", "sync_count", "lag",
+              "fanout_lag_s"}
+
+MODES = ["delta", "full", "shipped", "remote"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_replicator_conformance(mode):
+    """All four arms implement the one Replicator surface: sync/maybe_sync/
+    lag/flush/recover/promote/close + the uniform stats() dict."""
+    rng = np.random.default_rng(11)
+    wq = WorkQueue(num_workers=3)
+    rep = make_replicator(wq, mode, sync_every=1,
+                          replicas=2 if mode == "remote" else 1)
+    assert isinstance(rep, Replicator)
+    drive(wq, rng)
+    assert rep.lag() > 0
+    assert rep.maybe_sync() is True      # cadence helper fired (sync_every=1)
+    rep.sync()
+    rep.flush()
+    view = wq.store.snapshot_view()
+    rep.sync(upto_version=view.version)
+    assert rep.lag() == 0
+    s = rep.stats()
+    assert STATS_KEYS <= set(s)
+    assert s["lag"] == 0
+    wq2 = rep.promote()
+    assert isinstance(wq2, WorkQueue)
+    assert (wq2.store.col("status") != int(Status.RUNNING)).all()
+    rep.close()                          # promote released it; idempotent
+
+
+def test_conformance_classes_are_replicators():
+    for cls in (DeltaReplicator, ShippedDeltaReplicator, ReplicaGroup,
+                FullCopyReplica):
+        assert issubclass(cls, Replicator)
+
+
+# ----------------------------------------------------------------- factory
+def test_make_replicator_modes_and_aliases():
+    wq = WorkQueue(num_workers=2)
+    for alias in ("delta", "local", "replica"):
+        rep = make_replicator(wq, alias)
+        assert type(rep) is DeltaReplicator
+        rep.close()
+    assert type(make_replicator(wq, "full")) is FullCopyReplica
+    with pytest.raises(ValueError, match="unknown replicator mode"):
+        make_replicator(wq, "carrier-pigeon")
+    with pytest.raises(ValueError, match="single-replica"):
+        make_replicator(wq, "delta", replicas=3)
+
+
+def test_factory_defaults_shipped_modes_to_pipelined():
+    wq = WorkQueue(num_workers=2)
+    rep = make_replicator(wq, "shipped")
+    try:
+        assert type(rep) is ShippedDeltaReplicator and rep.pipelined
+    finally:
+        rep.close()
+    rep = make_replicator(wq, "shipped", pipelined=False)
+    try:
+        assert not rep.pipelined
+    finally:
+        rep.close()
+    grp = make_replicator(wq, "fabric", replicas=2)
+    try:
+        assert type(grp) is ReplicaGroup
+        assert all(m.pipelined for m in grp.members)
+    finally:
+        grp.close()
+
+
+def test_executor_constructs_replicators_only_via_factory():
+    import repro.runtime.executor as executor
+    src = inspect.getsource(executor)
+    assert "make_replicator" in src
+    for cls in ("DeltaReplicator", "ReplicaGroup", "ShippedDeltaReplicator",
+                "FullCopyReplica"):
+        assert f"{cls}(" not in src, f"executor hand-constructs {cls}"
+
+
+# ------------------------------------------------------------ codec object
+def test_as_codec_aliases_and_errors():
+    assert wire.as_codec("raw").name == "raw"
+    assert wire.as_codec("varint").name == "varint"
+    assert wire.as_codec("adaptive").name == "adaptive"
+    c = wire.AdaptiveCodec()
+    assert wire.as_codec(c) is c         # objects pass through untouched
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wire.as_codec("zstd-from-the-future")
+
+
+def test_adaptive_codec_per_frame_choice_and_parity():
+    """Claim-heavy frames compress (varint); dom-heavy finish frames and
+    tiny runs ship raw — and the mixed-frame stream decodes bit-exactly."""
+    rng = np.random.default_rng(21)
+    wq = WorkQueue(num_workers=8)
+    wq.add_tasks(0, 600, domain_in=rng.uniform(0, 1, (600, 3)))
+    for r in range(40):
+        wq.claim(r % 8, k=1, now=float(r) * 0.25)
+    claims = [r for r in wq.log.tail(0) if r.op == "claim"]
+    # long claim run: adaptive == varint choice, well under raw
+    assert wire.frames_nbytes(claims, "adaptive") \
+        == wire.frames_nbytes(claims, "varint")
+    assert wire.frames_nbytes(claims, "raw") \
+        >= 4 * wire.frames_nbytes(claims, "adaptive")
+    # dom-heavy finishes (10 rows/record: the 24 dom bytes/row dwarf the
+    # per-record locator overhead): adaptive refuses to varint — raw layout
+    run = np.nonzero(wq.store.col("status") == int(Status.RUNNING))[0]
+    for ch in np.array_split(run, 4):
+        wq.finish(ch, now=99.0,
+                  domain_out=rng.normal(0, 1e9, (len(ch), 3)))
+    fins = [r for r in wq.log.tail(0) if r.op == "finish"]
+    assert wire.frames_nbytes(fins, "adaptive") \
+        == wire.frames_nbytes(fins, "raw")
+    assert wire.frames_nbytes(fins, "varint") \
+        > wire.frames_nbytes(fins, "raw") * 0.7   # varint would barely pay
+    # tiny runs (< AdaptiveCodec.min_records) stay raw: varint's field
+    # restarts can't amortize
+    tiny = claims[:2]
+    assert wire.frames_nbytes(tiny, "adaptive") \
+        == wire.frames_nbytes(tiny, "raw")
+    # the mixed stream (varint claims + raw finishes) round-trips bit-exactly
+    recs = wq.log.tail(0)
+    buf = wire.delta_to_bytes(recs, codec="adaptive")
+    assert wire.frames_nbytes(recs, "adaptive") == len(buf)
+    s_ref, s_dec = fresh_store(wq), fresh_store(wq)
+    replay_reference(s_ref, recs)
+    replay_reference(s_dec, wire.decode_delta(buf))
+    assert_stores_equal(s_ref, s_dec, wq.store.cols)
+
+
+def test_replicator_accepts_codec_object():
+    wq = WorkQueue(num_workers=2)
+    rep = ShippedDeltaReplicator(wq, codec=wire.VarintCodec())
+    try:
+        assert rep.codec == "varint"
+    finally:
+        rep.close()
+
+
+# ---------------------------------------------------------- encode-once
+def test_delta_encoder_encodes_once_per_span():
+    rng = np.random.default_rng(31)
+    wq = WorkQueue(num_workers=4)
+    drive(wq, rng)
+    recs = wq.log.tail(0)
+    enc = wire.DeltaEncoder()
+    a = enc.encode_records(0, len(recs), recs, "adaptive")
+    b = enc.encode_records(0, len(recs), recs, "adaptive")
+    assert a is b                        # cached, not re-encoded
+    assert enc.stats() == {"encodes": 1, "hits": 1, "entries": 1}
+    # staged chunks share the (lo, hi, codec) key space with records
+    (chunk,) = wire.stage_delta(recs, 0, chunk_records=1 << 30)
+    c = enc.encode_staged(chunk, "adaptive")
+    assert c is a
+    assert enc.stats()["hits"] == 2
+    # a different codec is a different span identity
+    d = enc.encode_records(0, len(recs), recs, "raw")
+    assert d is not a and enc.stats()["encodes"] == 2
+
+
+def test_group_members_share_one_encoder():
+    rng = np.random.default_rng(32)
+    wq = WorkQueue(num_workers=3)
+    grp = ReplicaGroup(wq, n_replicas=3, pipelined=True)
+    try:
+        drive(wq, rng)
+        grp.sync(upto_version=wq.store.version)
+        s = grp.stats()
+        # 3 members shipped the same spans: at least 2/3 of encode calls
+        # were cache hits (the encode-once win)
+        assert s["hits"] >= 2 * s["encodes"]
+        assert s["fanout_lag_s"] >= 0.0
+        assert s["member_spread_s"] >= 0.0
+    finally:
+        grp.close()
+
+
+# ------------------------------------------------- staged views vs compaction
+def test_staged_views_survive_log_truncate():
+    """Chunks staged BEFORE a compaction must encode the same bytes AFTER
+    it: trim_front reallocates, so captured plane views keep aliasing the
+    frozen old buffers (the pipelined shipper's correctness anchor)."""
+    rng = np.random.default_rng(41)
+    wq = WorkQueue(num_workers=4)
+    rep = DeltaReplicator(wq)            # consumer to lift the floor
+    drive(wq, rng, rounds=3)
+    lo = rep.offset
+    rep.sync()                           # ack everything: floor = len(log)
+    recs = wq.log.slice(lo, len(wq.log))
+    chunks = wire.stage_delta(recs, lo, chunk_records=8)
+    eager = [wire.encode_staged(c, "adaptive") for c in chunks]
+    assert wq.compact_log() > 0          # drops + REBASES the hot planes
+    mixed_workload(wq, rng, rounds=2)    # and keeps appending after
+    late = [wire.encode_staged(c, "adaptive") for c in chunks]
+    assert eager == late
+    rep.close()
+
+
+# ----------------------------------------------------- pipelined failure edges
+def test_pipelined_kill_mid_backlog_drains_and_respawns():
+    """A member killed with a queued backlog respawns from a fresh snapshot
+    and the queue drains without offset loss or parity loss."""
+    rng = np.random.default_rng(51)
+    wq = WorkQueue(num_workers=3)
+    rep = ShippedDeltaReplicator(wq, pipelined=True, chunk_records=4,
+                                 queue_depth=64)
+    try:
+        drive(wq, rng, rounds=3)
+        rep.sync()
+        rep.flush()
+        acked = rep.offset
+        rep.process.kill()               # dies holding nothing un-acked
+        mixed_workload(wq, rng, rounds=3)
+        rep.sync()                       # enqueue a multi-chunk backlog
+        rep.sync(upto_version=wq.store.version)   # barrier: drain + pin
+        assert rep.spawn_count == 2
+        assert rep.offset >= acked       # never rewinds past the ack
+        assert rep.offset == len(wq.log)
+        view = wq.store.snapshot_view()
+        state = rep.fetch_remote_state()
+        for name in wq.store.cols:
+            assert np.array_equal(view.col(name),
+                                  state["snapshot"]["cols"][name],
+                                  equal_nan=True), name
+    finally:
+        rep.close()
+    assert not wq.log.has_consumer(rep.consumer)
+
+
+def test_pipelined_close_with_nonempty_queue_is_idempotent_never_hangs():
+    rng = np.random.default_rng(52)
+    wq = WorkQueue(num_workers=3)
+    rep = ShippedDeltaReplicator(wq, pipelined=True, chunk_records=2,
+                                 queue_depth=256)
+    drive(wq, rng, rounds=3)
+    rep.sync()                           # enqueue a backlog, don't flush
+    rep.close()                          # must drain (bounded) and return
+    rep.close()                          # second close is a no-op
+    assert rep.process is None
+    assert not wq.log.has_consumer(rep.consumer)
+
+
+def test_pipelined_error_surfaces_on_flush_and_respawns():
+    """A poison record fails remotely; the background error re-raises at
+    the flush barrier and the NEXT sync respawns cleanly."""
+    rng = np.random.default_rng(53)
+    wq = WorkQueue(num_workers=2)
+    rep = ShippedDeltaReplicator(wq, pipelined=True)
+    try:
+        drive(wq, rng, rounds=2)
+        rep.sync()
+        rep.flush()
+        wq.log.append("mystery_op", {"n": 1}, store_version=wq.store.version)
+        rep.sync()
+        with pytest.raises(RuntimeError, match="mystery_op"):
+            rep.flush()
+        # poison is still in the log: the respawn snapshot absorbs it
+        # (snapshot state, not replayed), so the pipeline recovers
+        wq.claim(0, k=1, now=5.0)
+        rep.sync(upto_version=wq.store.version)
+        assert rep.offset == len(wq.log)
+    finally:
+        rep.close()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), workers=st.integers(2, 5))
+def test_property_pipelined_bit_identical_vs_sync(seed, workers):
+    """Same workload, two consumers of one log — lockstep vs pipelined —
+    end in bit-identical replica stores."""
+    rng = np.random.default_rng(seed)
+    wq = WorkQueue(num_workers=workers)
+    a = ShippedDeltaReplicator(wq, pipelined=False)
+    b = ShippedDeltaReplicator(wq, pipelined=True, chunk_records=8)
+    try:
+        wq.add_tasks(0, 20, domain_in=rng.uniform(0, 1, (20, 3)))
+        for r in range(3):
+            mixed_workload(wq, rng, rounds=2)
+            a.sync()
+            b.sync()
+        v = wq.store.version
+        a.sync(upto_version=v)
+        b.sync(upto_version=v)
+        sa = a.fetch_remote_state()["snapshot"]
+        sb = b.fetch_remote_state()["snapshot"]
+        assert sa["version"] == sb["version"]
+        for name in wq.store.cols:
+            assert np.array_equal(sa["cols"][name], sb["cols"][name],
+                                  equal_nan=True), name
+    finally:
+        a.close()
+        b.close()
+
+
+def test_staged_payload_nbytes_exact_vs_per_record_sum():
+    """The O(runs) ack-accounting fast path must equal the per-record
+    ``payload_nbytes()`` sum bit-exactly for every run shape a real log
+    produces — hot runs, cold ops, resize/requeue/fail mixed in."""
+    rng = np.random.default_rng(71)
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 60, domain_in=rng.uniform(0, 1, (60, 3)))
+    mixed_workload(wq, rng, rounds=4)
+    wq.resize(3)
+    wq.requeue_worker(1)
+    mixed_workload(wq, rng, rounds=2)
+    recs = wq.log.tail(0)
+    for chunk_records in (5, 64, 4096):
+        staged = wire.stage_delta(recs, 0, chunk_records=chunk_records)
+        fast = sum(wire.staged_payload_nbytes(run)
+                   for c in staged for run in c.runs)
+        slow = sum(r.payload_nbytes() for r in recs)
+        assert fast == slow, chunk_records
+
+
+def test_replay_runs_bit_identical_to_record_replay():
+    """The child's run-level replay (``decode_delta_runs`` +
+    ``replay_runs``) must land the same store as record-level
+    ``decode_delta`` + ``replay`` for every codec."""
+    from repro.core.replication import replay, replay_runs
+
+    rng = np.random.default_rng(72)
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 50, domain_in=rng.uniform(0, 1, (50, 3)))
+    mixed_workload(wq, rng, rounds=3)
+    wq.resize(3)                          # cold resize rides the frames
+    mixed_workload(wq, rng, rounds=2)
+    recs = wq.log.tail(0)
+    for codec in wire.CODECS:
+        buf = wire.delta_to_bytes(recs, codec=codec)
+        sa = fresh_store(wq)
+        sb = fresh_store(wq)
+        na = replay(sa, wire.decode_delta(buf))
+        nb = replay_runs(sb, wire.decode_delta_runs(buf))
+        assert na == nb == len(recs)
+        assert_stores_equal(sa, sb, wq.store.cols)

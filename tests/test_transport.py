@@ -143,3 +143,25 @@ def test_child_endpoint_spec_dispatch():
     assert done["sent"]
     server.close()
     listener.close()
+
+
+@pytest.mark.parametrize("kind", ["tcp", "pipe"])
+def test_send_chunks_is_one_frame(kind):
+    """A multi-chunk (scatter-gather) send arrives as ONE frame identical
+    to the joined bytes — the pipelined shipper's coalesced D messages."""
+    pair = {k: (a, b) for k, a, b in both_pairs()}
+    a, b = pair[kind]
+    chunks = [b"D" + b"\x00" * 24, b"hot" * 500, b"", np.arange(64).tobytes()]
+    a.send_chunks(chunks)
+    a.send_bytes(b"after")                 # framing stays aligned
+    assert b.recv_bytes() == b"".join(chunks)
+    assert b.recv_bytes() == b"after"
+    # a large multi-chunk frame (past any single sendmsg) still coheres
+    big = [np.random.default_rng(i).bytes(1 << 20) for i in range(4)]
+    t = threading.Thread(target=a.send_chunks, args=(big,))
+    t.start()
+    got = b.recv_bytes()
+    t.join()
+    assert got == b"".join(big)
+    a.close()
+    b.close()

@@ -251,6 +251,8 @@ def test_negotiate_prefers_varint_falls_back_raw():
     assert wire.negotiate(["raw", "varint"]) == "raw"
     assert wire.negotiate(["zstd-from-the-future"]) == "raw"
     assert wire.negotiate([]) == "raw"
+    # the default offer leads with the per-frame adaptive codec
+    assert wire.negotiate(wire.CODECS) == "adaptive"
 
 
 @settings(max_examples=15, deadline=None)
@@ -390,13 +392,13 @@ def test_shipped_replica_death_mid_ship_resyncs_without_parity_loss():
 
 def test_shipped_replicator_tcp_transport_parity():
     """The identical protocol over a real TCP socket (loopback): separate
-    pid, negotiated varint codec, parity across a truncate."""
+    pid, negotiated adaptive codec, parity across a truncate."""
     rng = np.random.default_rng(5)
     wq = WorkQueue(num_workers=3)
     steer = SteeringEngine(wq)
     rep = ShippedDeltaReplicator(wq, sync_every=8, transport="tcp")
     assert rep.transport == "tcp"
-    assert rep.codec == "varint"           # hello negotiation landed
+    assert rep.codec == "adaptive"         # hello negotiation landed
     assert rep.remote_pid is not None and rep.remote_pid != os.getpid()
     wq.add_tasks(0, 30, domain_in=rng.uniform(0, 1, (30, 3)))
     mixed_workload(wq, rng, rounds=4)
