@@ -15,7 +15,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.simkit import SimResult, run_centralized, run_distributed, \
-    run_replica_lag, run_wire_ship
+    run_replica_lag, run_sharded, run_wire_ship
 from repro.configs import risers_workflow as RW
 
 PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
@@ -292,6 +292,61 @@ def exp_wire_ship(scale: float = 1.0) -> List[Dict]:
             k: (round(v, 5) if isinstance(v, float) else v)
             for k, v in r.items()}})
     return rows
+
+
+def exp_sharded(scale: float = 1.0) -> List[Dict]:
+    """Sharded multi-primary scale-out behind the ShardRouter.
+
+    Runs :func:`benchmarks.simkit.run_sharded` at N=4 shards x 8 workers.
+    HARD-FAILS unless (a) every per-worker claim set and the scatter-gather
+    Q1-Q7 sweep are bit-identical to a single 32-worker primary oracle at
+    the same version vector (and the sweep re-merged over the per-shard
+    REPLICA snapshots still matches), (b) each shard's DeltaReplicator is
+    column-bit-identical across at least one log truncation, and (c)
+    cross-shard stealing moves a non-empty batch, conserves the live
+    task-id multiset, leaves the drained shard claimable, and keeps every
+    shard's replica at bit-parity (the steal is ordinary logged traffic).
+    The weak-scaling ``scaleup`` number itself is gated in
+    ``scripts/bench_trajectory.py`` (``--min-sharded-scaleup``), not here —
+    the smoke scale is too small for a stable wall-clock ratio.
+    """
+    n = max(int(4_000 * scale), 200)
+    thr = max(int(20_000 * scale), 2_000)
+    r = run_sharded(4, 8, n, thr_tasks=thr, sync_every=64)
+    if not r["claim_parity"]:
+        raise AssertionError(
+            "sharded claim sets diverged from the single-primary oracle "
+            "(shard-local partition (tid % L) no longer composes to the "
+            "oracle's global partition tid % W)")
+    if not (r["sweep_equal"] and r["replica_sweep_equal"]):
+        raise AssertionError(
+            f"scatter-gather sweep diverged from the oracle at version "
+            f"vector {r['version_vector']} (oracle v{r['oracle_version']}):"
+            f" sweep_equal={r['sweep_equal']} "
+            f"replica_sweep_equal={r['replica_sweep_equal']}")
+    if not r["replica_cols_equal"]:
+        raise AssertionError("a per-shard DeltaReplicator lost column "
+                             "bit-parity with its primary")
+    if not r["log_truncated_all_shards"]:
+        raise AssertionError(
+            "a shard never truncated its txn log — the replica parity "
+            "check must cross at least one compaction per shard")
+    if r["steal_moved"] <= 0 or r["steal_claimable"] <= 0:
+        raise AssertionError(
+            f"cross-shard stealing moved {r['steal_moved']} tasks and the "
+            f"drained shard claimed {r['steal_claimable']} afterwards — "
+            "the rebalance path is dead")
+    if not r["steal_conserved"]:
+        raise AssertionError(
+            "cross-shard stealing did not conserve the live task-id "
+            "multiset (a task was lost or duplicated in flight)")
+    if not r["steal_replica_parity"]:
+        raise AssertionError(
+            "a shard replica diverged after the steal — the victim prune "
+            "or thief insert is not replaying as ordinary logged traffic")
+    return [{"exp": "e_sharded", **{
+        k: (round(v, 5) if isinstance(v, float) else v)
+        for k, v in r.items()}}]
 
 
 def exp_replay_throughput(scale: float = 1.0) -> List[Dict]:

@@ -42,6 +42,11 @@ DESCRIPTIONS = {
                    "bulk + incremental ship throughput, varint "
                    "compression, concurrent 3-replica fan-out parity + "
                    "leader-kill promote (all hard-checked)",
+    "e_sharded": "N-shard multi-primary router: scatter-gather Q1-Q7 "
+                 "parity vs a single-primary oracle, cross-shard steal "
+                 "conservation + per-shard replica parity (hard-checked), "
+                 "weak-scaling claim throughput (the "
+                 "--min-sharded-scaleup gate)",
     "claim_kernel": "claim_all fast-path vs seed loop at k=1/k=4 "
                     "(the >=5x gate) + device wq_claim op latency",
     "replay_throughput": "batched hot-plane txn-log replay vs "
@@ -88,6 +93,7 @@ def main() -> None:
             lambda: E.exp8_centralized_vs_distributed(args.scale),
         "e_replica_lag": lambda: E.exp_replica_lag(args.scale),
         "e_wire_ship": lambda: E.exp_wire_ship(args.scale),
+        "e_sharded": lambda: E.exp_sharded(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
         "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
         "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
@@ -161,6 +167,12 @@ def _headline(name: str, rows) -> str:
             return (f"ship_mbps_bulk_min={mbps};ship_mbps_inc_min={inc};"
                     f"compression={comp}x;"
                     f"transport={tr};remote+fanout_parity={eq}")
+        if name == "e_sharded":
+            r = rows[0]
+            return (f"scaleup={r['scaleup']}x@{r['shards']}shards;"
+                    f"sweep_equal={r['sweep_equal']};"
+                    f"steal_moved={r['steal_moved']};"
+                    f"steal_conserved={r['steal_conserved']}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

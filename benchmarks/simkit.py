@@ -691,6 +691,263 @@ def run_wire_ship(num_workers: int, num_tasks: int,
     return res
 
 
+def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
+                *, activities: int = 3, sync_every: int = 64,
+                thr_tasks: Optional[int] = None, thr_k: int = 4,
+                repeats: int = 2, seed: int = 0) -> Dict:
+    """Sharded multi-primary drill (ShardRouter), three phases:
+
+    **A. Oracle parity.** The identical deterministic workload (inserts
+    with provenance chains, claims, retries, finishes, a Q8 patch, a
+    steering prune) runs on an N-shard router AND on a single W-worker
+    primary. Because shard ``(tid % W) // L`` + local partition ``tid % L``
+    compose to the oracle's global partition ``tid % W``, every per-worker
+    claim set must match id-for-id, and the router's scatter-gather
+    Q1-Q7 sweep — pinned at a version vector cut after the drill — must be
+    bit-identical to the oracle's single-snapshot sweep (all times are
+    dyadic so merged partial sums reassociate exactly). Each shard also
+    feeds its own ``DeltaReplicator`` across log compactions; the merged
+    sweep is re-run over the REPLICA snapshot vector and per-shard replica
+    columns are compared bit-for-bit.
+
+    **B. Cross-shard stealing.** Shard 0 is drained, a fresh batch tops up
+    the siblings, and ``rebalance`` pulls half the richest sibling's READY
+    backlog over the transport. Checked: the live task-id multiset is
+    conserved, the drained shard can claim again, and every shard's
+    replica still replays to bit-parity (the steal is a logged prune + a
+    normal logged insert — no new record type).
+
+    **C. Weak-scaling claim throughput.** Fixed per-shard load (``thr_tasks``
+    tasks on ``workers_per_shard`` partitions): a 1-shard router vs an
+    N-shard router, claim-drained with ``claim_all(k=thr_k)``. Shards are
+    independent primaries (disjoint stores/logs), so per-shard walls are
+    measured separately and the N-shard wall is the MAX over shards — the
+    makespan of N data nodes claiming in parallel, the same node-parallel
+    accounting the rest of simkit uses. ``scaleup`` = aggregate sharded
+    throughput / single-primary throughput (the ``--min-sharded-scaleup``
+    CI gate); best-of-``repeats`` per arm.
+    """
+    from repro.core.sharding_router import ShardRouter
+
+    S, L = num_shards, workers_per_shard
+    W = S * L
+    cap = max(1 << 14, 4 * num_tasks)
+    router = ShardRouter(S, L, capacity=cap, replicate="delta",
+                         sync_every=sync_every)
+    oracle = WorkQueue(num_workers=W, capacity=cap)
+    osteer = SteeringEngine(oracle)
+
+    # ---------------------------------------------------- phase A: parity
+    def dom_in(ids: np.ndarray) -> np.ndarray:
+        h = (ids * 2654435761) % (1 << 10)
+        return np.stack([(h % 977) / 976.0, ((h * 3) % 911) / 910.0,
+                         ((h * 7) % 1013) / 1012.0], 1)
+
+    def dom_out(ids: np.ndarray) -> np.ndarray:
+        # dyadic denominators: exact floats, so out0-threshold tests and
+        # merged segment sums are bit-stable
+        return np.stack([(ids % 7) / 8.0, (ids % 5) / 4.0,
+                         (ids % 3) / 2.0], 1)
+
+    per_act = max(num_tasks // activities, 2 * W)
+    prev = None
+    for a in range(activities):
+        ids = np.arange(a * per_act, (a + 1) * per_act, dtype=np.int64)
+        kw = dict(domain_in=dom_in(ids), duration_est=1.0, now=0.0)
+        if prev is not None:
+            kw["parent_task"] = prev          # provenance chain for Q7
+        rid = router.add_tasks(a, per_act, **kw)
+        oid = oracle.add_tasks(a, per_act, **kw)
+        assert np.array_equal(rid, ids) and np.array_equal(oid, ids)
+        prev = ids
+
+    def shard_rows(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        """Map global task ids to (shard, rows). Valid in phase A only:
+        no steal has run yet, so shard task_id columns are ascending."""
+        out = []
+        owner = router.shard_of(ids)
+        for s in range(S):
+            m = owner == s
+            if not m.any():
+                continue
+            tid = router.shards[s].wq.store.col("task_id")
+            pos = np.searchsorted(tid, ids[m])
+            assert np.array_equal(tid[pos], ids[m])
+            out.append((s, pos))
+        return out
+
+    claim_parity = True
+    clock = 1.0
+    rounds = 0
+    while rounds < 32:
+        rc = router.claim_all(k=2, now=clock, steal=False)
+        oc = oracle.claim_all(k=2, now=clock, steal=False)
+        r_ids = {g: np.sort(router.shards[s].wq.store.col("task_id")[rows])
+                 for g, (s, rows) in rc.items() if len(rows)}
+        o_ids = {g: np.sort(oracle.store.col("task_id")[rows])
+                 for g, rows in oc.items() if len(rows)}
+        claim_parity &= set(r_ids) == set(o_ids) and all(
+            np.array_equal(r_ids[g], o_ids[g]) for g in r_ids)
+        if not o_ids:
+            break
+        all_ids = np.sort(np.concatenate(list(o_ids.values())))
+        fail_ids = all_ids[::7] if rounds % 3 == 2 else all_ids[:0]
+        fin = np.setdiff1d(all_ids, fail_ids)
+        fa, fb = fin[fin % 2 == 0], fin[fin % 2 == 1]
+        # oracle rows == task ids (single contiguous insertion order)
+        if len(fail_ids):
+            oracle.fail(fail_ids, now=clock + 0.25)
+            for s, pos in shard_rows(fail_ids):
+                router.shards[s].wq.fail(pos, now=clock + 0.25)
+        for ids_, dt in ((fa, 1.0), (fb, 1.5)):   # two dyadic durations:
+            if not len(ids_):                     # Q6/Q7 means non-trivial
+                continue
+            oracle.finish(ids_, now=clock + dt, domain_out=dom_out(ids_))
+            for s, pos in shard_rows(ids_):
+                tid = router.shards[s].wq.store.col("task_id")[pos]
+                router.shards[s].wq.finish(pos, now=clock + dt,
+                                           domain_out=dom_out(tid))
+        if rounds == 4:                           # user steering (Q8):
+            osteer.q8_patch_ready(0, "in0", 9.5,  # value predicate selects
+                                  predicate=lambda v: v > 0.8)
+            for sh in router.shards:              # the same tasks per shard
+                SteeringEngine(sh.wq).q8_patch_ready(
+                    0, "in0", 9.5, predicate=lambda v: v > 0.8)
+        if rounds == 6:                           # data reduction
+            osteer.prune("in1", 0.0, 0.02)
+            for sh in router.shards:
+                SteeringEngine(sh.wq).prune("in1", 0.0, 0.02)
+        for sh in router.shards:                  # replicate + compact
+            sh.replicator.maybe_sync()            # mid-drill, so catch-up
+        router.compact()                          # crosses truncations
+        clock += 2.0
+        rounds += 1
+
+    views = router.snapshot_vector()
+    oview = oracle.store.snapshot_view()
+    merged = ShardRouter.comparable(router.run_all(clock, views=views))
+    onorm = ShardRouter.oracle_normalize(
+        osteer.run_all(clock, view=oview), oview)
+    sweep_equal = _sweep_fingerprint(merged) == _sweep_fingerprint(onorm)
+
+    # replicas: catch up to the pinned vector, compare bit-for-bit, then
+    # run the merged sweep OVER THE REPLICA SNAPSHOTS
+    replica_cols_equal = True
+    for s, sh in enumerate(router.shards):
+        sh.replicator.sync(upto_version=views[s].version)
+        replica_cols_equal &= all(
+            np.array_equal(views[s].col(n), sh.replicator.store.col(n),
+                           equal_nan=True)
+            for n in sh.wq.store.cols)
+    rep_views = tuple(sh.replicator.snapshot_view()
+                      for sh in router.shards)
+    merged_rep = ShardRouter.comparable(router.run_all(clock,
+                                                       views=rep_views))
+    replica_sweep_equal = (_sweep_fingerprint(merged_rep)
+                           == _sweep_fingerprint(onorm))
+    router.sync_replicas()
+    router.compact()
+    log_truncated = all(sh.wq.log.base > 0 for sh in router.shards)
+
+    # --------------------------------------------- phase B: work stealing
+    topup = router.add_tasks(
+        0, 8 * W, domain_in=dom_in(np.arange(8 * W)),
+        duration_est=1.0, now=clock)
+    assert len(topup) == 8 * W
+    sh0 = router.shards[0]
+    while sh0.wq.ready_counts().sum() > 0:        # drain shard 0 dry
+        got = sh0.wq.claim_all(k=64, now=clock)
+        rows = np.concatenate([v for v in got.values() if len(v)])
+        if not len(rows):
+            break
+        sh0.wq.finish(rows, now=clock + 1.0)
+        clock += 2.0
+    live_before = router.live_task_ids()
+    steal_moved = router.rebalance(now=clock)
+    steal_conserved = np.array_equal(live_before, router.live_task_ids())
+    got = sh0.wq.claim_all(k=4, now=clock + 2.0)
+    steal_claimable = int(sum(len(v) for v in got.values()))
+    router.sync_replicas()                        # steal is ordinary logged
+    steal_replica_parity = True                   # ops: replicas stay equal
+    for sh in router.shards:
+        v = sh.wq.store.snapshot_view()
+        sh.replicator.sync(upto_version=v.version)
+        steal_replica_parity &= all(
+            np.array_equal(v.col(n), sh.replicator.store.col(n),
+                           equal_nan=True)
+            for n in sh.wq.store.cols)
+    router.check_invariants()
+    oracle.check_invariants()
+    steal_wire_bytes = int(router.steal_stats.wire_bytes)
+    router.close()
+
+    # ------------------------------------- phase C: weak-scaling throughput
+    T = thr_tasks if thr_tasks is not None else max(4 * num_tasks, 2000)
+
+    def claim_drain_wall(wq: WorkQueue) -> Tuple[float, int]:
+        wall, claimed, t = 0.0, 0, 0.0
+        while True:
+            t0 = time.perf_counter()
+            out = wq.claim_all(k=thr_k, now=t)
+            wall += time.perf_counter() - t0
+            rows = np.concatenate([v for v in out.values() if len(v)]) \
+                if any(len(v) for v in out.values()) \
+                else np.empty(0, np.int64)
+            if not len(rows):
+                break
+            claimed += len(rows)
+            wq.finish(rows, now=t + 1.0)          # untimed: claim path only
+            t += 2.0
+        return wall, claimed
+
+    def arm(n_shards: int) -> Tuple[float, float]:
+        """(aggregate claim throughput, max per-shard wall)."""
+        r = ShardRouter(n_shards, L, capacity=max(1 << 14, 2 * T))
+        r.add_tasks(0, n_shards * T, duration_est=1.0, now=0.0)
+        walls, claimed = [], 0
+        for sh in r.shards:
+            w, c = claim_drain_wall(sh.wq)
+            walls.append(w)
+            claimed += c
+        r.close()
+        assert claimed == n_shards * T, (claimed, n_shards * T)
+        wall = max(walls)
+        return claimed / wall, wall
+
+    thr_1 = thr_S = 0.0
+    wall_1 = wall_S = float("inf")
+    for _ in range(max(repeats, 1)):
+        t1, w1 = arm(1)
+        tS, wS = arm(S)
+        if t1 > thr_1:
+            thr_1, wall_1 = t1, w1
+        if tS > thr_S:
+            thr_S, wall_S = tS, wS
+
+    return {
+        "shards": S, "workers_per_shard": L, "global_workers": W,
+        "parity_rounds": rounds,
+        "claim_parity": bool(claim_parity),
+        "sweep_equal": bool(sweep_equal),
+        "replica_cols_equal": bool(replica_cols_equal),
+        "replica_sweep_equal": bool(replica_sweep_equal),
+        "log_truncated_all_shards": bool(log_truncated),
+        "version_vector": [int(v.version) for v in views],
+        "oracle_version": int(oview.version),
+        "steal_moved": int(steal_moved),
+        "steal_conserved": bool(steal_conserved),
+        "steal_claimable": steal_claimable,
+        "steal_wire_bytes": steal_wire_bytes,
+        "steal_replica_parity": bool(steal_replica_parity),
+        "thr_tasks_per_shard": int(T), "claim_k": int(thr_k),
+        "claims_per_s_single": round(thr_1, 1),
+        "claims_per_s_sharded": round(thr_S, 1),
+        "claim_wall_single_s": round(wall_1, 4),
+        "claim_wall_sharded_max_s": round(wall_S, 4),
+        "scaleup": round(thr_S / thr_1, 2) if thr_1 else 0.0,
+    }
+
+
 def run_centralized(num_workers: int, threads: int, num_tasks: int,
                     mean_dur_s: float, *, seed: int = 0,
                     request_overhead_s: float = 0.0) -> SimResult:

@@ -25,6 +25,13 @@ the enforced floors regresses:
   compressed hot-frame byte ratio on the claims/finishes-heavy bulk log
   must hold its floor (decode bit-parity is hard-checked in the experiment
   and the wire tests)
+- sharded scale-out (e_sharded): a 4-shard ShardRouter must deliver
+  --min-sharded-scaleup x the single-primary claim throughput under weak
+  scaling (fixed per-shard load, N-shard wall = max over independent
+  shards), with scatter-gather Q1-Q7 sweeps bit-identical to a
+  single-primary oracle at the same version vector and cross-shard work
+  stealing conserving the live task-id multiset (both hard-checked inside
+  the experiment)
 - replica fan-out (e_wire_ship's ReplicaGroup drill): every member of the
   3-replica group must sweep bit-identically after a broadcast sync, and
   promote() must elect the highest-acked survivor after the leader dies
@@ -38,11 +45,13 @@ IS the performance trajectory of the repo (CI prints it on every run, so a
 regression is visible as a bend in the series, not just a red X).
 
 Usage (what the CI job runs):
-    python scripts/bench_trajectory.py --pr 3 --min-claim-speedup 5 \
+    python scripts/bench_trajectory.py --pr auto --min-claim-speedup 5 \
         --min-replay-speedup 10
 
-The builder seeds the snapshot for the current PR by running the same
-command locally and committing the resulting BENCH_PR<n>.json.
+``--pr auto`` resolves to highest committed BENCH_PR<n>.json + 1. The
+builder seeds the snapshot for the current PR by running the same command
+locally and committing the resulting BENCH_PR<n>.json; CI then re-measures
+against the same gates (writing its snapshot as an artifact only).
 """
 from __future__ import annotations
 
@@ -76,6 +85,9 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
     # raises unless the shipped replica lives in another process, synced
     # across a truncate, and swept bit-identically to the primary
     wire_rows = E.exp_wire_ship(scale_replica)
+    # raises unless scatter-gather sweeps match the single-primary oracle
+    # and cross-shard stealing conserves the live task-id multiset
+    sharded = E.exp_sharded(scale_claim)[0]
     return {
         "claim_speedup_min": min(sp_k1),
         "claim_speedup_max": max(sp_k1),
@@ -119,6 +131,16 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
                              and r["fanout_elected_highest_acked"]
                              and r["fanout_promote_no_running"]
                              for r in wire_rows),
+        "sharded_scaleup": sharded["scaleup"],
+        "sharded_shards": sharded["shards"],
+        "sharded_claims_per_s": sharded["claims_per_s_sharded"],
+        "sharded_sweep_equal": (sharded["sweep_equal"]
+                                and sharded["replica_sweep_equal"]
+                                and sharded["claim_parity"]),
+        "sharded_steal_conserved": (sharded["steal_conserved"]
+                                    and sharded["steal_moved"] > 0
+                                    and sharded["steal_replica_parity"]),
+        "sharded_steal_moved": sharded["steal_moved"],
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -135,10 +157,25 @@ def trajectory() -> list:
     return snaps
 
 
+def next_pr_number() -> int:
+    """Highest committed BENCH_PR<n>.json + 1 — what ``--pr auto`` resolves
+    to, so CI never re-gates a stale snapshot because someone forgot to
+    bump a hand-edited number."""
+    import re
+    nums = []
+    for p in ROOT.glob("BENCH_PR*.json"):
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", p.name)
+        if m:
+            nums.append(int(m.group(1)))
+    return max(nums, default=0) + 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pr", type=int, required=True,
-                    help="PR number — writes BENCH_PR<n>.json at the root")
+    ap.add_argument("--pr", required=True,
+                    help="PR number — writes BENCH_PR<n>.json at the root; "
+                         "'auto' derives it as highest committed "
+                         "BENCH_PR<n>.json + 1")
     ap.add_argument("--min-claim-speedup", type=float, default=5.0)
     ap.add_argument("--min-replay-speedup", type=float, default=10.0,
                     help="floor for batched vs record-at-a-time txn-log "
@@ -157,6 +194,10 @@ def main() -> None:
                          "broadcast wall — it must track the slowest "
                          "member, not the serial member sum (0 records "
                          "without enforcing)")
+    ap.add_argument("--min-sharded-scaleup", type=float, default=3.0,
+                    help="floor for e_sharded's weak-scaling aggregate "
+                         "claim throughput at 4 shards vs 1 (0 records "
+                         "without enforcing)")
     ap.add_argument("--min-compression", type=float, default=2.0,
                     help="floor for the varint codec's raw/compressed "
                          "hot-frame byte ratio on the bulk log "
@@ -166,11 +207,12 @@ def main() -> None:
                          "100k-task / 100k-record runs)")
     ap.add_argument("--replica-scale", type=float, default=1.0)
     args = ap.parse_args()
+    pr = next_pr_number() if args.pr == "auto" else int(args.pr)
 
     t0 = time.perf_counter()
     snap = measure(args.scale, args.replica_scale)
     snap["wall_s"] = round(time.perf_counter() - t0, 1)
-    out = ROOT / f"BENCH_PR{args.pr}.json"
+    out = ROOT / f"BENCH_PR{pr}.json"
     out.write_text(json.dumps(snap, indent=1) + "\n")
 
     print("bench trajectory (committed BENCH_PR*.json + this run):")
@@ -183,7 +225,8 @@ def main() -> None:
               f" ship_mbps={pt.get('ship_mbps')}"
               f" ship_inc={pt.get('ship_mbps_incremental')}"
               f" fanout_lag_ms={pt.get('fanout_lag_ms')}"
-              f" compression={pt.get('compression_ratio')}")
+              f" compression={pt.get('compression_ratio')}"
+              f" sharded_scaleup={pt.get('sharded_scaleup')}")
 
     failures = []
     if snap["claim_speedup_min"] < args.min_claim_speedup:
@@ -231,6 +274,18 @@ def main() -> None:
     if snap["replica_log_truncated_min"] <= 0:
         failures.append("replica parity ran without a TxnLog.truncate — "
                         "the compaction path went unexercised")
+    if args.min_sharded_scaleup > 0 \
+            and snap["sharded_scaleup"] < args.min_sharded_scaleup:
+        failures.append(
+            f"sharded claim scaleup {snap['sharded_scaleup']}x at "
+            f"{snap['sharded_shards']} shards is below the "
+            f"{args.min_sharded_scaleup}x gate")
+    if not snap["sharded_sweep_equal"]:
+        failures.append("sharded scatter-gather sweep lost parity with "
+                        "the single-primary oracle")
+    if not snap["sharded_steal_conserved"]:
+        failures.append("cross-shard work stealing lost or duplicated "
+                        "tasks (or broke replica parity)")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)
@@ -249,7 +304,10 @@ def main() -> None:
           f"fanout_lag_ms={snap['fanout_lag_ms']} "
           f"(gate {args.max_fanout_lag_ms}ms, "
           f"member max {snap['fanout_member_max_ms']}ms / "
-          f"sum {snap['fanout_member_sum_ms']}ms) "
+          f"sum {snap['fanout_member_sum_ms']}ms), "
+          f"sharded_scaleup={snap['sharded_scaleup']}x@"
+          f"{snap['sharded_shards']}shards "
+          f"(gate {args.min_sharded_scaleup}x) "
           f"[{snap['wire_transport']}/{snap['wire_codec']}]")
 
 

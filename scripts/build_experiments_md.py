@@ -154,6 +154,12 @@ in-memory column-store ops — i.e., what the TPU adaptation actually costs.
                        " frames, concurrent 3-replica fan-out parity +"
                        " leader-kill election, throughput + bit-parity +"
                        " remote failover, all hard-checked",
+        "e_sharded": "Sharded multi-primary scale-out (ShardRouter, 4"
+                     " shards): scatter-gather Q1-Q7 parity vs a"
+                     " single-primary oracle at one version vector,"
+                     " cross-shard steal conservation + per-shard replica"
+                     " parity (hard-checked), weak-scaling claim"
+                     " throughput (the --min-sharded-scaleup gate)",
         "replay_throughput": "Batched hot-plane txn-log replay vs"
                              " record-at-a-time (bit-parity enforced)",
         "steering_sweep": "Full Q1-Q7 steering sweep latency on a ~100k-row"

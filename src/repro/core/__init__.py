@@ -9,3 +9,4 @@ from repro.core.steering import SteeringEngine  # noqa: F401
 from repro.core.replication import (DeltaReplicator, ReplicaGroup,  # noqa: F401
                                     ReplicaSet, ReplicationFabric,
                                     ShippedDeltaReplicator)
+from repro.core.sharding_router import Shard, ShardRouter  # noqa: F401

@@ -1,0 +1,546 @@
+"""ShardRouter: N full primaries behind one routing facade (paper §4-5).
+
+SchalaDB's scalability argument rests on PARTITIONED OWNERSHIP: the Task
+table is hash-distributed across data nodes, every node is a primary for
+its partitions, and the execution engine + steering queries operate on the
+union. Our single ``WorkQueue`` reproduces the node-local engine; this
+module reproduces the distribution layer:
+
+* **hash routing** — task id -> shard via the same modulo family the
+  WorkQueue already uses for partitions. With ``W = S * L`` global workers
+  (S shards x L local partitions), shard ``(tid % W) // L`` and local
+  partition ``tid % L`` compose to the exact global partition ``tid % W``
+  a single W-worker primary would assign, which is what makes the
+  single-primary oracle comparisons in ``benchmarks/simkit.run_sharded``
+  exact rather than statistical.
+* **full primaries** — each shard owns a private ``ColumnStore`` +
+  ``TxnLog`` and (optionally) a replicator from the existing
+  :func:`~repro.core.replication.make_replicator` factory, so compaction,
+  wire shipping, and fan-out all work per shard unchanged.
+* **scatter-gather steering** — :meth:`run_all` pins one snapshot per
+  shard (a *version vector*), computes per-shard partial aggregates with
+  the same bincount/segment reductions as
+  :class:`~repro.core.steering.SteeringEngine`, and merges them into
+  results bit-identical to a single primary at the same data (Q7's
+  provenance walk crosses shards through an id -> (shard, row) map).
+* **cross-shard work stealing** — when a shard's incremental READY counts
+  drain, :meth:`rebalance` pulls a batch from the richest sibling over a
+  real ``Transport`` endpoint pair; the victim logs a prune and the thief
+  logs a NORMAL insert (original task ids preserved), so each shard's
+  replicas replay to bit-parity without any new log record type.
+
+Float caveat for bit-parity: merged Q6/Q7 means add per-shard partial sums
+in shard order while the oracle sums in row order. For workloads whose
+times are exactly representable (the drills use dyadic clocks) the results
+are bit-identical; for arbitrary floats they agree to ulp-level
+reassociation error.
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.schema import Status
+from repro.core.store import SnapshotView
+from repro.core.transport import TCPTransport
+from repro.core.workqueue import WorkQueue
+
+_OPEN = (int(Status.READY), int(Status.RUNNING), int(Status.BLOCKED))
+
+# steal batches cross the wire in bounded frames with a strict
+# send -> recv alternation, so an in-process endpoint pair (socketpair)
+# can never deadlock on a kernel buffer, whatever the batch size
+_STEAL_CHUNK_ROWS = 256
+
+
+@dataclass
+class Shard:
+    """One primary: private queue (own store + txn log) + its replicator."""
+    index: int
+    wq: WorkQueue
+    replicator: Optional[object] = None
+    steals_in: int = 0
+    steals_out: int = 0
+
+
+@dataclass
+class StealStats:
+    batches: int = 0
+    tasks: int = 0
+    wire_bytes: int = 0
+    per_shard_in: Dict[int, int] = field(default_factory=dict)
+
+
+class ShardRouter:
+    """Route a W-worker workload across ``num_shards`` full primaries."""
+
+    def __init__(self, num_shards: int, workers_per_shard: int, *,
+                 capacity: int = 1 << 16,
+                 replicate: Optional[str] = None,
+                 replicas: int = 1,
+                 sync_every: int = 64,
+                 transport: Optional[str] = None,
+                 device_claim: Optional[bool] = None):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if workers_per_shard < 1:
+            raise ValueError("workers_per_shard must be >= 1")
+        self.num_shards = num_shards
+        self.workers_per_shard = workers_per_shard
+        self.num_global_workers = num_shards * workers_per_shard
+        self._next_task_id = 0
+        self.shards: List[Shard] = []
+        for s in range(num_shards):
+            wq = WorkQueue(num_workers=workers_per_shard, capacity=capacity,
+                           device_claim=device_claim)
+            rep = None
+            if replicate is not None:
+                from repro.core.replication import make_replicator
+                rep = make_replicator(wq, replicate, replicas=replicas,
+                                      sync_every=sync_every,
+                                      transport=transport,
+                                      account_encoded=False)
+            self.shards.append(Shard(index=s, wq=wq, replicator=rep))
+        # the steal hop: one connected endpoint pair shared by all shards
+        # (in-process stand-in for the victim->thief socket; the frames on
+        # it are the real wire payloads)
+        self._steal_tx, self._steal_rx = TCPTransport.pair()
+        self.steal_stats = StealStats()
+
+    # ------------------------------------------------------------- routing
+    def shard_of(self, task_ids: np.ndarray) -> np.ndarray:
+        """Owning shard per task id (hash routing)."""
+        ids = np.asarray(task_ids, np.int64)
+        return (ids % self.num_global_workers) // self.workers_per_shard
+
+    def global_worker(self, shard: int, local_worker) -> np.ndarray:
+        """Local partition id -> global worker id (the bijection that makes
+        merged Q1/Q3 keys comparable with a single W-worker primary)."""
+        return shard * self.workers_per_shard + np.asarray(local_worker)
+
+    # ------------------------------------------------------------- inserts
+    def add_tasks(self, activity_id: int, n: int, *,
+                  status: Status = Status.READY,
+                  duration_est=0.0,
+                  domain_in: Optional[np.ndarray] = None,
+                  parent_task: Optional[np.ndarray] = None,
+                  now: float = 0.0) -> np.ndarray:
+        """Insert ``n`` tasks with GLOBALLY unique ids, scattered to their
+        owning shards (each shard insert is one normal logged txn)."""
+        ids = np.arange(self._next_task_id, self._next_task_id + n,
+                        dtype=np.int64)
+        self._next_task_id += n
+        dur = np.asarray(duration_est, np.float64)
+        owner = self.shard_of(ids)
+        for s, sh in enumerate(self.shards):
+            m = owner == s
+            cnt = int(m.sum())
+            if not cnt:
+                continue
+            sh.wq.add_tasks(
+                activity_id, cnt, status=status,
+                duration_est=(float(dur) if dur.ndim == 0 else dur[m]),
+                domain_in=None if domain_in is None else domain_in[m],
+                parent_task=None if parent_task is None else
+                np.asarray(parent_task)[m],
+                now=now, task_ids=ids[m])
+        return ids
+
+    # -------------------------------------------------------------- claims
+    def claim_all(self, k: int = 1, *, now: float = 0.0, steal: bool = True
+                  ) -> Dict[int, Tuple[int, np.ndarray]]:
+        """Batched claim on every shard: {global_worker: (shard, rows)}.
+
+        ``rows`` index into that shard's store; ``steal`` here is the
+        INTRA-shard redistribution the WorkQueue already does — cross-shard
+        stealing is :meth:`rebalance`.
+        """
+        out: Dict[int, Tuple[int, np.ndarray]] = {}
+        for s, sh in enumerate(self.shards):
+            got = sh.wq.claim_all(k=k, now=now, steal=steal)
+            for lw, rows in got.items():
+                out[int(self.global_worker(s, lw))] = (s, rows)
+        return out
+
+    def ready_counts(self) -> np.ndarray:
+        """Global READY-per-partition vector (length S*L): the concatenation
+        of every shard's incremental counts."""
+        return np.concatenate([sh.wq.ready_counts() for sh in self.shards])
+
+    def tasks_left(self) -> int:
+        """Q4 over the union of shards (the executor's termination check)."""
+        return int(sum(
+            np.isin(sh.wq.store.col("status"), _OPEN).sum()
+            for sh in self.shards))
+
+    def live_task_ids(self) -> np.ndarray:
+        """Sorted ids of every materialized, non-PRUNED task across shards —
+        the conservation invariant cross-shard stealing must preserve."""
+        parts = []
+        for sh in self.shards:
+            st = sh.wq.store.col("status")
+            keep = (st != int(Status.EMPTY)) & (st != int(Status.PRUNED))
+            parts.append(sh.wq.store.col("task_id")[keep])
+        return np.sort(np.concatenate(parts)) if parts \
+            else np.empty(0, np.int64)
+
+    # ------------------------------------------------- cross-shard stealing
+    def rebalance(self, *, now: float = 0.0,
+                  max_batch: Optional[int] = None) -> int:
+        """Cross-shard work stealing: every DRAINED shard (zero READY rows)
+        pulls half the richest sibling's READY backlog over the transport.
+
+        The victim's half is marked PRUNED in a logged transaction and the
+        thief re-inserts the identical tasks (original ids, original inputs)
+        as a NORMAL logged insert — both shards' replicas replay their own
+        log to bit-parity, no new record type needed. Returns tasks moved.
+
+        Migration resets a task's retry counter and submit time (only READY
+        rows travel, so no start/end history is lost); the victim keeps a
+        PRUNED tombstone row under the same id — :meth:`live_task_ids`
+        resolves ids to their live copy.
+        """
+        totals = [int(sh.wq.ready_counts().sum()) for sh in self.shards]
+        moved = 0
+        for s, sh in enumerate(self.shards):
+            if totals[s] > 0:
+                continue
+            victim = int(np.argmax(totals))
+            if victim == s or totals[victim] < 2:
+                continue
+            batch = totals[victim] // 2
+            if max_batch is not None:
+                batch = min(batch, max_batch)
+            got = self._pull(self.shards[victim], sh, batch, now)
+            totals[victim] -= got
+            totals[s] += got
+            moved += got
+        return moved
+
+    def _pull(self, victim: Shard, thief: Shard, batch: int,
+              now: float) -> int:
+        vst = victim.wq.store
+        rows = np.nonzero(vst.col("status") == int(Status.READY))[0][:batch]
+        if not len(rows):
+            return 0
+        in_cols = sorted(
+            (c for c in vst.cols
+             if c.startswith("in") and c[2:].isdigit()),
+            key=lambda c: int(c[2:]))
+        moved = 0
+        for lo in range(0, len(rows), _STEAL_CHUNK_ROWS):
+            chunk = rows[lo:lo + _STEAL_CHUNK_ROWS]
+            payload = {
+                "ids": vst.col("task_id")[chunk],
+                "act": vst.col("activity_id")[chunk],
+                "parent": vst.col("parent_task")[chunk],
+                "dur": vst.col("duration_est")[chunk],
+                "dom": np.stack([vst.col(c)[chunk] for c in in_cols], 1)
+                if in_cols else None,
+            }
+            # tombstone the victim's copy FIRST (logged), then ship: a
+            # task is never claimable on two shards at once
+            victim.wq.prune(chunk)
+            buf = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+            self._steal_tx.send_bytes(buf)
+            wire = self._steal_rx.recv_bytes()
+            self.steal_stats.wire_bytes += len(wire)
+            p = pickle.loads(wire)
+            for a in np.unique(p["act"]):
+                m = p["act"] == a
+                thief.wq.add_tasks(
+                    int(a), int(m.sum()),
+                    duration_est=p["dur"][m],
+                    domain_in=None if p["dom"] is None else p["dom"][m],
+                    parent_task=p["parent"][m],
+                    now=now, task_ids=p["ids"][m])
+            moved += len(chunk)
+        victim.steals_out += 1
+        thief.steals_in += 1
+        self.steal_stats.batches += 1
+        self.steal_stats.tasks += moved
+        self.steal_stats.per_shard_in[thief.index] = \
+            self.steal_stats.per_shard_in.get(thief.index, 0) + moved
+        return moved
+
+    # -------------------------------------------------- snapshots / replicas
+    def version_vector(self) -> Tuple[int, ...]:
+        return tuple(sh.wq.store.version for sh in self.shards)
+
+    def snapshot_vector(self) -> Tuple[SnapshotView, ...]:
+        """One immutable snapshot per shard — the consistent cut every
+        scatter-gather sweep pins (the distributed analogue of
+        ``SteeringEngine.snapshot_scope``)."""
+        return tuple(sh.wq.store.snapshot_view() for sh in self.shards)
+
+    def replica_vector(self) -> Tuple[SnapshotView, ...]:
+        """Snapshot vector cut from the per-shard REPLICAS (analyst-side
+        HTAP: sweeps run off the primaries' claim path)."""
+        views = []
+        for sh in self.shards:
+            if sh.replicator is None:
+                raise ValueError("shard has no replicator "
+                                 "(construct with replicate=...)")
+            sh.replicator.sync()
+            views.append(sh.replicator.snapshot_view())
+        return tuple(views)
+
+    def sync_replicas(self) -> None:
+        for sh in self.shards:
+            if sh.replicator is not None:
+                sh.replicator.sync()
+
+    def compact(self) -> int:
+        """Per-shard log compaction (each shard's consumer floor governs)."""
+        return sum(sh.wq.compact_log() for sh in self.shards)
+
+    def consumer_lags(self) -> Dict[str, int]:
+        """Union of per-shard consumer lags, keys namespaced by shard."""
+        out: Dict[str, int] = {}
+        for s, sh in enumerate(self.shards):
+            for name, lag in sh.wq.consumer_lags().items():
+                out[f"shard{s}:{name}"] = lag
+        return out
+
+    # ------------------------------------------------ scatter-gather sweep
+    def run_all(self, now: float,
+                views: Optional[Sequence[SnapshotView]] = None,
+                horizon: float = 60.0) -> Dict[str, object]:
+        """Distributed Q1-Q7 sweep: per-shard partial aggregates merged into
+        the single-primary result shape.
+
+        ``views`` pins the sweep at an explicit version vector (default: cut
+        one now). Differences from ``SteeringEngine.run_all``: ``q7`` holds
+        global TASK IDS (sorted) rather than store rows — rows are
+        shard-local and meaningless globally — and ``version`` is the
+        version vector (a list). Everything else is bit-identical to a
+        W-worker single primary over the same data.
+        """
+        if views is None:
+            views = self.snapshot_vector()
+        if len(views) != self.num_shards:
+            raise ValueError(f"version vector has {len(views)} entries, "
+                             f"expected {self.num_shards}")
+        L, W = self.workers_per_shard, self.num_global_workers
+        cols = [
+            {n: v.col(n) for n in
+             ("status", "worker_id", "start_time", "end_time",
+              "activity_id", "fail_trials", "task_id", "parent_task",
+              "out0")}
+            for v in views]
+
+        # Q1: per-shard bincounts land in disjoint global-worker slots
+        started = np.zeros(W, np.int64)
+        finished = np.zeros(W, np.int64)
+        failures = np.zeros(W, np.int64)
+        # Q3: FAILED-recently counts per global worker
+        fail_counts = np.zeros(W, np.int64)
+        q4 = 0
+        q5_counts = np.zeros(1, np.int64)
+        # Q6 partials per activity: finished count / duration sum / max
+        q6_cnt = np.zeros(1, np.int64)
+        q6_sum = np.zeros(1, np.float64)
+        q6_max = np.full(1, -np.inf)
+        q6_open: set = set()
+        # Q7 partials: global mean over finished act_b rows
+        q7_act_a, q7_act_b, q7_thr = 0, 2, 0.5
+        q7_sum, q7_cnt, q7_any = 0.0, 0, False
+
+        def grow(arr, n, fill=0):
+            if n <= arr.size:
+                return arr
+            out = np.full(n, fill, arr.dtype)
+            out[:arr.size] = arr
+            return out
+
+        for s, c in enumerate(cols):
+            st, wid, t0, t1 = (c["status"], c["worker_id"],
+                               c["start_time"], c["end_time"])
+            act = c["activity_id"]
+            lo = s * L
+            recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
+            rw = wid[recent]
+            if rw.size:
+                started[lo:lo + L] += np.bincount(rw, minlength=L)
+                finished[lo:lo + L] += np.bincount(
+                    rw, weights=(st[recent] == int(Status.FINISHED)),
+                    minlength=L).astype(np.int64)
+                failures[lo:lo + L] += np.bincount(
+                    rw, weights=c["fail_trials"][recent],
+                    minlength=L).astype(np.int64)
+            m3 = (st == int(Status.FAILED)) & (t1 >= now - horizon)
+            if m3.any():
+                fail_counts[lo:lo + L] += np.bincount(wid[m3], minlength=L)
+            mo = np.isin(st, _OPEN)
+            q4 += int(mo.sum())
+            if mo.any():
+                bc = np.bincount(act[mo])
+                q5_counts = grow(q5_counts, bc.size)
+                q5_counts[:bc.size] += bc
+            fin = st == int(Status.FINISHED)
+            q6_open.update(np.unique(act[np.isin(
+                st, [int(Status.READY), int(Status.RUNNING)])]).tolist())
+            af = act[fin]
+            if af.size:
+                d = t1[fin] - t0[fin]
+                n_act = int(af.max()) + 1
+                q6_cnt = grow(q6_cnt, n_act)
+                q6_sum = grow(q6_sum, n_act)
+                q6_max = grow(q6_max, n_act, -np.inf)
+                q6_cnt[:n_act] += np.bincount(af, minlength=n_act)
+                q6_sum[:n_act] += np.bincount(af, weights=d,
+                                              minlength=n_act)
+                np.maximum.at(q6_max, af, d)
+            fb = fin & (act == q7_act_b)
+            if fb.any():
+                q7_any = True
+                db = (t1 - t0)[fb]
+                q7_sum += float(np.nansum(db))
+                q7_cnt += int((~np.isnan(db)).sum())
+
+        q1 = {int(w): {"started": int(started[w]),
+                       "finished": int(finished[w]),
+                       "failures": int(failures[w])}
+              for w in np.nonzero(started)[0]}
+        q3 = (np.nonzero(fail_counts == fail_counts.max())[0].tolist()
+              if fail_counts.any() else [])
+        q5 = ((int(np.argmax(q5_counts)), int(q5_counts.max()))
+              if q5_counts.any() else (-1, 0))
+        q6 = {}
+        if q6_cnt.any() and q6_open:
+            for a in np.nonzero(q6_cnt)[0]:
+                if int(a) in q6_open:
+                    q6[int(a)] = (float(q6_sum[a] / q6_cnt[a]),
+                                  float(q6_max[a]))
+            q6 = dict(sorted(q6.items(), key=lambda kv: -kv[1][0]))
+        q7 = self._q7_scatter(cols, q7_any, q7_sum, q7_cnt,
+                              q7_act_a, q7_act_b, q7_thr)
+        return {"q1": q1, "q3": q3, "q4": q4, "q5": q5, "q6": q6,
+                "q7": q7, "version": [v.version for v in views]}
+
+    def _q7_scatter(self, cols, any_fin_b: bool, dsum: float, dcnt: int,
+                    act_a: int, act_b: int, thr: float) -> List[int]:
+        """Cross-shard provenance walk: per-shard hits against the GLOBAL
+        mean, then parent edges chased through an id -> (shard, row) map
+        (live copies shadow PRUNED tombstones). Returns sorted task ids —
+        the multiset a single primary's row-index result maps to."""
+        if not any_fin_b or dcnt == 0:
+            return []
+        mean = dsum / dcnt
+        max_id = -1
+        for c in cols:
+            alive = c["status"] != int(Status.EMPTY)
+            if alive.any():
+                max_id = max(max_id, int(c["task_id"][alive].max()))
+        if max_id < 0:
+            return []
+        shard_of = np.full(max_id + 1, -1, np.int32)
+        row_of = np.full(max_id + 1, -1, np.int64)
+        for prefer_live in (False, True):       # live rows overwrite PRUNED
+            for s, c in enumerate(cols):
+                st = c["status"]
+                sel = (st != int(Status.EMPTY))
+                if prefer_live:
+                    sel &= (st != int(Status.PRUNED))
+                r = np.nonzero(sel)[0]
+                ids = c["task_id"][r]
+                shard_of[ids] = s
+                row_of[ids] = r
+        hits_s, hits_r = [], []
+        for s, c in enumerate(cols):
+            st, act = c["status"], c["activity_id"]
+            dur = c["end_time"] - c["start_time"]
+            fb = (st == int(Status.FINISHED)) & (act == act_b)
+            h = np.nonzero(fb & (c["out0"] > thr) & (dur > mean))[0]
+            hits_s.append(np.full(len(h), s, np.int32))
+            hits_r.append(h.astype(np.int64))
+        cur_s = np.concatenate(hits_s)
+        cur_r = np.concatenate(hits_r)
+        if not len(cur_r):
+            return []
+        acts = [c["activity_id"] for c in cols]
+        parents = [c["parent_task"] for c in cols]
+        while True:
+            a = np.full(len(cur_r), -1, np.int64)
+            p = np.full(len(cur_r), -1, np.int64)
+            for s in range(self.num_shards):
+                m = (cur_r >= 0) & (cur_s == s)
+                if m.any():
+                    a[m] = acts[s][cur_r[m]]
+                    p[m] = parents[s][cur_r[m]]
+            walk = (cur_r >= 0) & (a > act_a) & (p >= 0)
+            if not walk.any():
+                break
+            pid = p[walk]
+            inb = pid <= max_id
+            pid_c = np.minimum(pid, max_id)
+            ns = np.where(inb, shard_of[pid_c], -1)
+            nr = np.where(inb & (ns >= 0), row_of[pid_c], -1)
+            cur_s[walk] = ns.astype(np.int32)
+            cur_r[walk] = nr
+        out = []
+        for s in range(self.num_shards):
+            m = (cur_r >= 0) & (cur_s == s)
+            if m.any():
+                rows = cur_r[m]
+                ok = acts[s][rows] == act_a
+                out.append(cols[s]["task_id"][rows[ok]])
+        if not out:
+            return []
+        return np.sort(np.concatenate(out)).tolist()
+
+    @staticmethod
+    def comparable(result: Dict[str, object]) -> Dict[str, object]:
+        """Strip the version field (scalar vs vector) for sweep parity
+        fingerprints."""
+        return {k: v for k, v in result.items() if k != "version"}
+
+    @staticmethod
+    def oracle_normalize(result: Dict[str, object],
+                         view: SnapshotView) -> Dict[str, object]:
+        """Map a single-primary ``SteeringEngine.run_all`` result into the
+        router's shape: q7 store rows -> sorted global task ids."""
+        out = ShardRouter.comparable(result)
+        rows = np.asarray(out.get("q7", []), np.int64)
+        out["q7"] = np.sort(view.col("task_id")[rows]).tolist()
+        return out
+
+    # ----------------------------------------------------- remote analysts
+    def remote_sweep(self, now: float) -> Dict[str, object]:
+        """Scatter a remote (in-replica-process) sweep across shards and
+        gather the union: Q1 merged into global-worker keys, Q4 summed,
+        full per-shard results kept under ``shards``. (Q3/Q5/Q6/Q7 merge
+        exactly only via :meth:`run_all`'s partial-aggregate path; remote
+        analysts get the per-shard views to merge downstream.)"""
+        per = []
+        for sh in self.shards:
+            if sh.replicator is None or \
+                    not hasattr(sh.replicator, "remote_sweep"):
+                raise ValueError("remote_sweep requires replicate='remote'")
+            per.append(sh.replicator.remote_sweep(now))
+        q1: Dict[int, Dict[str, int]] = {}
+        for s, r in enumerate(per):
+            for lw, v in r["q1"].items():
+                q1[int(self.global_worker(s, int(lw)))] = v
+        return {"q1": q1,
+                "q4": int(sum(r["q4"] for r in per)),
+                "shards": per,
+                "version": [r["version"] for r in per]}
+
+    # -------------------------------------------------------------- teardown
+    def check_invariants(self) -> None:
+        for sh in self.shards:
+            sh.wq.check_invariants()
+        live = self.live_task_ids()
+        if len(np.unique(live)) != len(live):
+            raise AssertionError("task id owned live by two shards")
+
+    def close(self) -> None:
+        for sh in self.shards:
+            if sh.replicator is not None:
+                sh.replicator.close()
+        self._steal_tx.close()
+        self._steal_rx.close()

@@ -162,20 +162,38 @@ class WorkQueue:
                   domain_in: Optional[np.ndarray] = None,
                   parent_task: Optional[np.ndarray] = None,
                   now: float = 0.0,
-                  mark_expanded: Optional[np.ndarray] = None) -> np.ndarray:
+                  mark_expanded: Optional[np.ndarray] = None,
+                  task_ids: Optional[np.ndarray] = None,
+                  worker_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """Insert ``n`` tasks; ``duration_est`` may be a scalar or per-task
         array. ``mark_expanded`` flips the ``expanded`` flag of the given
         parent rows in the SAME transaction / log record, so dependency
         expansion (children inserted + parents marked) is atomic: a replica
-        can never observe the children without the dedup mark."""
-        ids = np.arange(self._next_task_id, self._next_task_id + n,
-                        dtype=np.int64)
-        self._next_task_id += n
+        can never observe the children without the dedup mark.
+
+        ``task_ids`` overrides the queue-local id counter so an external
+        router (e.g. ``ShardRouter``) can keep ids globally unique across
+        shards — cross-shard work stealing re-inserts tasks under their
+        original ids. ``worker_ids`` overrides the default round-robin
+        partition assignment (values must lie in ``[0, num_workers)``)."""
+        if task_ids is not None:
+            ids = np.asarray(task_ids, np.int64)
+            if len(ids) != n:
+                raise ValueError(f"task_ids has {len(ids)} entries, n={n}")
+            if n:
+                self._next_task_id = max(self._next_task_id,
+                                         int(ids.max()) + 1)
+        else:
+            ids = np.arange(self._next_task_id, self._next_task_id + n,
+                            dtype=np.int64)
+            self._next_task_id += n
         dur = np.asarray(duration_est, np.float64)
         rows = {
             "task_id": ids,
             "activity_id": np.full(n, activity_id, np.int32),
-            "worker_id": assign_workers(ids, self.num_workers),
+            "worker_id": (np.asarray(worker_ids, np.int32)
+                          if worker_ids is not None
+                          else assign_workers(ids, self.num_workers)),
             "status": np.full(n, int(status), np.int32),
             "submit_time": np.full(n, now, np.float64),
             "duration_est": (np.full(n, float(dur)) if dur.ndim == 0

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.configs.risers_workflow import WorkflowConfig
 from repro.core.replication import make_replicator
 from repro.core.schema import Status
+from repro.core.sharding_router import ShardRouter
 from repro.core.steering import SteeringEngine
 from repro.core.supervisor import SecondarySupervisor, Supervisor
 from repro.core.workqueue import WorkQueue
@@ -50,18 +51,43 @@ class TrainExecutor:
                  base_lr: float = 3e-4, data_cfg: Optional[DataConfig] = None,
                  checkpointer=None, checkpoint_every: int = 50,
                  steer_every: int = 0, seed: int = 0,
-                 analyst: str = "snapshot", replicas: int = 1):
+                 analyst: str = "snapshot", replicas: int = 1,
+                 shards: int = 1):
         self.cfg = cfg
         self.num_workers = num_workers
         self.base_lr = base_lr
         self.data_cfg = data_cfg or DataConfig(
             vocab_size=cfg.vocab_size, seq_len=128, batch_size=8)
-        self.wq = WorkQueue(num_workers=num_workers)
+        # shards > 1: the sharded topology — num_workers partitions split
+        # across `shards` full primaries behind a ShardRouter; claims,
+        # replication, and compaction run per shard, steering is the
+        # router's scatter-gather sweep, and drained shards pull work from
+        # rich siblings (cross-shard stealing) each tick.
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        if shards > 1 and num_workers % shards:
+            raise ValueError(f"num_workers={num_workers} must divide "
+                             f"evenly across shards={shards}")
+        if shards > 1 and checkpointer is not None:
+            raise ValueError("checkpointing requires a single-shard "
+                             "executor (one durable store)")
+        self.router: Optional[ShardRouter] = None
+        if shards > 1:
+            self.router = ShardRouter(
+                shards, num_workers // shards,
+                replicate=None if analyst == "snapshot" else analyst,
+                replicas=replicas)
+            self.wq = self.router.shards[0].wq   # compat: a primary handle
+            self.supervisor = self.secondary = None
+            self.steering = None
+        else:
+            self.wq = WorkQueue(num_workers=num_workers)
         self.workflow = WorkflowConfig(name="train-sweep",
                                        activities=("train_step",))
-        self.supervisor = Supervisor(self.wq, self.workflow)
-        self.secondary = SecondarySupervisor(self.supervisor)
-        self.steering = SteeringEngine(self.wq)
+        if self.router is None:
+            self.supervisor = Supervisor(self.wq, self.workflow)
+            self.secondary = SecondarySupervisor(self.supervisor)
+            self.steering = SteeringEngine(self.wq)
         # analyst="snapshot": sweeps read COW snapshot views of the LIVE
         # store (share its arrays until the next write). analyst="replica":
         # sweeps read a delta-caught-up REPLICA store fed only by the txn
@@ -78,7 +104,7 @@ class TrainExecutor:
             raise ValueError(f"unknown analyst mode {analyst!r}")
         self.analyst = analyst
         self.replica = None
-        if analyst != "snapshot":
+        if analyst != "snapshot" and self.router is None:
             # all replication policy lives behind the factory: "replica"
             # maps to the in-process delta arm (nothing ships, so the
             # wire-size accounting is skipped), "remote" to a pipelined
@@ -108,18 +134,32 @@ class TrainExecutor:
             np.arange(self.step, self.step + n) % (1 << 20),
             np.full(n, sweep_id),
         ], axis=1)
+        if self.router is not None:
+            return self.router.add_tasks(0, n, domain_in=dom,
+                                         now=time.time())
         return self.wq.add_tasks(0, n, domain_in=dom, now=time.time())
 
     # ---------------------------------------------------------------- tick
     def tick(self) -> Dict[str, float]:
         """One scheduler tick: claim -> execute -> commit provenance."""
         now = time.time()
-        claims = self.wq.claim_all(k=1, now=now)
+        if self.router is not None:
+            # any drained shard refills from the richest sibling BEFORE
+            # claiming — the cross-shard stealing path
+            if (self.router.ready_counts()
+                    .reshape(self.router.num_shards, -1).sum(1) == 0).any():
+                self.router.rebalance(now=now)
+            claims = [(self.router.shards[s].wq, rows)
+                      for s, rows in self.router.claim_all(
+                          k=1, now=now).values()]
+        else:
+            claims = [(self.wq, rows)
+                      for rows in self.wq.claim_all(k=1, now=now).values()]
         metrics_out: Dict[str, float] = {}
-        for w, rows in claims.items():
+        for wq, rows in claims:
             for row in rows:
-                lr_scale = self.wq.store.col("in0")[row]
-                shard = int(self.wq.store.col("in1")[row])
+                lr_scale = wq.store.col("in0")[row]
+                shard = int(wq.store.col("in1")[row])
                 batch = batch_for(self.cfg, self.data_cfg, shard)
                 knobs = {"lr": jnp.asarray(self.base_lr * lr_scale,
                                            jnp.float32)}
@@ -128,9 +168,9 @@ class TrainExecutor:
                 loss = float(metrics["loss"])
                 gnorm = float(metrics["grad_norm"])
                 dt_s = time.time() - t0
-                self.wq.finish(np.asarray([row]), now=time.time(),
-                               domain_out=np.asarray(
-                                   [[loss, gnorm, dt_s]]))
+                wq.finish(np.asarray([row]), now=time.time(),
+                          domain_out=np.asarray(
+                              [[loss, gnorm, dt_s]]))
                 self.step += 1
                 rec = {"step": self.step, "loss": loss, "grad_norm": gnorm,
                        "s_per_step": dt_s}
@@ -146,6 +186,21 @@ class TrainExecutor:
             self._steer_future = None
         if self.steer_every and self.step % self.steer_every == 0 \
                 and self._steer_future is None:
+            if self.router is not None:
+                # scatter-gather sweep: pin a consistent version vector on
+                # THIS thread (at this tick's commits), merge on the
+                # analyst thread; "remote" scatters the sweep into the
+                # per-shard replica processes instead
+                if self.analyst == "remote":
+                    self._steer_future = self._steer_pool.submit(
+                        self.router.remote_sweep, time.time())
+                else:
+                    views = (self.router.replica_vector()
+                             if self.analyst == "replica"
+                             else self.router.snapshot_vector())
+                    self._steer_future = self._steer_pool.submit(
+                        self.router.run_all, time.time(), views)
+                return metrics_out
             if self.replica is not None:
                 # catch the replica up to this tick's commits (O(delta)
                 # wire ship for "remote", in-process log replay for
@@ -184,7 +239,9 @@ class TrainExecutor:
 
     def run(self, max_ticks: int = 10_000) -> List[Dict[str, float]]:
         for _ in range(max_ticks):
-            if self.steering.q4_tasks_left() == 0:
+            left = (self.router.tasks_left() if self.router is not None
+                    else self.steering.q4_tasks_left())
+            if left == 0:
                 break
             self.tick()
         self._drain_steering()
@@ -205,6 +262,8 @@ class TrainExecutor:
         self._steer_pool.shutdown(wait=True)
         if self.replica is not None:
             self.replica.close()     # stop pinning the log compaction floor
+        if self.router is not None:
+            self.router.close()      # per-shard replicators + steal pipe
 
     def __del__(self):
         try:
@@ -214,10 +273,18 @@ class TrainExecutor:
 
     # -------------------------------------------------------------- fault
     def fail_worker(self, worker_id: int) -> int:
-        """Simulate a node failure: requeue its RUNNING tasks elsewhere."""
+        """Simulate a node failure: requeue its RUNNING tasks elsewhere
+        (sharded: within the shard owning that global worker)."""
+        if self.router is not None:
+            L = self.router.workers_per_shard
+            sh = self.router.shards[worker_id // L]
+            return sh.wq.requeue_worker(worker_id % L)
         return self.wq.requeue_worker(worker_id)
 
     def promote_secondary(self) -> None:
+        if self.supervisor is None:
+            raise ValueError("sharded executors run supervisor-less "
+                             "(single-activity workflow per shard)")
         self.supervisor.crash()
         self.supervisor = self.secondary.promote()
         self.secondary = SecondarySupervisor(self.supervisor)

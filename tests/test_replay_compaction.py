@@ -521,3 +521,64 @@ def test_q2_plain_argsort_matches_lexsort():
     st_ = wq.store.col("status")
     want = rows[np.lexsort((st_[rows], -bi))]
     assert np.array_equal(got, want)
+
+
+# -------------------------------------- consumer lag / offset edge cases
+def test_consumer_lags_empty_without_consumers_and_truncate_noop():
+    """No registered consumer: the lag surface is empty, the floor is None,
+    and an unbounded truncate is the conservative no-op (nothing is
+    provably durable elsewhere, so nothing may be dropped)."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 6)
+    wq.claim_all(k=1, now=0.0)
+    assert wq.consumer_lags() == {}
+    assert wq.log.consumer_offsets() == {}
+    assert wq.log.consumer_floor() is None
+    n = len(wq.log)
+    assert wq.compact_log() == 0
+    assert len(wq.log) == n and wq.log.base == 0
+
+
+def test_consumer_lags_track_acks_and_offsets_are_a_copy():
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 4)
+    wq.log.register_consumer("ckpt")
+    wq.claim_all(k=1, now=0.0)
+    end = len(wq.log)
+    assert wq.consumer_lags() == {"ckpt": end}
+    wq.log.ack("ckpt", end - 1)
+    assert wq.consumer_lags() == {"ckpt": 1}
+    # consumption only moves forward: a stale ack cannot regress the lag
+    assert wq.log.ack("ckpt", 0) is True
+    assert wq.consumer_lags() == {"ckpt": 1}
+    # the offsets view is a snapshot copy, not the live map
+    offs = wq.log.consumer_offsets()
+    offs["ckpt"] = 0
+    assert wq.log.consumer_offsets() == {"ckpt": end - 1}
+
+
+def test_consumer_closed_mid_truncate_releases_its_floor_pin():
+    """A consumer unregistered between acks stops pinning the compaction
+    floor: the next truncate recomputes min-over-survivors, and a late ack
+    from the closed consumer is ignored (returns False) rather than
+    resurrecting it."""
+    wq = WorkQueue(num_workers=2)
+    wq.add_tasks(0, 8)
+    wq.log.register_consumer("fast")
+    wq.log.register_consumer("slow")
+    wq.claim_all(k=1, now=0.0)
+    end = len(wq.log)
+    wq.log.ack("fast", end)
+    wq.log.ack("slow", 1)
+    assert wq.log.consumer_floor() == 1        # laggard pins the prefix
+    assert wq.compact_log() == 1
+    assert wq.log.base == 1
+    wq.log.unregister_consumer("slow")         # closed mid-cycle
+    assert wq.log.consumer_floor() == end      # floor recomputed
+    assert wq.compact_log() == end - 1         # survivor's prefix drops
+    assert wq.log.base == end
+    assert wq.log.ack("slow", 2) is False      # no resurrection...
+    assert wq.log.consumer_floor() == end      # ...and no re-pin
+    assert wq.consumer_lags() == {"fast": 0}
+    # a consumer registering AFTER compaction starts at the new base
+    assert wq.log.register_consumer("late", offset=0) == end
