@@ -14,8 +14,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.simkit import SimResult, run_centralized, run_distributed, \
-    run_replica_lag, run_sharded, run_wire_ship
+from benchmarks.simkit import SimResult, run_centralized, run_chaos, \
+    run_distributed, run_replica_lag, run_sharded, run_wire_ship
 from repro.configs import risers_workflow as RW
 
 PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
@@ -345,6 +345,71 @@ def exp_sharded(scale: float = 1.0) -> List[Dict]:
             "a shard replica diverged after the steal — the victim prune "
             "or thief insert is not replaying as ordinary logged traffic")
     return [{"exp": "e_sharded", **{
+        k: (round(v, 5) if isinstance(v, float) else v)
+        for k, v in r.items()}}]
+
+
+def exp_chaos(scale: float = 1.0) -> List[Dict]:
+    """Chaos kill-drill: silent worker death + replica process kill.
+
+    Runs :func:`benchmarks.simkit.run_chaos`: >=2 randomly chosen workers
+    go silent mid-run (no requeue call, no goodbye — their claim leases
+    just expire) and the shipped replica process is killed outright, on
+    both a single primary and a sharded router. HARD-FAILS unless (a) at
+    least 2 workers and 1 replica actually died with claims stranded, (b)
+    the live task-id set is conserved through reap/steal/respawn, (c)
+    every task drains to FINISHED on the survivors, (d) the reaper — not
+    any explicit failure notification — recovered the stranded claims, and
+    (e) the respawned replica and every per-shard replica are
+    column-bit-identical to their primaries across at least one log
+    truncation. ``recovery_s`` (kill instant -> last task drained) is
+    gated in ``scripts/bench_trajectory.py`` via ``--max-recovery-s``.
+    """
+    n = max(int(2_000 * scale), 160)
+    r = run_chaos(8, n, kill_workers=2, sync_every=16)
+    if len(r["workers_killed"]) < 2 or r["replicas_killed"] < 1:
+        raise AssertionError(
+            f"chaos drill under-killed: workers={r['workers_killed']} "
+            f"replicas={r['replicas_killed']} — the drill must take down "
+            ">=2 workers and >=1 replica process")
+    if r["stranded_claims"] <= 0 or r["reaped"] <= 0:
+        raise AssertionError(
+            f"the kill stranded {r['stranded_claims']} claims and the "
+            f"reaper requeued {r['reaped']} — dead workers held nothing, "
+            "the drill proved nothing")
+    if not r["conserved"]:
+        raise AssertionError(
+            "chaos drill lost or duplicated task ids on the single "
+            "primary (lease reap + steal must conserve the live set)")
+    if not r["drained"]:
+        raise AssertionError(
+            f"tasks failed to drain after the kill: {r['finished']}/"
+            f"{r['tasks']} finished — stranded claims were not recovered")
+    if r["replica_respawns"] < 2:
+        raise AssertionError(
+            f"replica respawned {r['replica_respawns'] - 1} times — the "
+            "kill never forced a snapshot respawn")
+    if not r["replica_cols_equal"] or r["log_truncated_records"] <= 0:
+        raise AssertionError(
+            f"respawned replica parity failed: cols_equal="
+            f"{r['replica_cols_equal']} truncated="
+            f"{r['log_truncated_records']} (must be bit-identical across "
+            ">=1 truncate)")
+    if not (r["sharded_conserved"] and r["sharded_drained"]):
+        raise AssertionError(
+            f"sharded chaos failed: conserved={r['sharded_conserved']} "
+            f"drained={r['sharded_drained']} "
+            f"({r['sharded_finished']}/{r['tasks']} finished)")
+    if r["sharded_reaped"] <= 0:
+        raise AssertionError(
+            "sharded drill reaped nothing — the router never swept the "
+            "dead workers' expired leases")
+    if not (r["sharded_replica_parity"] and r["sharded_log_truncated"]):
+        raise AssertionError(
+            f"per-shard replica parity failed after the sharded kill: "
+            f"parity={r['sharded_replica_parity']} "
+            f"truncated_all={r['sharded_log_truncated']}")
+    return [{"exp": "e_chaos", **{
         k: (round(v, 5) if isinstance(v, float) else v)
         for k, v in r.items()}}]
 

@@ -47,6 +47,10 @@ DESCRIPTIONS = {
                  "conservation + per-shard replica parity (hard-checked), "
                  "weak-scaling claim throughput (the "
                  "--min-sharded-scaleup gate)",
+    "e_chaos": "kill-drill: >=2 workers go silent + replica process "
+               "killed mid-run; lease reap + steal + snapshot respawn "
+               "must conserve the task-id set, drain every task and "
+               "keep replica bit-parity (the --max-recovery-s gate)",
     "claim_kernel": "claim_all fast-path vs seed loop at k=1/k=4 "
                     "(the >=5x gate) + device wq_claim op latency",
     "replay_throughput": "batched hot-plane txn-log replay vs "
@@ -94,6 +98,7 @@ def main() -> None:
         "e_replica_lag": lambda: E.exp_replica_lag(args.scale),
         "e_wire_ship": lambda: E.exp_wire_ship(args.scale),
         "e_sharded": lambda: E.exp_sharded(args.scale),
+        "e_chaos": lambda: E.exp_chaos(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
         "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
         "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
@@ -173,6 +178,12 @@ def _headline(name: str, rows) -> str:
                     f"sweep_equal={r['sweep_equal']};"
                     f"steal_moved={r['steal_moved']};"
                     f"steal_conserved={r['steal_conserved']}")
+        if name == "e_chaos":
+            r = rows[0]
+            return (f"recovery_s={r['recovery_s']};"
+                    f"conserved={r['conserved']};drained={r['drained']};"
+                    f"reaped={r['reaped']};"
+                    f"respawns={r['replica_respawns']}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

@@ -948,6 +948,195 @@ def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
     }
 
 
+def run_chaos(num_workers: int, num_tasks: int, *, lease_s: float = 4.0,
+              kill_workers: int = 2, max_trials: int = 6,
+              sync_every: int = 16, seed: int = 0,
+              transport: Optional[str] = None,
+              shards: int = 2, workers_per_shard: int = 4) -> Dict:
+    """Kill-drill for the lease-based recovery path (PR 8), two phases.
+
+    **A. Single primary + shipped replica.** ``num_workers`` workers run
+    per-worker ``claim(w, ..., allow_steal=True)`` loops against one
+    WorkQueue with a short claim lease, renewing leases on held rows and
+    shipping every record (claims with their lease stamps, renewals,
+    reaps) to a :class:`ShippedDeltaReplicator` in another OS process.
+    Mid-run, ``kill_workers`` randomly chosen workers go silent (they stop
+    claiming, finishing and heartbeating — their RUNNING rows strand with
+    live leases) AND the replica process is ``kill()``-ed outright. No
+    component is told anything: the leases simply expire, the reaper
+    (running at the steering-tick cadence) requeues the stranded rows in
+    one masked transition, the survivors STEAL them, and the next sync
+    respawns the replica from a snapshot. The drill then hard-checks, at a
+    pinned version and across at least one log truncation, that the
+    respawned replica's columns are bit-identical to the primary.
+
+    **B. Sharded.** The same silent-worker chaos on a
+    ``shards x workers_per_shard`` :class:`ShardRouter` with per-shard
+    delta replicas: ``router.reap_expired`` requeues per shard, the reaped
+    backlog re-enters the per-shard READY counts so ``rebalance`` treats
+    it as ordinary stealable work, and per-shard replica parity is
+    re-checked across compactions.
+
+    Returned dict carries the conservation / drain / parity verdicts
+    (``exp_chaos`` raises on any False) plus ``recovery_s`` — wall time
+    from the kill instant to the last task draining — which
+    ``scripts/bench_trajectory.py`` gates with ``--max-recovery-s``.
+    """
+    from repro.core.sharding_router import ShardRouter
+
+    rng = np.random.default_rng(seed)
+
+    # ---------------- phase A: single primary + shipped replica ----------
+    wq = WorkQueue(num_workers=num_workers,
+                   capacity=max(1 << 12, 2 * num_tasks), lease_s=lease_s)
+    rep = ShippedDeltaReplicator(wq, sync_every=sync_every,
+                                 transport=transport)
+    wq.add_tasks(0, num_tasks,
+                 domain_in=rng.uniform(0, 1, (num_tasks, 3)), now=0.0)
+    ids_before = np.sort(wq.store.col("task_id")[
+        wq.store.col("status") != int(Status.EMPTY)])
+
+    live = set(range(num_workers))
+    pending: Dict[int, np.ndarray] = {w: np.empty(0, np.int64)
+                                      for w in range(num_workers)}
+    kill_tick = 4
+    killed: List[int] = []
+    stranded = 0
+    reaped = 0
+    t_kill = 0.0
+    tick = 0
+    while tick < 10_000:
+        clock = float(tick)
+        for w in sorted(live):
+            if tick % 3 == 1 and len(pending[w]):
+                # a held row's heartbeat — ships a lease_renew record
+                wq.renew_leases(pending[w], now=clock)
+            if len(pending[w]):
+                wq.finish(pending[w], now=clock,
+                          domain_out=rng.normal(
+                              0.5, 0.3, (len(pending[w]), 3)))
+            pending[w] = wq.claim(w, k=2, now=clock, allow_steal=True)
+        if tick == kill_tick:
+            killed = sorted(rng.choice(num_workers, size=kill_workers,
+                                       replace=False).tolist())
+            live -= set(killed)            # silent death: no requeue call
+            stranded = int(sum(len(pending[w]) for w in killed))
+            rep.process.kill()             # the replica dies with them
+            rep.process.join()
+            t_kill = time.perf_counter()
+        # the steering-tick lease sweep: expired claims requeue in one
+        # masked transition, survivors steal them next tick
+        if tick >= kill_tick:
+            reaped += wq.reap_expired(now=clock, max_trials=max_trials)
+        if rep.maybe_sync():               # first post-kill sync respawns
+            wq.compact_log()
+        if int(wq.counts()["FINISHED"]) == num_tasks:
+            break
+        tick += 1
+    recovery_s = time.perf_counter() - t_kill
+    counts = wq.counts()
+    ids_after = np.sort(wq.store.col("task_id")[
+        wq.store.col("status") != int(Status.EMPTY)])
+    wq.check_invariants()
+
+    rep.sync()
+    wq.compact_log()
+    view = wq.store.snapshot_view()
+    rep.sync(upto_version=view.version)
+    state = rep.fetch_remote_state()
+    cols_equal = all(
+        np.array_equal(view.col(n), state["snapshot"]["cols"][n],
+                       equal_nan=True)
+        for n in wq.store.cols)
+    respawns = int(rep.spawn_count)
+    log_truncated = int(wq.log.base)
+    rep.close()
+
+    # ------------------------- phase B: sharded ---------------------------
+    S, L = shards, workers_per_shard
+    router = ShardRouter(S, L, capacity=max(1 << 12, 2 * num_tasks),
+                         replicate="delta", sync_every=sync_every,
+                         lease_s=lease_s)
+    router.add_tasks(0, num_tasks, now=0.0)
+    s_before = router.live_task_ids()
+    s_live = set(range(S * L))
+    s_pending: Dict[int, np.ndarray] = {g: np.empty(0, np.int64)
+                                        for g in range(S * L)}
+    s_killed = sorted(rng.choice(S * L, size=kill_workers,
+                                 replace=False).tolist())
+    s_reaped = 0
+    s_stolen = 0
+    t_kill_b = 0.0
+    tick = 0
+    while tick < 10_000:
+        clock = float(tick)
+        for g in sorted(s_live):
+            s, l = g // L, g % L
+            swq = router.shards[s].wq
+            if len(s_pending[g]):
+                swq.finish(s_pending[g], now=clock)
+            s_pending[g] = swq.claim(l, k=2, now=clock, allow_steal=True)
+        if tick == kill_tick:
+            s_live -= set(s_killed)
+            t_kill_b = time.perf_counter()
+        if tick >= kill_tick:
+            s_reaped += router.reap_expired(now=clock,
+                                            max_trials=max_trials)
+            # reaped rows re-entered per-shard READY counts: a starved
+            # shard now steals them as perfectly ordinary backlog
+            s_stolen += router.rebalance(now=clock)
+        router.sync_replicas()
+        router.compact()
+        done = sum(int(sh.wq.counts()["FINISHED"])
+                   for sh in router.shards)
+        if done == num_tasks:
+            break
+        tick += 1
+    s_recovery_s = time.perf_counter() - t_kill_b
+    s_done = sum(int(sh.wq.counts()["FINISHED"]) for sh in router.shards)
+    s_running = sum(int(sh.wq.counts()["RUNNING"])
+                    for sh in router.shards)
+    s_conserved = np.array_equal(s_before, router.live_task_ids())
+    router.check_invariants()
+    s_parity = True
+    s_truncated = True
+    for sh in router.shards:
+        v = sh.wq.store.snapshot_view()
+        sh.replicator.sync(upto_version=v.version)
+        s_parity &= all(
+            np.array_equal(v.col(n), sh.replicator.store.col(n),
+                           equal_nan=True)
+            for n in sh.wq.store.cols)
+        s_truncated &= sh.wq.log.base > 0
+    router.close()
+
+    return {
+        "workers": num_workers, "tasks": num_tasks, "lease_s": lease_s,
+        "workers_killed": killed, "replicas_killed": 1,
+        "stranded_claims": stranded,
+        "reaped": int(reaped),
+        "recovery_s": round(recovery_s, 4),
+        "conserved": bool(np.array_equal(ids_before, ids_after)),
+        "drained": bool(counts["FINISHED"] == num_tasks
+                        and counts["RUNNING"] == 0
+                        and counts["READY"] == 0),
+        "finished": int(counts["FINISHED"]),
+        "replica_respawns": respawns,
+        "replica_cols_equal": bool(cols_equal),
+        "log_truncated_records": log_truncated,
+        "shards": S, "workers_per_shard": L,
+        "sharded_workers_killed": s_killed,
+        "sharded_reaped": int(s_reaped),
+        "sharded_stolen": int(s_stolen),
+        "sharded_recovery_s": round(s_recovery_s, 4),
+        "sharded_conserved": bool(s_conserved),
+        "sharded_drained": bool(s_done == num_tasks and s_running == 0),
+        "sharded_finished": int(s_done),
+        "sharded_replica_parity": bool(s_parity),
+        "sharded_log_truncated": bool(s_truncated),
+    }
+
+
 def run_centralized(num_workers: int, threads: int, num_tasks: int,
                     mean_dur_s: float, *, seed: int = 0,
                     request_overhead_s: float = 0.0) -> SimResult:

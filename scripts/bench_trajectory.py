@@ -32,6 +32,12 @@ the enforced floors regresses:
   single-primary oracle at the same version vector and cross-shard work
   stealing conserving the live task-id multiset (both hard-checked inside
   the experiment)
+- chaos kill-drill (e_chaos): >=2 workers silently killed + the shipped
+  replica process killed mid-run; lease expiry + the vectorized reaper +
+  work stealing + snapshot respawn must conserve the live task-id set,
+  drain every task and restore replica bit-parity (all hard-checked
+  inside the experiment), with the kill-to-drained wall bounded by
+  --max-recovery-s
 - replica fan-out (e_wire_ship's ReplicaGroup drill): every member of the
   3-replica group must sweep bit-identically after a broadcast sync, and
   promote() must elect the highest-acked survivor after the leader dies
@@ -88,6 +94,9 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
     # raises unless scatter-gather sweeps match the single-primary oracle
     # and cross-shard stealing conserves the live task-id multiset
     sharded = E.exp_sharded(scale_claim)[0]
+    # raises unless the kill-drill conserved the task-id set, drained
+    # every task on the survivors, and restored replica bit-parity
+    chaos = E.exp_chaos(scale_claim)[0]
     return {
         "claim_speedup_min": min(sp_k1),
         "claim_speedup_max": max(sp_k1),
@@ -141,6 +150,17 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
                                     and sharded["steal_moved"] > 0
                                     and sharded["steal_replica_parity"]),
         "sharded_steal_moved": sharded["steal_moved"],
+        "chaos_recovery_s": max(chaos["recovery_s"],
+                                chaos["sharded_recovery_s"]),
+        "chaos_conserved": (chaos["conserved"]
+                            and chaos["sharded_conserved"]),
+        "chaos_drained": chaos["drained"] and chaos["sharded_drained"],
+        "chaos_workers_killed": len(chaos["workers_killed"]),
+        "chaos_replicas_killed": chaos["replicas_killed"],
+        "chaos_reaped": chaos["reaped"] + chaos["sharded_reaped"],
+        "chaos_replica_parity": (chaos["replica_cols_equal"]
+                                 and chaos["sharded_replica_parity"]),
+        "chaos_replica_respawns": chaos["replica_respawns"],
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -198,6 +218,10 @@ def main() -> None:
                     help="floor for e_sharded's weak-scaling aggregate "
                          "claim throughput at 4 shards vs 1 (0 records "
                          "without enforcing)")
+    ap.add_argument("--max-recovery-s", type=float, default=60.0,
+                    help="ceiling for the chaos drill's kill-to-drained "
+                         "wall (worst of the single-primary and sharded "
+                         "phases; 0 records without enforcing)")
     ap.add_argument("--min-compression", type=float, default=2.0,
                     help="floor for the varint codec's raw/compressed "
                          "hot-frame byte ratio on the bulk log "
@@ -226,7 +250,8 @@ def main() -> None:
               f" ship_inc={pt.get('ship_mbps_incremental')}"
               f" fanout_lag_ms={pt.get('fanout_lag_ms')}"
               f" compression={pt.get('compression_ratio')}"
-              f" sharded_scaleup={pt.get('sharded_scaleup')}")
+              f" sharded_scaleup={pt.get('sharded_scaleup')}"
+              f" chaos_recovery_s={pt.get('chaos_recovery_s')}")
 
     failures = []
     if snap["claim_speedup_min"] < args.min_claim_speedup:
@@ -286,6 +311,17 @@ def main() -> None:
     if not snap["sharded_steal_conserved"]:
         failures.append("cross-shard work stealing lost or duplicated "
                         "tasks (or broke replica parity)")
+    if not (snap["chaos_conserved"] and snap["chaos_drained"]
+            and snap["chaos_replica_parity"]):
+        failures.append(
+            f"chaos kill-drill failed: conserved={snap['chaos_conserved']}"
+            f" drained={snap['chaos_drained']} "
+            f"replica_parity={snap['chaos_replica_parity']}")
+    if args.max_recovery_s > 0 \
+            and snap["chaos_recovery_s"] > args.max_recovery_s:
+        failures.append(
+            f"chaos recovery took {snap['chaos_recovery_s']}s from kill "
+            f"to full drain — over the {args.max_recovery_s}s gate")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)
@@ -307,7 +343,12 @@ def main() -> None:
           f"sum {snap['fanout_member_sum_ms']}ms), "
           f"sharded_scaleup={snap['sharded_scaleup']}x@"
           f"{snap['sharded_shards']}shards "
-          f"(gate {args.min_sharded_scaleup}x) "
+          f"(gate {args.min_sharded_scaleup}x), "
+          f"chaos_recovery_s={snap['chaos_recovery_s']} "
+          f"(gate {args.max_recovery_s}s, "
+          f"{snap['chaos_workers_killed']} workers + "
+          f"{snap['chaos_replicas_killed']} replica killed, "
+          f"{snap['chaos_reaped']} claims reaped) "
           f"[{snap['wire_transport']}/{snap['wire_codec']}]")
 
 

@@ -160,6 +160,12 @@ in-memory column-store ops — i.e., what the TPU adaptation actually costs.
                      " cross-shard steal conservation + per-shard replica"
                      " parity (hard-checked), weak-scaling claim"
                      " throughput (the --min-sharded-scaleup gate)",
+        "e_chaos": "Chaos kill-drill: >=2 workers go silent + the shipped"
+                   " replica process killed mid-run; claim-lease expiry +"
+                   " the vectorized reaper + work stealing + snapshot"
+                   " respawn must conserve the live task-id set, drain"
+                   " every task and restore bit-parity (hard-checked; the"
+                   " --max-recovery-s gate)",
         "replay_throughput": "Batched hot-plane txn-log replay vs"
                              " record-at-a-time (bit-parity enforced)",
         "steering_sweep": "Full Q1-Q7 steering sweep latency on a ~100k-row"

@@ -85,17 +85,26 @@ def _apply_insert(store: ColumnStore, p: Dict) -> None:
 
 
 def _apply_claim(store: ColumnStore, p: Dict) -> None:
+    # lease stamps are DERIVED, not shipped: expires_at = now + the lease
+    # duration carried on the restored store snapshot, the same float64 op
+    # the primary ran — so lease columns stay bit-identical with zero new
+    # wire fields (claim frames still carry only rows/now/worker)
     w = int(p["worker"])
     store.update(p["rows"], status=int(Status.RUNNING), start_time=p["now"],
-                 worker_id=w, core_id=w)
+                 worker_id=w, core_id=w, claimed_at=p["now"],
+                 heartbeat_at=p["now"],
+                 expires_at=p["now"] + store.lease_s)
 
 
 def _apply_claim_all(store: ColumnStore, p: Dict) -> None:
-    store.update(p["rows"], status=int(Status.RUNNING), start_time=p["now"])
+    store.update(p["rows"], status=int(Status.RUNNING), start_time=p["now"],
+                 claimed_at=p["now"], heartbeat_at=p["now"],
+                 expires_at=p["now"] + store.lease_s)
 
 
 def _apply_finish(store: ColumnStore, p: Dict) -> None:
-    store.update(p["rows"], status=int(Status.FINISHED), end_time=p["now"])
+    store.update(p["rows"], status=int(Status.FINISHED), end_time=p["now"],
+                 heartbeat_at=p["now"])
     dom = p.get("domain_out")
     if dom is not None:
         store.update(p["rows"], **{f"out{i}": dom[:, i]
@@ -129,6 +138,22 @@ def _apply_steer_prune(store: ColumnStore, p: Dict) -> None:
     store.update(p["rows"], status=int(Status.PRUNED))
 
 
+def _apply_reap(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], fail_trials=p["trials"])
+    if len(p["retry"]):
+        store.update(p["retry"], status=int(Status.READY),
+                     claimed_at=np.nan, heartbeat_at=np.nan,
+                     expires_at=np.nan)
+    if len(p["dead"]):
+        store.update(p["dead"], status=int(Status.FAILED),
+                     end_time=p["now"])
+
+
+def _apply_lease_renew(store: ColumnStore, p: Dict) -> None:
+    store.update(p["rows"], heartbeat_at=p["now"],
+                 expires_at=p["now"] + store.lease_s)
+
+
 _APPLY = {
     "insert": _apply_insert,
     "claim": _apply_claim,
@@ -139,6 +164,10 @@ _APPLY = {
     "resize": _apply_resize,
     "steer_patch": _apply_steer_patch,
     "steer_prune": _apply_steer_prune,
+    # lease ops are rare (one reap per expiry sweep, renewals batched per
+    # heartbeat tick): cold-path records, no plane/batch fast path needed
+    "reap": _apply_reap,
+    "lease_renew": _apply_lease_renew,
 }
 
 
@@ -180,19 +209,23 @@ def _batch_claim(store: ColumnStore, ps: Sequence[Dict]) -> None:
     now = _scalar_per_row(ps, "now", np.float64, lens)
     w = _scalar_per_row(ps, "worker", np.int32, lens)
     store.update(rows, status=int(Status.RUNNING), start_time=now,
-                 worker_id=w, core_id=w)
+                 worker_id=w, core_id=w, claimed_at=now, heartbeat_at=now,
+                 expires_at=now + store.lease_s)
 
 
 def _batch_claim_all(store: ColumnStore, ps: Sequence[Dict]) -> None:
     rows, lens = _run_rows(ps)
     now = _scalar_per_row(ps, "now", np.float64, lens)
-    store.update(rows, status=int(Status.RUNNING), start_time=now)
+    store.update(rows, status=int(Status.RUNNING), start_time=now,
+                 claimed_at=now, heartbeat_at=now,
+                 expires_at=now + store.lease_s)
 
 
 def _batch_finish(store: ColumnStore, ps: Sequence[Dict]) -> None:
     rows, lens = _run_rows(ps)
     now = _scalar_per_row(ps, "now", np.float64, lens)
-    store.update(rows, status=int(Status.FINISHED), end_time=now)
+    store.update(rows, status=int(Status.FINISHED), end_time=now,
+                 heartbeat_at=now)
     dom_ps = [p for p in ps if p.get("domain_out") is not None]
     if dom_ps:
         width = dom_ps[0]["domain_out"].shape[1]
@@ -262,12 +295,15 @@ def _plane_claim(store: ColumnStore, plane, lo: int, hi: int) -> None:
     wv = plane.worker.view(lo, hi)
     w = wv if single else np.repeat(wv, lens)
     store.update(rows, status=int(Status.RUNNING), start_time=now,
-                 worker_id=w, core_id=w)
+                 worker_id=w, core_id=w, claimed_at=now, heartbeat_at=now,
+                 expires_at=now + store.lease_s)
 
 
 def _plane_claim_all(store: ColumnStore, plane, lo: int, hi: int) -> None:
     rows, _, now, _ = _plane_fields(plane, lo, hi)
-    store.update(rows, status=int(Status.RUNNING), start_time=now)
+    store.update(rows, status=int(Status.RUNNING), start_time=now,
+                 claimed_at=now, heartbeat_at=now,
+                 expires_at=now + store.lease_s)
 
 
 def _plane_finish(store: ColumnStore, plane, lo: int, hi: int) -> bool:
@@ -282,7 +318,8 @@ def _plane_finish(store: ColumnStore, plane, lo: int, hi: int) -> bool:
             return False
     elif int(plane.dom_flag.view(lo, hi).sum()):
         return False                      # carriers hidden by width drift
-    store.update(rows, status=int(Status.FINISHED), end_time=now)
+    store.update(rows, status=int(Status.FINISHED), end_time=now,
+                 heartbeat_at=now)
     if d1 > d0:         # every written row carries domain outputs
         dom = plane.dom.view(d0, d1)
         store.update(rows, **{f"out{i}": dom[:, i]

@@ -73,6 +73,14 @@ def wq_schema(num_domain_in: int = 3, num_domain_out: int = 3
         Column("submit_time", np.dtype(np.float64), np.nan),
         Column("start_time", np.dtype(np.float64), np.nan),
         Column("end_time", np.dtype(np.float64), np.nan),
+        # Work Claim Pattern lease columns: a claim stamps claimed_at /
+        # heartbeat_at and an expiry deadline in the SAME transaction as the
+        # RUNNING flip, so worker liveness lives in the relation itself —
+        # an expired lease is reaped as a data-plane event (reap_expired),
+        # no supervisor round-trip needed. NaN = row holds no lease.
+        Column("claimed_at", np.dtype(np.float64), np.nan),
+        Column("heartbeat_at", np.dtype(np.float64), np.nan),
+        Column("expires_at", np.dtype(np.float64), np.nan),
         Column("duration_est", np.dtype(np.float64), 0.0),  # simulated cost
         Column("parent_task", np.dtype(np.int64), -1),      # provenance edge
         # dependency-expansion watermark: 1 once the supervisor has spawned

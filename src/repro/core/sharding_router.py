@@ -83,7 +83,8 @@ class ShardRouter:
                  replicas: int = 1,
                  sync_every: int = 64,
                  transport: Optional[str] = None,
-                 device_claim: Optional[bool] = None):
+                 device_claim: Optional[bool] = None,
+                 lease_s: Optional[float] = None):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         if workers_per_shard < 1:
@@ -95,7 +96,7 @@ class ShardRouter:
         self.shards: List[Shard] = []
         for s in range(num_shards):
             wq = WorkQueue(num_workers=workers_per_shard, capacity=capacity,
-                           device_claim=device_claim)
+                           device_claim=device_claim, lease_s=lease_s)
             rep = None
             if replicate is not None:
                 from repro.core.replication import make_replicator
@@ -186,6 +187,28 @@ class ShardRouter:
             parts.append(sh.wq.store.col("task_id")[keep])
         return np.sort(np.concatenate(parts)) if parts \
             else np.empty(0, np.int64)
+
+    # --------------------------------------------------------------- leases
+    def reap_expired(self, *, now: float = 0.0, max_trials: int = 3) -> int:
+        """Run the stale-claim reaper on every shard (an ordinary logged
+        transaction per shard, so per-shard replicas replay it like any
+        other record). Reaped rows re-enter their owning shard's READY
+        counts, which is exactly what :meth:`rebalance` keys drained-shard
+        stealing off — dead-worker backlog becomes stealable cross-shard
+        with no extra wiring. Returns total rows reaped."""
+        return sum(sh.wq.reap_expired(now=now, max_trials=max_trials)
+                   for sh in self.shards)
+
+    def autoscale_signals(self, *, now: float = 0.0) -> Dict[str, float]:
+        """Union autoscaling signals: counts sum across shards; ages and
+        latencies take the max (the pool must cover the worst shard)."""
+        sigs = [sh.wq.autoscale_signals(now=now) for sh in self.shards]
+        return {
+            "pending": float(sum(s["pending"] for s in sigs)),
+            "backlog_age_s": max(s["backlog_age_s"] for s in sigs),
+            "claim_p95_s": max(s["claim_p95_s"] for s in sigs),
+            "running": float(sum(s["running"] for s in sigs)),
+        }
 
     # ------------------------------------------------- cross-shard stealing
     def rebalance(self, *, now: float = 0.0,

@@ -31,6 +31,12 @@ import numpy as np
 
 from repro.core.schema import Column, Status, wq_schema
 
+# Default claim-lease duration (seconds). Lives on the store (not the
+# WorkQueue) so replicas restored from a snapshot derive the SAME
+# ``expires_at = now + lease_s`` when replaying claim records — lease columns
+# stay bit-identical across the wire with zero new frame fields.
+DEFAULT_LEASE_S = 60.0
+
 
 def _build_id_index(tid: np.ndarray) -> np.ndarray:
     """``id_to_row`` gather table: arr[task_id] == row, -1 for unknown ids."""
@@ -50,10 +56,11 @@ class SnapshotView:
     """
 
     def __init__(self, cols: Dict[str, np.ndarray], n_rows: int,
-                 version: int):
+                 version: int, lease_s: float = DEFAULT_LEASE_S):
         self._cols = cols
         self.n_rows = n_rows
         self.version = version
+        self.lease_s = float(lease_s)
         self._id_index: Optional[np.ndarray] = None
 
     def col(self, name: str) -> np.ndarray:
@@ -99,6 +106,7 @@ class ColumnStore:
             for c in self.schema}
         self.n_rows = 0
         self.version = 0          # bumped per committed transaction
+        self.lease_s = DEFAULT_LEASE_S   # claim-lease duration (schema.py)
         self.blobs: Dict[int, Dict[str, Any]] = {}   # task_id -> raw pointers
         # serializes commits against snapshot creation (snapshot isolation);
         # reentrant so insert -> _grow nests safely
@@ -198,7 +206,8 @@ class ColumnStore:
         with self._mu:
             for name, arr in self.cols.items():
                 arr.flags.writeable = False
-            return SnapshotView(dict(self.cols), self.n_rows, self.version)
+            return SnapshotView(dict(self.cols), self.n_rows, self.version,
+                                lease_s=self.lease_s)
 
     def snapshot(self) -> Dict[str, Any]:
         with self._mu:
@@ -208,6 +217,7 @@ class ColumnStore:
                 "cols": {n: self.cols[n][: self.n_rows].copy()
                          for n in self.cols},
                 "blobs": dict(self.blobs),
+                "lease_s": self.lease_s,
             }
 
     @classmethod
@@ -226,6 +236,7 @@ class ColumnStore:
             st.cols[name][:n] = view.col(name)
         st.n_rows = n
         st.version = view.version
+        st.lease_s = getattr(view, "lease_s", DEFAULT_LEASE_S)
         return st
 
     def set_version(self, version: int) -> None:
@@ -253,6 +264,7 @@ class ColumnStore:
         st.n_rows = n
         st.version = snap["version"]
         st.blobs = dict(snap["blobs"])
+        st.lease_s = float(snap.get("lease_s", DEFAULT_LEASE_S))
         return st
 
     # ------------------------------------------------------------- integrity

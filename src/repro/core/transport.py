@@ -138,13 +138,18 @@ class TCPTransport(Transport):
     where the other end of the socket lives).
     """
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket,
+                 recv_timeout: Optional[float] = None):
         try:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError:
             pass          # AF_UNIX socketpair (the test rig) has no Nagle
         sock.setblocking(True)
         self.sock = sock
+        # per-read deadline: a hung peer (live socket, nothing arriving)
+        # surfaces as a TransportError instead of blocking recv forever.
+        # None = wait indefinitely (the pre-knob behavior).
+        self.recv_timeout = recv_timeout
 
     @classmethod
     def pair(cls) -> Tuple["TCPTransport", "TCPTransport"]:
@@ -193,6 +198,13 @@ class TCPTransport(Transport):
         view = memoryview(out)
         got = 0
         while got < n:
+            if self.recv_timeout is not None:
+                readable, _, _ = select.select(
+                    [self.sock], [], [], self.recv_timeout)
+                if not readable:
+                    raise TransportError(
+                        f"tcp recv timed out after {self.recv_timeout}s "
+                        f"({got}/{n} bytes of the frame received)")
             try:
                 k = self.sock.recv_into(view[got:], n - got)
             except OSError as e:
@@ -258,18 +270,30 @@ class TCPListener:
 
 
 def connect_tcp(host: str, port: int, timeout: float = 60.0,
-                retry_every: float = 0.05) -> TCPTransport:
-    """Child-side connect with retries — the listener may not be accepting
-    yet when a freshly spawned interpreter gets here first."""
+                retry_every: float = 0.05, max_retry_every: float = 1.0,
+                max_retries: Optional[int] = None) -> TCPTransport:
+    """Child-side connect with bounded exponential backoff — the listener
+    may not be accepting yet when a freshly spawned interpreter gets here
+    first (replica spawn races the listener under load). The retry interval
+    doubles from ``retry_every`` up to ``max_retry_every`` so a slow
+    listener isn't hammered at 20 Hz for the whole window; the attempt
+    budget is bounded by ``timeout`` (deadline) and optionally
+    ``max_retries``. The last OSError propagates when the budget runs out.
+    """
     deadline = time.monotonic() + timeout
+    delay = retry_every
+    attempts = 0
     while True:
         try:
             sock = socket.create_connection((host, port), timeout=timeout)
             return TCPTransport(sock)
         except OSError:
-            if time.monotonic() >= deadline:
+            attempts += 1
+            if time.monotonic() >= deadline or \
+                    (max_retries is not None and attempts > max_retries):
                 raise
-            time.sleep(retry_every)
+            time.sleep(min(delay, max(deadline - time.monotonic(), 0.0)))
+            delay = min(delay * 2, max_retry_every)
 
 
 def child_endpoint(spec) -> Transport:

@@ -40,8 +40,14 @@ from repro.core.transactions import TxnLog
 class WorkQueue:
     def __init__(self, num_workers: int, store: Optional[ColumnStore] = None,
                  txn_log: Optional[TxnLog] = None, capacity: int = 1 << 16,
-                 device_claim: Optional[bool] = None):
+                 device_claim: Optional[bool] = None,
+                 lease_s: Optional[float] = None):
         self.store = store or ColumnStore(capacity=capacity)
+        if lease_s is not None:
+            # lease duration rides ON THE STORE (and inside its snapshot)
+            # so replicas restored from it derive identical expires_at
+            # values when replaying claim records — see store.DEFAULT_LEASE_S
+            self.store.lease_s = float(lease_s)
         self.num_workers = num_workers
         self.log = txn_log or TxnLog()
         self._next_task_id = int(self.store.n_rows)
@@ -261,7 +267,9 @@ class WorkQueue:
                 self._ready_delta(wid[idx], -1)
                 self.store.update(idx, status=int(Status.RUNNING),
                                   start_time=now, worker_id=worker_id,
-                                  core_id=worker_id)
+                                  core_id=worker_id, claimed_at=now,
+                                  heartbeat_at=now,
+                                  expires_at=now + self.store.lease_s)
                 self._append_log("claim", {
                     "worker": worker_id, "rows": idx, "now": now,
                     "ids": self.store.col("task_id")[idx]})
@@ -347,8 +355,13 @@ class WorkQueue:
                 # claim_all never reassigns worker_id: decrement the counts
                 # of the partitions the rows leave (stolen rows included)
                 self._ready_delta(self.store.col("worker_id")[rows_all], -1)
+                # lease stamps ride the SAME transaction / log record as the
+                # RUNNING flip: the hot wire frame still carries only
+                # rows/now — both sides derive expires_at = now + lease_s
                 self.store.update(rows_all, status=int(Status.RUNNING),
-                                  start_time=now)
+                                  start_time=now, claimed_at=now,
+                                  heartbeat_at=now,
+                                  expires_at=now + self.store.lease_s)
                 self._append_log("claim_all", {"n": len(rows_all),
                                                "rows": rows_all, "now": now})
         return out
@@ -554,7 +567,9 @@ class WorkQueue:
             if any(len(v) for v in out.values()) else np.empty(0, np.int64)
         if len(all_idx):
             self.store.update(all_idx, status=int(Status.RUNNING),
-                              start_time=now)
+                              start_time=now, claimed_at=now,
+                              heartbeat_at=now,
+                              expires_at=now + self.store.lease_s)
             self._append_log("claim_all", {"n": len(all_idx),
                                            "rows": all_idx, "now": now})
         self.invalidate_cursors()      # bypasses the cursor bookkeeping
@@ -565,7 +580,10 @@ class WorkQueue:
                domain_out: Optional[np.ndarray] = None) -> None:
         self._check_transition(idx, Status.FINISHED)
         with self.store.txn():
-            upd = {"status": int(Status.FINISHED), "end_time": now}
+            # finishing IS the lease renewal for the terminal hop: a worker
+            # that reports a result proves liveness at `now`
+            upd = {"status": int(Status.FINISHED), "end_time": now,
+                   "heartbeat_at": now}
             self.store.update(np.asarray(idx), **upd)
             payload = {"ids": np.asarray(idx), "rows": np.asarray(idx),
                        "now": now}
@@ -619,6 +637,87 @@ class WorkQueue:
                 "trials": trials,
                 "new_worker": self.store.col("worker_id")[idx]})
             return len(idx)
+
+    # --------------------------------------------------------------- leases
+    def reap_expired(self, *, now: float = 0.0, max_trials: int = 3) -> int:
+        """Vectorized stale-claim reaper (Work Claim Pattern).
+
+        Requeues every RUNNING row whose lease deadline has passed in ONE
+        masked transition: fail_trials bumps, rows below ``max_trials`` go
+        back to READY (lease columns cleared so the row is visibly
+        unleased), exhausted rows go to FAILED — both legs checked against
+        the legality matrix. Worker death thus becomes a data-plane event:
+        no supervisor round-trip, and the record replays on replicas and
+        per-shard stores through the ordinary cold log path. NaN
+        ``expires_at`` (no lease taken) never matches the mask, so rows
+        claimed by legacy paths are left alone. Returns rows reaped.
+        """
+        with self.store.txn():
+            st = self.store.col("status")
+            exp = self.store.col("expires_at")
+            mask = (st == int(Status.RUNNING)) & (exp < now)
+            idx = np.nonzero(mask)[0]
+            if not len(idx):
+                return 0
+            trials = self.store.col("fail_trials")[idx] + 1
+            retry = idx[trials < max_trials]
+            dead = idx[trials >= max_trials]
+            self._check_transition(retry, Status.READY)
+            self._check_transition(dead, Status.FAILED)
+            self.store.update(idx, fail_trials=trials)
+            if len(retry):
+                self.store.update(retry, status=int(Status.READY),
+                                  claimed_at=np.nan, heartbeat_at=np.nan,
+                                  expires_at=np.nan)
+                self._lower_cursors(retry,
+                                    self.store.col("worker_id")[retry])
+                self._ready_delta(self.store.col("worker_id")[retry], +1)
+            if len(dead):
+                self.store.update(dead, status=int(Status.FAILED),
+                                  end_time=now)
+            self._append_log("reap", {"rows": idx, "retry": retry,
+                                      "dead": dead, "trials": trials,
+                                      "now": now})
+            return len(idx)
+
+    def renew_leases(self, idx: np.ndarray, *, now: float = 0.0) -> int:
+        """Heartbeat: push the lease deadline of still-RUNNING rows to
+        ``now + lease_s``. Rows that already left RUNNING (finished, reaped)
+        are skipped — a late heartbeat cannot resurrect a reaped claim.
+        Returns the number of leases renewed."""
+        idx = np.asarray(idx, np.int64)
+        with self.store.txn():
+            if len(idx):
+                st = self.store.col("status")[idx]
+                idx = idx[st == int(Status.RUNNING)]
+            if not len(idx):
+                return 0
+            self.store.update(idx, heartbeat_at=now,
+                              expires_at=now + self.store.lease_s)
+            self._append_log("lease_renew", {"rows": idx, "now": now})
+            return len(idx)
+
+    def autoscale_signals(self, *, now: float = 0.0) -> Dict[str, float]:
+        """HPA-style signals derived from the relation itself: pending
+        (READY+BLOCKED) count, oldest-pending backlog age, p95
+        submit-to-claim latency over claimed rows, and the RUNNING count.
+        This is what ``ElasticController`` scales the pool from."""
+        st = self.store.col("status")
+        pending = (st == int(Status.READY)) | (st == int(Status.BLOCKED))
+        n_pending = int(pending.sum())
+        backlog_age = 0.0
+        if n_pending:
+            oldest = np.nanmin(self.store.col("submit_time")[pending])
+            if not np.isnan(oldest):
+                backlog_age = max(0.0, float(now) - float(oldest))
+        lat = (self.store.col("claimed_at")
+               - self.store.col("submit_time"))
+        lat = lat[~np.isnan(lat)]
+        p95 = max(0.0, float(np.percentile(lat, 95))) if lat.size else 0.0
+        return {"pending": float(n_pending),
+                "backlog_age_s": backlog_age,
+                "claim_p95_s": p95,
+                "running": float((st == int(Status.RUNNING)).sum())}
 
     # ------------------------------------------------------------- steering
     def prune(self, rows: np.ndarray) -> int:

@@ -52,7 +52,7 @@ class TrainExecutor:
                  checkpointer=None, checkpoint_every: int = 50,
                  steer_every: int = 0, seed: int = 0,
                  analyst: str = "snapshot", replicas: int = 1,
-                 shards: int = 1):
+                 shards: int = 1, lease_s: Optional[float] = None):
         self.cfg = cfg
         self.num_workers = num_workers
         self.base_lr = base_lr
@@ -76,12 +76,12 @@ class TrainExecutor:
             self.router = ShardRouter(
                 shards, num_workers // shards,
                 replicate=None if analyst == "snapshot" else analyst,
-                replicas=replicas)
+                replicas=replicas, lease_s=lease_s)
             self.wq = self.router.shards[0].wq   # compat: a primary handle
             self.supervisor = self.secondary = None
             self.steering = None
         else:
-            self.wq = WorkQueue(num_workers=num_workers)
+            self.wq = WorkQueue(num_workers=num_workers, lease_s=lease_s)
         self.workflow = WorkflowConfig(name="train-sweep",
                                        activities=("train_step",))
         if self.router is None:
@@ -124,6 +124,7 @@ class TrainExecutor:
         self.step_fn = jax.jit(make_train_step(cfg))
         self.state = init_train_state(cfg, jax.random.PRNGKey(seed))
         self.step = 0
+        self.reaped_total = 0
         self.history: List[Dict[str, float]] = []
 
     # ------------------------------------------------------------- seeding
@@ -186,6 +187,11 @@ class TrainExecutor:
             self._steer_future = None
         if self.steer_every and self.step % self.steer_every == 0 \
                 and self._steer_future is None:
+            # the steering tick doubles as the lease sweep: requeue every
+            # expired RUNNING claim (data-plane dead-worker recovery) before
+            # analyzing, so the sweep sees the recovered backlog — sharded
+            # runs reap per shard and the reclaimed rows feed rebalance
+            self.reaped_total += self.reap(now=time.time())
             if self.router is not None:
                 # scatter-gather sweep: pin a consistent version vector on
                 # THIS thread (at this tick's commits), merge on the
@@ -272,6 +278,16 @@ class TrainExecutor:
             pass
 
     # -------------------------------------------------------------- fault
+    def reap(self, *, now: Optional[float] = None,
+             max_trials: int = 3) -> int:
+        """Requeue expired-lease RUNNING rows (``WorkQueue.reap_expired``),
+        across every shard when sharded. Runs automatically on the steering
+        tick; callable directly for tighter recovery cadences."""
+        now = time.time() if now is None else now
+        if self.router is not None:
+            return self.router.reap_expired(now=now, max_trials=max_trials)
+        return self.wq.reap_expired(now=now, max_trials=max_trials)
+
     def fail_worker(self, worker_id: int) -> int:
         """Simulate a node failure: requeue its RUNNING tasks elsewhere
         (sharded: within the shard owning that global worker)."""

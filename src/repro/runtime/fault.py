@@ -37,9 +37,22 @@ class HeartbeatMonitor:
         self.beats[worker_id] = now if now is not None else time.time()
         self.dead.discard(worker_id)
 
+    def resync(self, now: Optional[float] = None) -> None:
+        """Rebuild the beat map after ``WorkQueue.resize``: drop entries for
+        removed workers (a stale entry would otherwise re-trigger a
+        requeue_worker on every sweep forever) and seed newly added workers
+        at ``now`` so they get a full timeout before being declared dead."""
+        now = now if now is not None else time.time()
+        live = range(self.wq.num_workers)
+        self.beats = {w: self.beats.get(w, now) for w in live}
+        self.dead &= set(live)
+
     def sweep(self, now: Optional[float] = None) -> List[int]:
         """Detect dead workers and requeue their RUNNING tasks."""
         now = now if now is not None else time.time()
+        if len(self.beats) != self.wq.num_workers \
+                or self.wq.num_workers - 1 not in self.beats:
+            self.resync(now)       # pool was resized since the last sweep
         newly_dead = []
         for w, seen in self.beats.items():
             if w in self.dead:

@@ -42,7 +42,12 @@ class SpeculativeReexec:
         st = self.wq.store.col("status")
         running = np.nonzero(st == int(Status.RUNNING))[0]
         t0 = self.wq.store.col("start_time")[running]
-        slow = running[(now - t0) > thr]
+        # expired-lease rows belong to the REAPER (they requeue, and the
+        # original re-runs); cloning them here would double-execute. NaN
+        # expires_at (no lease) compares False, so unleased rows still
+        # speculate as before.
+        exp = self.wq.store.col("expires_at")[running]
+        slow = running[((now - t0) > thr) & ~(exp < now)]
         cloned = []
         for row in slow:
             tid = int(self.wq.store.col("task_id")[row])

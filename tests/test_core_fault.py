@@ -55,9 +55,11 @@ def test_speculative_reexec_clones_and_reconciles():
     for t in range(5):
         rows = wq.claim(0, k=1, now=float(t))
         wq.finish(rows, now=float(t) + 1.0)
-    # one slow straggler
+    # one slow straggler — swept while its claim lease is still live
+    # (PR 8: an alive-but-slow worker speculates; an EXPIRED lease is the
+    # reaper's to requeue, covered by test_straggler_skips_expired_leases)
     slow = wq.claim(1, k=1, now=10.0)
-    clones = spec.sweep(now=100.0)
+    clones = spec.sweep(now=12.0)
     assert len(clones) == 1
     # straggler eventually finishes; clone gets pruned
     wq.finish(slow, now=101.0)
@@ -80,3 +82,92 @@ def test_failure_injector_schedule():
     assert inj.events_at(3) == [(3, "worker", 1)]
     assert inj.events_at(5) == [(5, "supervisor", None)]
     assert inj.events_at(4) == []
+
+
+def test_straggler_skips_expired_leases():
+    """An EXPIRED claim lease is the reaper's to requeue — the speculative
+    sweeper must not also clone it (double-recovery would race a clone
+    against the reaped original)."""
+    wq = WorkQueue(num_workers=2, lease_s=5.0)
+    wq.add_tasks(0, 10)
+    spec = SpeculativeReexec(wq, percentile=50, min_samples=5, factor=1.5)
+    for t in range(5):
+        rows = wq.claim(0, k=1, now=float(t))
+        wq.finish(rows, now=float(t) + 1.0)
+    slow = wq.claim(1, k=1, now=10.0)          # lease expires at t=15
+    assert spec.sweep(now=20.0) == []          # expired: not a straggler
+    assert wq.reap_expired(now=20.0) == 1      # it is the reaper's row
+    assert wq.store.col("status")[slow[0]] == int(Status.READY)
+
+
+def test_heartbeat_monitor_survives_resize():
+    """Regression (PR 8 satellite): after ``WorkQueue.resize`` the monitor
+    must drop beats of removed workers (a stale entry would re-declare a
+    ghost dead on every sweep) and seed added workers at sweep time (a
+    missing entry would either KeyError or insta-kill them)."""
+    wq = WorkQueue(num_workers=3)
+    wq.add_tasks(0, 9)
+    mon = HeartbeatMonitor(wq, timeout_s=10.0, now=0.0)
+    wq.resize(2)                               # shrink: worker 2 is gone
+    mon.beat(0, now=100.0)
+    mon.beat(1, now=100.0)
+    assert mon.sweep(now=100.0) == []          # ghost worker 2 not swept
+    assert set(mon.beats) == {0, 1}
+    wq.resize(4)                               # grow: workers 2, 3 are new
+    assert mon.sweep(now=105.0) == []          # seeded at now, not dead
+    assert set(mon.beats) == {0, 1, 2, 3}
+    # new workers then get the full timeout before being declared dead
+    mon.beat(0, now=116.0)
+    mon.beat(1, now=116.0)
+    assert sorted(mon.sweep(now=116.0)) == [2, 3]
+    wq.check_invariants()
+
+
+def test_elastic_hysteresis_holds_small_drift():
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 40)                        # want = 40/8 = 5 vs cur 4
+    ctl = ElasticController(wq, ElasticPolicy(target_tasks_per_worker=8,
+                                              hysteresis=0.5))
+    assert ctl.desired_workers() == 5
+    assert ctl.maybe_resize() is None          # |5-4|/4 < 0.5: hold
+    assert wq.num_workers == 4
+
+
+def test_elastic_clamps_to_min_and_max():
+    wq = WorkQueue(num_workers=4)
+    pol = ElasticPolicy(target_tasks_per_worker=2, min_workers=2,
+                        max_workers=6)
+    ctl = ElasticController(wq, pol)
+    assert ctl.desired_workers() == 2          # empty queue: floor, not 0
+    wq.add_tasks(0, 100)                       # want = 50, ceiling is 6
+    assert ctl.desired_workers() == 6
+    assert ctl.maybe_resize() == 6
+    assert wq.num_workers == 6
+
+
+def test_elastic_counts_blocked_backlog():
+    """All-BLOCKED backlog (upstream deps unresolved) is still pending work
+    the pool will face — the controller must scale for it."""
+    wq = WorkQueue(num_workers=1)
+    wq.add_tasks(0, 32, status=Status.BLOCKED)
+    ctl = ElasticController(wq, ElasticPolicy(target_tasks_per_worker=8))
+    assert ctl.last_signals is None
+    assert ctl.desired_workers() == 4
+    assert ctl.last_signals["pending"] == 32.0
+    assert ctl.maybe_resize() == 4
+
+
+def test_elastic_staleness_escalation_bypasses_hysteresis():
+    """Count-based target says hold, but the backlog is STALE (oldest
+    pending older than max_backlog_age_s): escalate past the hysteresis
+    band and grow by escalation_factor."""
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 32, now=0.0)               # want = 32/8 = 4 == cur
+    pol = ElasticPolicy(target_tasks_per_worker=8, max_backlog_age_s=5.0,
+                        escalation_factor=2.0)
+    ctl = ElasticController(wq, pol)
+    assert ctl.maybe_resize() is None          # no clock: pure count, hold
+    assert ctl.maybe_resize(now=2.0) is None   # backlog still fresh
+    assert ctl.maybe_resize(now=10.0) == 8     # stale: 4 * 2.0
+    assert wq.num_workers == 8
+    assert ctl.last_signals["backlog_age_s"] == 10.0

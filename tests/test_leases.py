@@ -1,0 +1,244 @@
+"""Lease-based claims + the vectorized reaper (PR 8, Work Claim Pattern).
+
+Contracts under test:
+- every claim path stamps claimed_at / heartbeat_at / expires_at in the
+  SAME transaction as the RUNNING flip;
+- reap_expired requeues expired RUNNING rows in one masked, legality-
+  checked transition (retry bump; exhausted rows -> FAILED) and logs an
+  ordinary record;
+- lease columns replay to replica BIT-PARITY through every replay path
+  (per-record, batched, hot-plane) including across a log truncate —
+  without any new wire fields, because expires_at is derived from the
+  lease duration carried on the store snapshot;
+- the sharded router reaps per shard and rebalance treats the reaped
+  backlog as stealable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Status, WorkQueue
+from repro.core.replication import DeltaReplicator, replay, replay_reference
+from repro.core.sharding_router import ShardRouter
+from repro.core.store import ColumnStore, DEFAULT_LEASE_S
+
+
+def assert_stores_equal(a, b, cols):
+    for name in cols:
+        assert np.array_equal(a.col(name), b.col(name),
+                              equal_nan=True), name
+
+
+# ------------------------------------------------------------ claim stamps
+def test_claim_paths_stamp_lease_columns():
+    wq = WorkQueue(num_workers=2, lease_s=30.0)
+    wq.add_tasks(0, 8, now=0.0)
+    out = wq.claim_all(k=1, now=5.0)
+    rows = np.concatenate([v for v in out.values()])
+    assert np.array_equal(wq.store.col("claimed_at")[rows], np.full(2, 5.0))
+    assert np.array_equal(wq.store.col("heartbeat_at")[rows],
+                          np.full(2, 5.0))
+    assert np.array_equal(wq.store.col("expires_at")[rows], np.full(2, 35.0))
+    # per-worker claim() stamps too
+    more = wq.claim(0, k=1, now=6.0)
+    assert wq.store.col("expires_at")[more[0]] == 36.0
+    # unclaimed rows carry no lease
+    ready = wq.store.col("status") == int(Status.READY)
+    assert np.isnan(wq.store.col("expires_at")[ready]).all()
+
+
+def test_finish_renews_heartbeat():
+    wq = WorkQueue(num_workers=1, lease_s=30.0)
+    wq.add_tasks(0, 2, now=0.0)
+    rows = wq.claim(0, k=2, now=1.0)
+    wq.finish(rows, now=9.0)
+    assert (wq.store.col("heartbeat_at")[rows] == 9.0).all()
+
+
+# ----------------------------------------------------------------- reaper
+def test_reap_requeues_expired_and_bumps_trials():
+    wq = WorkQueue(num_workers=2, lease_s=10.0)
+    wq.add_tasks(0, 6, now=0.0)
+    out = wq.claim_all(k=1, now=0.0)            # leases expire at t=10
+    rows = np.concatenate([v for v in out.values()])
+    assert wq.reap_expired(now=5.0) == 0        # live leases: no-op, no log
+    assert [t.op for t in wq.log.records if t.op == "reap"] == []
+    n = wq.reap_expired(now=11.0)
+    assert n == len(rows)
+    st = wq.store.col("status")[rows]
+    assert (st == int(Status.READY)).all()
+    assert (wq.store.col("fail_trials")[rows] == 1).all()
+    # lease columns cleared: the row is visibly unleased again
+    assert np.isnan(wq.store.col("expires_at")[rows]).all()
+    assert np.isnan(wq.store.col("claimed_at")[rows]).all()
+    wq.check_invariants()
+    # reaped rows are immediately claimable again
+    again = wq.claim_all(k=1, now=12.0)
+    assert sum(len(v) for v in again.values()) == 2
+
+
+def test_reap_exhausts_to_failed():
+    wq = WorkQueue(num_workers=1, lease_s=1.0)
+    wq.add_tasks(0, 2, now=0.0)
+    for round_ in range(3):                     # claim -> expire -> reap x3
+        out = wq.claim_all(k=2, now=float(round_ * 10))
+        assert sum(len(v) for v in out.values()) == 2
+        wq.reap_expired(now=float(round_ * 10) + 5.0)
+    st = wq.store.col("status")
+    assert (st[:2] == int(Status.FAILED)).all()
+    assert (wq.store.col("fail_trials")[:2] == 3).all()
+    assert (wq.store.col("end_time")[:2] == 25.0).all()
+    wq.check_invariants()
+
+
+def test_reap_ignores_unleased_running_rows():
+    """NaN expires_at (a RUNNING row that never took a lease, e.g. written
+    by out-of-band test mutation) never matches the expiry mask."""
+    wq = WorkQueue(num_workers=1, lease_s=5.0)
+    wq.add_tasks(0, 2, now=0.0)
+    rows = wq.claim(0, k=2, now=0.0)
+    wq.store.update(rows[:1], expires_at=np.nan)   # simulate legacy claim
+    assert wq.reap_expired(now=100.0) == 1          # only the leased row
+
+
+def test_renew_leases_extends_expiry_and_skips_non_running():
+    wq = WorkQueue(num_workers=1, lease_s=10.0)
+    wq.add_tasks(0, 3, now=0.0)
+    rows = wq.claim(0, k=3, now=0.0)
+    wq.finish(rows[:1], now=2.0)
+    assert wq.renew_leases(rows, now=8.0) == 2      # FINISHED row skipped
+    assert (wq.store.col("expires_at")[rows[1:]] == 18.0).all()
+    assert wq.reap_expired(now=12.0) == 0           # renewal kept them alive
+    assert wq.reap_expired(now=19.0) == 2
+    assert wq.renew_leases(rows, now=20.0) == 0     # late heartbeat: no-op
+    assert [t.op for t in wq.log.records].count("lease_renew") == 1
+
+
+# ------------------------------------------------------- autoscale signals
+def test_autoscale_signals_from_the_relation():
+    wq = WorkQueue(num_workers=2, lease_s=60.0)
+    wq.add_tasks(0, 10, now=3.0)
+    sig = wq.autoscale_signals(now=13.0)
+    assert sig["pending"] == 10.0
+    assert sig["backlog_age_s"] == 10.0
+    assert sig["claim_p95_s"] == 0.0            # nothing claimed yet
+    wq.claim_all(k=2, now=7.0)                  # 4 claims, 4s after submit
+    sig = wq.autoscale_signals(now=13.0)
+    assert sig["pending"] == 6.0
+    assert sig["running"] == 4.0
+    assert sig["claim_p95_s"] == pytest.approx(4.0)
+    wq.claim_all(k=3, now=13.0)
+    wq.finish(np.nonzero(wq.store.col("status")
+                         == int(Status.RUNNING))[0], now=14.0)
+    sig = wq.autoscale_signals(now=14.0)
+    assert sig["pending"] == 0.0 and sig["backlog_age_s"] == 0.0
+
+
+# ---------------------------------------------------------- replay parity
+def _lease_workload(wq, rounds=12):
+    """Mixed workload exercising claim/renew/reap/finish on a short lease."""
+    rng = np.random.default_rng(7)
+    wq.add_tasks(0, 24, now=0.0)
+    for r in range(rounds):
+        t = float(r * 4)
+        wq.claim_all(k=int(rng.integers(1, 3)), now=t)
+        running = np.nonzero(
+            wq.store.col("status") == int(Status.RUNNING))[0]
+        if len(running) and rng.integers(0, 2):
+            wq.renew_leases(running[:: 2], now=t + 1.0)
+        if len(running):
+            done = running[rng.random(len(running)) < 0.4]
+            if len(done):
+                wq.finish(done, now=t + 2.0,
+                          domain_out=np.full((len(done), 3), t))
+        wq.reap_expired(now=t + 3.0 + float(rng.integers(0, 8)))
+        if rng.integers(0, 3) == 0:
+            wq.add_tasks(1, int(rng.integers(1, 5)), now=t)
+
+
+def test_lease_ops_replay_bit_identical_all_paths():
+    """reap/lease_renew records replay identically via the per-record
+    oracle AND the batched path, and lease columns land bit-identical."""
+    wq = WorkQueue(num_workers=3, lease_s=6.0)
+    _lease_workload(wq)
+    assert any(t.op == "reap" for t in wq.log.records)
+    assert any(t.op == "lease_renew" for t in wq.log.records)
+    records = wq.log.tail(0)
+    ref = ColumnStore(wq.store.schema, capacity=1 << 10)
+    bat = ColumnStore(wq.store.schema, capacity=1 << 10)
+    ref.lease_s = bat.lease_s = 6.0     # what a snapshot restore carries
+    n_ref = replay_reference(ref, records)
+    n_bat = replay(bat, records)
+    assert n_ref == n_bat == len(records)
+    assert_stores_equal(ref, bat, wq.store.cols)
+    assert_stores_equal(wq.store, bat, wq.store.cols)
+
+
+def test_lease_parity_on_replica_across_truncate():
+    """A DeltaReplicator syncing across a compaction keeps every lease
+    column bit-identical — the custom lease duration reaches the replica
+    through the restore snapshot, not through any wire field."""
+    wq = WorkQueue(num_workers=3, lease_s=6.0)
+    rep = DeltaReplicator(wq, sync_every=1)
+    truncated = 0
+    rng = np.random.default_rng(11)
+    wq.add_tasks(0, 16, now=0.0)
+    for r in range(10):
+        t = float(r * 5)
+        wq.claim_all(k=1, now=t)
+        wq.reap_expired(now=t + 7.0)
+        if rng.integers(0, 2):
+            running = np.nonzero(
+                wq.store.col("status") == int(Status.RUNNING))[0]
+            if len(running):
+                wq.finish(running[:2], now=t + 1.0)
+        rep.sync()
+        truncated += wq.compact_log()
+    assert truncated > 0                      # synced ACROSS a truncate
+    assert rep.store.lease_s == 6.0           # duration rode the snapshot
+    rep.sync(upto_version=wq.store.version)
+    assert_stores_equal(wq.store, rep.store, wq.store.cols)
+
+
+def test_store_snapshot_carries_lease_duration():
+    st = ColumnStore(capacity=64)
+    st.lease_s = 12.5
+    snap = st.snapshot()
+    assert ColumnStore.restore(snap).lease_s == 12.5
+    assert ColumnStore.from_view(st.snapshot_view()).lease_s == 12.5
+    # legacy snapshots (no lease_s key) restore to the default
+    snap.pop("lease_s")
+    assert ColumnStore.restore(snap).lease_s == DEFAULT_LEASE_S
+
+
+# ---------------------------------------------------------------- sharded
+def test_sharded_reap_feeds_cross_shard_stealing():
+    """Kill one shard's workers (stop claiming/heartbeating): the router
+    reaper requeues their expired claims per shard, the live task-id set
+    is conserved, and rebalance steals the reaped backlog to a drained
+    sibling."""
+    router = ShardRouter(2, 2, lease_s=5.0)
+    router.add_tasks(0, 24, now=0.0)
+    live_before = router.live_task_ids()
+    router.claim_all(k=3, now=0.0)
+    # shard 0 finishes its claims (alive); shard 1's workers go silent
+    sh0, sh1 = router.shards
+    run0 = np.nonzero(sh0.wq.store.col("status")
+                      == int(Status.RUNNING))[0]
+    sh0.wq.finish(run0, now=1.0)
+    n_run1 = int((sh1.wq.store.col("status")
+                  == int(Status.RUNNING)).sum())
+    assert n_run1 > 0
+    reaped = router.reap_expired(now=6.0)     # shard 1's leases expired
+    assert reaped == n_run1
+    for sh in router.shards:
+        sh.wq.check_invariants()
+    # drain shard 0 so rebalance sees it starved, then steal shard 1's
+    # reaped backlog across
+    while int(sh0.wq.ready_counts().sum()):
+        got = sh0.wq.claim_all(k=4, now=7.0)
+        rows = np.concatenate([v for v in got.values()])
+        sh0.wq.finish(rows, now=8.0)
+    assert int(sh1.wq.ready_counts().sum()) > 0
+    moved = router.rebalance(now=9.0)
+    assert moved > 0                          # reaped rows were stealable
+    assert np.array_equal(router.live_task_ids(), live_before)

@@ -165,3 +165,72 @@ def test_send_chunks_is_one_frame(kind):
     assert got == b"".join(big)
     a.close()
     b.close()
+
+
+def test_recv_timeout_raises_instead_of_hanging():
+    """A live-but-silent peer (socket open, nothing arriving) surfaces as a
+    TransportError once recv_timeout elapses, naming the partial frame."""
+    a, b = tp.TCPTransport.pair()
+    a.recv_timeout = 0.05
+    with pytest.raises(tp.TransportError, match="timed out"):
+        a.recv_bytes()
+    # a mid-frame stall is caught too: prefix arrives, payload never does
+    b.sock.sendall(tp._LEN.pack(64))
+    with pytest.raises(tp.TransportError, match="0/64 bytes"):
+        a.recv_bytes()
+    # and a timeout is NOT sticky: traffic after the stall still flows
+    b.send_bytes(b"late")
+    assert a.recv_bytes() == b"late"
+    a.close()
+    b.close()
+
+
+def test_connect_tcp_retries_with_bounded_backoff():
+    """No listener yet: connect_tcp must retry (doubling delay) and give up
+    by max_retries — bounded attempts, not a 20 Hz hammer for the full
+    deadline window."""
+    import socket as socketlib
+    import time as timelib
+    # grab a port with no listener on it
+    probe = socketlib.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    t0 = timelib.monotonic()
+    with pytest.raises(OSError):
+        tp.connect_tcp("127.0.0.1", port, timeout=30.0,
+                       retry_every=0.01, max_retry_every=0.02,
+                       max_retries=3)
+    took = timelib.monotonic() - t0
+    # 3 retries at 0.01 + 0.02 + 0.02 ~= 0.05s — nowhere near the 30s
+    # deadline, proving max_retries bounded the attempt budget
+    assert took < 5.0
+
+
+def test_connect_tcp_succeeds_after_listener_appears():
+    """The spawn race the backoff exists for: the client starts connecting
+    BEFORE the listener binds, and wins once it appears."""
+    import time as timelib
+    lst_box = {}
+    # bind first to learn the port, close, reopen late on the same port
+    lst = tp.TCPListener()
+    host, port = lst.address
+    lst.close()
+
+    def reopen():
+        timelib.sleep(0.15)
+        lst_box["l"] = tp.TCPListener(host, port)
+        lst_box["conn"] = lst_box["l"].accept(timeout=5.0)
+
+    th = threading.Thread(target=reopen)
+    th.start()
+    try:
+        client = tp.connect_tcp(host, port, timeout=5.0, retry_every=0.01)
+        th.join()
+        client.send_bytes(b"made it")
+        assert lst_box["conn"].recv_bytes() == b"made it"
+        client.close()
+        lst_box["conn"].close()
+    finally:
+        th.join()
+        lst_box["l"].close()
