@@ -15,7 +15,8 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.simkit import SimResult, run_centralized, run_chaos, \
-    run_distributed, run_replica_lag, run_sharded, run_wire_ship
+    run_distributed, run_replica_lag, run_shard_failover, run_sharded, \
+    run_wire_ship
 from repro.configs import risers_workflow as RW
 
 PAPER_ACCESS_LATENCY_S = 0.010   # MySQL Cluster over GbE under 936-thread
@@ -409,7 +410,94 @@ def exp_chaos(scale: float = 1.0) -> List[Dict]:
             f"per-shard replica parity failed after the sharded kill: "
             f"parity={r['sharded_replica_parity']} "
             f"truncated_all={r['sharded_log_truncated']}")
+    if r["resize_reaped"] <= 0:
+        raise AssertionError(
+            "the resize-kill phase reaped nothing — no claim was in "
+            "flight when the pool shrank, the race was never exercised")
+    if not r["resize_rehash_ok"]:
+        raise AssertionError(
+            f"reaped rows landed OUTSIDE the post-resize partition map "
+            f"[0, {r['resize_to']}) — reap_expired is rehashing on a "
+            "stale worker count")
+    if not r["resize_no_ghost_beats"]:
+        raise AssertionError(
+            "HeartbeatMonitor kept beats/dead entries for workers removed "
+            "by the resize — ghost beats would re-trigger requeue_worker "
+            "on every sweep")
+    if not (r["resize_conserved"] and r["resize_drained"]):
+        raise AssertionError(
+            f"kill-during-resize lost work: conserved="
+            f"{r['resize_conserved']} drained={r['resize_drained']}")
     return [{"exp": "e_chaos", **{
+        k: (round(v, 5) if isinstance(v, float) else v)
+        for k, v in r.items()}}]
+
+
+def exp_shard_failover(scale: float = 1.0) -> List[Dict]:
+    """Shard-primary failover: kill two shard primaries mid-run (PR 9).
+
+    Runs :func:`benchmarks.simkit.run_shard_failover` on a 3x2 router with
+    per-shard delta replicas and supervision: shard 0's primary dies with
+    its in-flight claims mid-run, shard 1's a few rounds later, each
+    promoted via ``ShardRouter.promote_shard`` after a multi-round dead
+    window. HARD-FAILS unless (a) the live task-id set is conserved across
+    both failovers and every task drains, (b) the surviving shards' claim
+    loops never drop to zero during a dead window, (c) every claim round
+    and the post-recovery merged Q1-Q7 sweep are bit-identical to a
+    single-primary oracle at the recovered version vector, (d) each
+    promote actually drained unsynced WAL records (the replica was
+    behind), re-armed a replica that replays to column bit-parity, and
+    bumped the shard's supervisor generation, and (e) sharded checkpoints
+    cut before the kill and after the promote both restore at exactly
+    their persisted version vectors with bit-identical sweeps and a
+    claimable router. ``failover_wall_s`` (first kill -> drain) is gated
+    in ``scripts/bench_trajectory.py`` via ``--max-shard-failover-s``.
+    """
+    n = max(int(2_000 * scale), 160)
+    r = run_shard_failover(3, 2, n, sync_every=32)
+    if not r["claim_parity"]:
+        raise AssertionError(
+            "claim sets diverged from the single-primary oracle across "
+            "the failovers — a promoted shard is not claiming the same "
+            "lowest-READY rows as the pre-kill primary would")
+    if not (r["conserved"] and r["drained"]):
+        raise AssertionError(
+            f"failover lost work: conserved={r['conserved']} "
+            f"drained={r['drained']} ({r['finished']}/{r['tasks']} "
+            "finished) — a committed transaction vanished in a promote")
+    if r["survivor_min_claims"] <= 0:
+        raise AssertionError(
+            "surviving shards' claim throughput dropped to zero during a "
+            "dead window — a single shard failure stalled the others")
+    if r["promotes"] < 2 or r["promote_log_lag"] <= 0:
+        raise AssertionError(
+            f"promotes={r['promotes']} with combined log lag "
+            f"{r['promote_log_lag']} — the drill must promote twice and "
+            "actually drain an unsynced WAL tail at least once")
+    if not r["sweep_equal"]:
+        raise AssertionError(
+            f"post-recovery merged Q1-Q7 sweep diverged from the oracle "
+            f"at version vector {r['version_vector']}")
+    if not r["replica_cols_equal"]:
+        raise AssertionError(
+            "a re-armed (post-promote) replica lost column bit-parity "
+            "with its promoted primary")
+    if not r["supervision_ok"]:
+        raise AssertionError(
+            f"per-shard supervision failed over wrong: generations="
+            f"{r['supervisor_generations']} (killed shards must bump)")
+    if not (r["ckpt_vector_match"] and r["ckpt_sweep_equal"]
+            and r["ckpt_pre_kill_sweep_equal"] and r["ckpt_state_equal"]):
+        raise AssertionError(
+            f"sharded checkpoint restore broke atomicity: vector_match="
+            f"{r['ckpt_vector_match']} sweep={r['ckpt_sweep_equal']} "
+            f"pre_kill_sweep={r['ckpt_pre_kill_sweep_equal']} "
+            f"state={r['ckpt_state_equal']}")
+    if r["ckpt_resumed_claims"] <= 0:
+        raise AssertionError(
+            "the restored router could not claim — a resumed sharded run "
+            "would stall immediately")
+    return [{"exp": "e_shard_failover", **{
         k: (round(v, 5) if isinstance(v, float) else v)
         for k, v in r.items()}}]
 

@@ -48,9 +48,17 @@ DESCRIPTIONS = {
                  "weak-scaling claim throughput (the "
                  "--min-sharded-scaleup gate)",
     "e_chaos": "kill-drill: >=2 workers go silent + replica process "
-               "killed mid-run; lease reap + steal + snapshot respawn "
-               "must conserve the task-id set, drain every task and "
-               "keep replica bit-parity (the --max-recovery-s gate)",
+               "killed mid-run (one batch DURING a pool resize); lease "
+               "reap + steal + snapshot respawn must conserve the "
+               "task-id set, drain every task and keep replica "
+               "bit-parity (the --max-recovery-s gate)",
+    "e_shard_failover": "shard-primary failover: two shard primaries "
+                        "killed mid-run with claims in flight; promote "
+                        "must drain the WAL tail, keep survivors "
+                        "claiming, restore checkpoints at the exact "
+                        "version vector and stay sweep-bit-identical to "
+                        "a single-primary oracle (the "
+                        "--max-shard-failover-s gate)",
     "claim_kernel": "claim_all fast-path vs seed loop at k=1/k=4 "
                     "(the >=5x gate) + device wq_claim op latency",
     "replay_throughput": "batched hot-plane txn-log replay vs "
@@ -99,6 +107,7 @@ def main() -> None:
         "e_wire_ship": lambda: E.exp_wire_ship(args.scale),
         "e_sharded": lambda: E.exp_sharded(args.scale),
         "e_chaos": lambda: E.exp_chaos(args.scale),
+        "e_shard_failover": lambda: E.exp_shard_failover(args.scale),
         "claim_kernel": lambda: E.exp_kernel_claim(args.scale),
         "replay_throughput": lambda: E.exp_replay_throughput(args.scale),
         "steering_sweep": lambda: E.exp_steering_sweep(args.scale),
@@ -184,6 +193,14 @@ def _headline(name: str, rows) -> str:
                     f"conserved={r['conserved']};drained={r['drained']};"
                     f"reaped={r['reaped']};"
                     f"respawns={r['replica_respawns']}")
+        if name == "e_shard_failover":
+            r = rows[0]
+            return (f"failover_wall_s={r['failover_wall_s']};"
+                    f"promote_s_max={r['promote_s_max']};"
+                    f"survivor_min_claims={r['survivor_min_claims']};"
+                    f"conserved={r['conserved']};"
+                    f"sweep_equal={r['sweep_equal']};"
+                    f"ckpt_vector_match={r['ckpt_vector_match']}")
         if name == "claim_kernel":
             spd = min(r["speedup"] for r in rows if r.get("impl") == "speedup")
             dev = min(r["us_per_task"] for r in rows if "us_per_task" in r)

@@ -953,7 +953,7 @@ def run_chaos(num_workers: int, num_tasks: int, *, lease_s: float = 4.0,
               sync_every: int = 16, seed: int = 0,
               transport: Optional[str] = None,
               shards: int = 2, workers_per_shard: int = 4) -> Dict:
-    """Kill-drill for the lease-based recovery path (PR 8), two phases.
+    """Kill-drill for the lease-based recovery path (PR 8), three phases.
 
     **A. Single primary + shipped replica.** ``num_workers`` workers run
     per-worker ``claim(w, ..., allow_steal=True)`` loops against one
@@ -977,12 +977,22 @@ def run_chaos(num_workers: int, num_tasks: int, *, lease_s: float = 4.0,
     it as ordinary stealable work, and per-shard replica parity is
     re-checked across compactions.
 
+    **C. Kill DURING a resize (reaper x rehash race).** Workers go silent
+    holding live leases at the same tick the pool shrink-``resize``s under
+    them: their RUNNING rows keep pre-resize worker ids that no longer name
+    a partition. The lease reaper must land the requeued rows on the
+    POST-resize partition map (``reap_expired`` rehashes at today's
+    ``num_workers``) and the :class:`HeartbeatMonitor` must resync to the
+    new pool with no ghost beats — a stale beat entry for a removed worker
+    would re-trigger ``requeue_worker`` on every sweep forever.
+
     Returned dict carries the conservation / drain / parity verdicts
     (``exp_chaos`` raises on any False) plus ``recovery_s`` — wall time
     from the kill instant to the last task draining — which
     ``scripts/bench_trajectory.py`` gates with ``--max-recovery-s``.
     """
     from repro.core.sharding_router import ShardRouter
+    from repro.runtime.fault import HeartbeatMonitor
 
     rng = np.random.default_rng(seed)
 
@@ -1110,6 +1120,54 @@ def run_chaos(num_workers: int, num_tasks: int, *, lease_s: float = 4.0,
         s_truncated &= sh.wq.log.base > 0
     router.close()
 
+    # -------------- phase C: kill DURING a resize (reaper x rehash race) --
+    W0, W1 = num_workers, max(2, num_workers // 2)
+    wq2 = WorkQueue(num_workers=W0, capacity=max(1 << 12, 2 * num_tasks),
+                    lease_s=lease_s)
+    mon = HeartbeatMonitor(wq2, timeout_s=lease_s, now=0.0)
+    wq2.add_tasks(0, num_tasks, now=0.0)
+    r_before = np.sort(wq2.store.col("task_id")[
+        wq2.store.col("status") != int(Status.EMPTY)])
+    r_live = set(range(W0))
+    r_pending: Dict[int, np.ndarray] = {w: np.empty(0, np.int64)
+                                        for w in range(W0)}
+    # worker 0 always survives, so the shrunken pool can drain the backlog
+    r_killed = sorted(rng.choice(np.arange(1, W0),
+                                 size=min(kill_workers, W0 - 1),
+                                 replace=False).tolist())
+    resize_reaped = 0
+    rehash_ok = True
+    tick = 0
+    while tick < 10_000:
+        clock = float(tick)
+        for w in sorted(r_live):
+            if w >= wq2.num_workers:
+                continue               # partition removed by the shrink:
+            if len(r_pending[w]):      # decommissioned workers stop; their
+                wq2.finish(r_pending[w], now=clock)  # held rows strand too
+            mon.beat(w, now=clock)
+            r_pending[w] = wq2.claim(w, k=4, now=clock, allow_steal=True)
+        if tick == kill_tick:
+            r_live -= set(r_killed)    # silent death, leases still live...
+            wq2.resize(W1)             # ...and the map changes under them
+        if tick > kill_tick:
+            n = wq2.reap_expired(now=clock, max_trials=max_trials)
+            resize_reaped += n
+            if n:                      # reaped rows must land IN the new map
+                st_c = wq2.store.col("status")
+                rw = wq2.store.col("worker_id")[st_c == int(Status.READY)]
+                rehash_ok &= bool(((rw >= 0) & (rw < W1)).all())
+        mon.sweep(now=clock)           # auto-resyncs to the resized pool
+        if int(wq2.counts()["FINISHED"]) == num_tasks:
+            break
+        tick += 1
+    r_counts = wq2.counts()
+    r_after = np.sort(wq2.store.col("task_id")[
+        wq2.store.col("status") != int(Status.EMPTY)])
+    ghost_free = (len(mon.beats) == W1
+                  and all(w < W1 for w in mon.beats)
+                  and all(w < W1 for w in mon.dead))
+
     return {
         "workers": num_workers, "tasks": num_tasks, "lease_s": lease_s,
         "workers_killed": killed, "replicas_killed": 1,
@@ -1134,6 +1192,316 @@ def run_chaos(num_workers: int, num_tasks: int, *, lease_s: float = 4.0,
         "sharded_finished": int(s_done),
         "sharded_replica_parity": bool(s_parity),
         "sharded_log_truncated": bool(s_truncated),
+        "resize_from": int(W0), "resize_to": int(W1),
+        "resize_killed": r_killed,
+        "resize_reaped": int(resize_reaped),
+        "resize_rehash_ok": bool(rehash_ok),
+        "resize_no_ghost_beats": bool(ghost_free),
+        "resize_conserved": bool(np.array_equal(r_before, r_after)),
+        "resize_drained": bool(r_counts["FINISHED"] == num_tasks
+                               and r_counts["RUNNING"] == 0
+                               and r_counts["READY"] == 0),
+    }
+
+
+def run_shard_failover(num_shards: int, workers_per_shard: int,
+                       num_tasks: int, *, activities: int = 3,
+                       sync_every: int = 32, seed: int = 0) -> Dict:
+    """Shard-primary failover drill (PR 9): kill two primaries mid-run.
+
+    An ``S x L`` :class:`ShardRouter` (per-shard delta replicas, per-shard
+    Supervisor + SecondarySupervisor) runs the deterministic lockstep
+    workload of :func:`run_sharded` against a single ``W``-worker oracle.
+    Mid-run, shard 0's primary dies WITH its in-flight claims (its workers
+    held them); a few rounds later so does shard 1's. For each kill:
+
+    * **Dead window.** The failed shard stops serving; the surviving
+      shards' claim loops must keep returning work every round
+      (``survivor_min_claims`` > 0 — no global stall) and must stay
+      id-for-id equal to the oracle claiming with only the surviving
+      global workers.
+    * **Promote.** ``router.promote_shard`` elects the replica, drains the
+      surviving log tail (``promote_log_lag`` records how many
+      unsynced records the WAL drain recovered — the replica was BEHIND),
+      requeues the dead primary's RUNNING rows, re-arms a fresh replicator
+      and promotes the shadow supervisor (generation bump). The oracle
+      mirrors only the status flip, so every later claim round and the
+      final merged Q1-Q7 sweep must stay bit-identical.
+
+    A sharded checkpoint is cut BEFORE the first kill and another AFTER
+    the first promote; both must restore (``Checkpointer.restore`` ->
+    ``ShardRouter.from_checkpoint``) at exactly their persisted version
+    vectors with bit-identical merged sweeps, and the restored router must
+    serve claims — the ``shards > 1`` checkpoint exclusion is gone.
+
+    Hard verdicts returned (``exp_shard_failover`` raises on any False):
+    conservation of the live task-id set across both failovers, full
+    drain, claim parity, final + checkpoint sweep parity, re-armed replica
+    column parity, supervisor generations. ``failover_wall_s`` (first kill
+    -> drain) is gated by ``--max-shard-failover-s`` in
+    ``scripts/bench_trajectory.py``.
+    """
+    import shutil
+    import tempfile
+
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.core.sharding_router import ShardRouter
+
+    S, L = num_shards, workers_per_shard
+    W = S * L
+    cap = max(1 << 14, 8 * num_tasks)
+    router = ShardRouter(S, L, capacity=cap, replicate="delta",
+                         sync_every=sync_every)
+    router.attach_supervision(
+        WorkflowConfig(name="failover-drill", activities=("a0",)))
+    oracle = WorkQueue(num_workers=W, capacity=cap)
+    osteer = SteeringEngine(oracle)
+
+    def dom_in(ids: np.ndarray) -> np.ndarray:
+        h = (ids * 2654435761) % (1 << 10)
+        return np.stack([(h % 977) / 976.0, ((h * 3) % 911) / 910.0,
+                         ((h * 7) % 1013) / 1012.0], 1)
+
+    def dom_out(ids: np.ndarray) -> np.ndarray:
+        return np.stack([(ids % 7) / 8.0, (ids % 5) / 4.0,
+                         (ids % 3) / 2.0], 1)
+
+    # enough backlog that BOTH kill/promote windows happen mid-claim-storm
+    per_act = max(num_tasks // activities, 16 * W)
+    prev = None
+    for a in range(activities):
+        ids = np.arange(a * per_act, (a + 1) * per_act, dtype=np.int64)
+        kw = dict(domain_in=dom_in(ids), duration_est=1.0, now=0.0)
+        if prev is not None:
+            kw["parent_task"] = prev              # provenance chain for Q7
+        rid = router.add_tasks(a, per_act, **kw)
+        oid = oracle.add_tasks(a, per_act, **kw)
+        assert np.array_equal(rid, ids) and np.array_equal(oid, ids)
+        prev = ids
+    total = activities * per_act
+    ids_all = np.arange(total, dtype=np.int64)
+
+    def shard_rows(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        # valid throughout: this drill never steals, and a promoted store
+        # replays the primary's log, so per-shard row order is preserved
+        out = []
+        owner = router.shard_of(ids)
+        for s in range(S):
+            m = owner == s
+            if not m.any():
+                continue
+            tid = router.shards[s].wq.store.col("task_id")
+            pos = np.searchsorted(tid, ids[m])
+            assert np.array_equal(tid[pos], ids[m])
+            out.append((s, pos))
+        return out
+
+    # schedule (round -> event); each kill strands that shard's claims of
+    # the SAME round — the workers die holding them — and is promoted
+    # after a multi-round dead window
+    CKPT1, KILL1, PROM1, CKPT2, KILL2, PROM2 = 3, 5, 8, 10, 12, 15
+    kills = [(KILL1, 0, PROM1), (KILL2, 1, PROM2)]
+    ckpt_root = tempfile.mkdtemp(prefix="shard_failover_ckpt_")
+    ckpt = Checkpointer(ckpt_root, keep=3, async_write=True)
+    vecs: Dict[int, List[int]] = {}
+    fps: Dict[int, str] = {}
+    ck_clock: Dict[int, float] = {}
+
+    clock = 1.0
+    rounds = 0
+    claim_parity = True
+    conserved = True
+    survivor_min: Optional[int] = None
+    survivor_min_rate: Optional[float] = None
+    promote_s: List[float] = []
+    promote_lag = 0
+    t_kill1 = 0.0
+    while rounds < 400:
+        dead = [s for s in range(S) if not router.shards[s].alive]
+        t0 = time.perf_counter()
+        rc = router.claim_all(k=2, now=clock, steal=False)
+        claim_dt = time.perf_counter() - t0
+        r_ids = {g: np.sort(router.shards[s].wq.store.col("task_id")[rows])
+                 for g, (s, rows) in rc.items() if len(rows)}
+        if dead:
+            # oracle mirror of the dead window: only the surviving global
+            # workers claim (per-worker, own partition — same id choice as
+            # claim_all(steal=False))
+            o_ids = {}
+            for g in range(W):
+                if g // L in dead:
+                    continue
+                rows = oracle.claim(g, k=2, now=clock, allow_steal=False)
+                if len(rows):
+                    o_ids[g] = np.sort(oracle.store.col("task_id")[rows])
+            n_sur = int(sum(len(v) for v in o_ids.values()))
+            survivor_min = n_sur if survivor_min is None \
+                else min(survivor_min, n_sur)
+            rate = n_sur / max(claim_dt, 1e-9)
+            survivor_min_rate = rate if survivor_min_rate is None \
+                else min(survivor_min_rate, rate)
+        else:
+            oc = oracle.claim_all(k=2, now=clock, steal=False)
+            o_ids = {g: np.sort(oracle.store.col("task_id")[rows])
+                     for g, rows in oc.items() if len(rows)}
+        claim_parity &= set(r_ids) == set(o_ids) and all(
+            np.array_equal(r_ids[g], o_ids[g]) for g in r_ids)
+        if not o_ids and rounds > PROM2:
+            break
+
+        kill_here = next((ks for kr, ks, _ in kills if kr == rounds), None)
+        if kill_here is not None:
+            # this round's claims on the doomed shard die WITH it: they
+            # stay RUNNING in the (frozen) store until promote requeues them
+            strand = np.concatenate(
+                [v for g, v in o_ids.items() if g // L == kill_here]
+                or [np.empty(0, np.int64)])
+            router.fail_shard(kill_here)
+            if kill_here == 0:
+                t_kill1 = time.perf_counter()
+        else:
+            strand = np.empty(0, np.int64)
+        done_ids = np.sort(np.concatenate(list(o_ids.values()))) \
+            if o_ids else np.empty(0, np.int64)
+        work = np.setdiff1d(done_ids, strand)
+        fail_ids = work[::7] if (not dead and kill_here is None
+                                 and rounds % 3 == 2) else work[:0]
+        fin = np.setdiff1d(work, fail_ids)
+        fa, fb = fin[fin % 2 == 0], fin[fin % 2 == 1]
+        if len(fail_ids):
+            oracle.fail(fail_ids, now=clock + 0.25)
+            for s, pos in shard_rows(fail_ids):
+                router.shards[s].wq.fail(pos, now=clock + 0.25)
+        for ids_, dt in ((fa, 1.0), (fb, 1.5)):
+            if not len(ids_):
+                continue
+            oracle.finish(ids_, now=clock + dt, domain_out=dom_out(ids_))
+            for s, pos in shard_rows(ids_):
+                tid = router.shards[s].wq.store.col("task_id")[pos]
+                router.shards[s].wq.finish(pos, now=clock + dt,
+                                           domain_out=dom_out(tid))
+
+        prom = next(((ks, pr) for kr, ks, pr in kills if pr == rounds),
+                    None)
+        if prom is not None:
+            ks = prom[0]
+            promote_lag += int(router.shards[ks].replicator.lag())
+            t0 = time.perf_counter()
+            router.promote_shard(ks)
+            promote_s.append(time.perf_counter() - t0)
+            # oracle mirror: recover() ONLY flips the dead primary's
+            # in-flight RUNNING rows back to READY (no trials bump, no
+            # time stamps) — every other column already matches
+            tid = oracle.store.col("task_id")
+            st = oracle.store.col("status")
+            rows = np.nonzero((st == int(Status.RUNNING))
+                              & (((tid % W) // L) == ks))[0]
+            if len(rows):
+                oracle.store.update(rows, status=int(Status.READY))
+                oracle.invalidate_cursors(rows)
+            conserved &= bool(
+                np.array_equal(ids_all, router.live_task_ids()))
+
+        if rounds in (CKPT1, CKPT2):
+            step = 1 if rounds == CKPT1 else 2
+            vecs[step] = [int(v) for v in router.version_vector()]
+            fps[step] = _sweep_fingerprint(ShardRouter.comparable(
+                router.run_all(clock, views=router.snapshot_vector())))
+            ck_clock[step] = clock
+            ckpt.save(step, {"w": np.full(8, float(step), np.float32)},
+                      router=router)
+            ckpt.wait()
+
+        router.sync_secondaries()
+        for sh in router.shards:
+            if sh.alive and sh.replicator is not None:
+                sh.replicator.maybe_sync()
+        router.compact()
+        clock += 2.0
+        rounds += 1
+    failover_wall_s = time.perf_counter() - t_kill1
+
+    conserved &= bool(np.array_equal(ids_all, router.live_task_ids()))
+    o_open = int(np.isin(oracle.store.col("status"),
+                         [int(Status.READY), int(Status.RUNNING),
+                          int(Status.BLOCKED)]).sum())
+    drained = router.tasks_left() == 0 and o_open == 0
+
+    views = router.snapshot_vector()
+    oview = oracle.store.snapshot_view()
+    merged = ShardRouter.comparable(router.run_all(clock, views=views))
+    onorm = ShardRouter.oracle_normalize(
+        osteer.run_all(clock, view=oview), oview)
+    sweep_equal = _sweep_fingerprint(merged) == _sweep_fingerprint(onorm)
+
+    # the RE-ARMED replicators (fresh after each promote) still replay to
+    # bit-parity at the pinned vector
+    replica_cols_equal = True
+    for s, sh in enumerate(router.shards):
+        sh.replicator.sync(upto_version=views[s].version)
+        replica_cols_equal &= all(
+            np.array_equal(views[s].col(n), sh.replicator.store.col(n),
+                           equal_nan=True)
+            for n in sh.wq.store.cols)
+
+    gens = [int(sh.supervisor.state.generation) for sh in router.shards]
+    supervision_ok = (all(sh.supervisor.done() for sh in router.shards)
+                      and gens[0] >= 1 and gens[1] >= 1)
+
+    router.check_invariants()
+    oracle.check_invariants()
+
+    # restore the LATEST checkpoint (cut after the first promote): the
+    # rebuilt router resumes at exactly the persisted version vector,
+    # sweeps bit-identically, and serves claims again
+    tmpl = {"w": np.zeros(8, np.float32)}
+    step2, st2, r2 = ckpt.restore(tmpl, router_kw={"replicate": None})
+    ck_vector_ok = (step2 == 2
+                    and [int(v) for v in r2.version_vector()] == vecs[2])
+    ck_sweep_ok = _sweep_fingerprint(ShardRouter.comparable(
+        r2.run_all(ck_clock[2], views=r2.snapshot_vector()))) == fps[2]
+    ck_state_ok = bool(np.array_equal(
+        st2["w"], np.full(8, 2.0, np.float32)))
+    got = r2.claim_all(k=1, now=ck_clock[2] + 1.0)
+    ck_resumed_claims = int(sum(len(rows) for _, rows in got.values()))
+    r2.close()
+    # the pre-kill cut stays independently restorable (historical step)
+    step1, _, r1 = ckpt.restore(tmpl, step=1,
+                                router_kw={"replicate": None})
+    ck_pre_ok = ([int(v) for v in r1.version_vector()] == vecs[1]
+                 and _sweep_fingerprint(ShardRouter.comparable(
+                     r1.run_all(ck_clock[1],
+                                views=r1.snapshot_vector()))) == fps[1])
+    r1.close()
+    router.close()
+    shutil.rmtree(ckpt_root, ignore_errors=True)
+
+    return {
+        "shards": S, "workers_per_shard": L, "global_workers": W,
+        "tasks": int(total), "rounds": int(rounds),
+        "kills": [ks for _, ks, _ in kills],
+        "claim_parity": bool(claim_parity),
+        "survivor_min_claims": int(survivor_min or 0),
+        "survivor_min_claims_per_s": round(float(survivor_min_rate or 0.0),
+                                           1),
+        "promotes": len(promote_s),
+        "promote_s_max": round(max(promote_s), 4) if promote_s else 0.0,
+        "promote_log_lag": int(promote_lag),
+        "failover_wall_s": round(failover_wall_s, 4),
+        "conserved": bool(conserved),
+        "drained": bool(drained),
+        "sweep_equal": bool(sweep_equal),
+        "replica_cols_equal": bool(replica_cols_equal),
+        "supervisor_generations": gens,
+        "supervision_ok": bool(supervision_ok),
+        "ckpt_vector_match": bool(ck_vector_ok),
+        "ckpt_sweep_equal": bool(ck_sweep_ok),
+        "ckpt_pre_kill_sweep_equal": bool(ck_pre_ok),
+        "ckpt_state_equal": bool(ck_state_ok),
+        "ckpt_resumed_claims": int(ck_resumed_claims),
+        "version_vector": [int(v.version) for v in views],
+        "finished": int(sum(int(sh.wq.counts()["FINISHED"])
+                            for sh in router.shards)),
     }
 
 

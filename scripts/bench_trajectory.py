@@ -37,7 +37,17 @@ the enforced floors regresses:
   work stealing + snapshot respawn must conserve the live task-id set,
   drain every task and restore replica bit-parity (all hard-checked
   inside the experiment), with the kill-to-drained wall bounded by
-  --max-recovery-s
+  --max-recovery-s; one worker batch now dies DURING a pool resize, so
+  the reaper must land requeued rows on the post-resize partition map and
+  the heartbeat monitor must resync with no ghost beats
+- shard-primary failover (e_shard_failover): two shard primaries killed
+  mid-run with claims in flight; each promote must drain the unsynced WAL
+  tail, conserve the live task-id set, keep the surviving shards claiming
+  (never zero during a dead window), stay claim- and sweep-bit-identical
+  to a single-primary oracle, and restore sharded checkpoints at exactly
+  their persisted version vectors (all hard-checked inside the
+  experiment), with the first-kill-to-drained wall bounded by
+  --max-shard-failover-s
 - replica fan-out (e_wire_ship's ReplicaGroup drill): every member of the
   3-replica group must sweep bit-identically after a broadcast sync, and
   promote() must elect the highest-acked survivor after the leader dies
@@ -97,6 +107,10 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
     # raises unless the kill-drill conserved the task-id set, drained
     # every task on the survivors, and restored replica bit-parity
     chaos = E.exp_chaos(scale_claim)[0]
+    # raises unless both shard-primary failovers conserved the task-id
+    # set, kept survivors claiming, stayed oracle-bit-identical and
+    # restored sharded checkpoints at their exact version vectors
+    failover = E.exp_shard_failover(scale_claim)[0]
     return {
         "claim_speedup_min": min(sp_k1),
         "claim_speedup_max": max(sp_k1),
@@ -161,6 +175,26 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
         "chaos_replica_parity": (chaos["replica_cols_equal"]
                                  and chaos["sharded_replica_parity"]),
         "chaos_replica_respawns": chaos["replica_respawns"],
+        "chaos_resize_ok": (chaos["resize_rehash_ok"]
+                            and chaos["resize_no_ghost_beats"]
+                            and chaos["resize_conserved"]
+                            and chaos["resize_drained"]),
+        "shard_failover_wall_s": failover["failover_wall_s"],
+        "shard_failover_promote_s_max": failover["promote_s_max"],
+        "shard_failover_survivor_min_claims":
+            failover["survivor_min_claims"],
+        "shard_failover_survivor_min_claims_per_s":
+            failover["survivor_min_claims_per_s"],
+        "shard_failover_conserved": (failover["conserved"]
+                                     and failover["drained"]),
+        "shard_failover_parity": (failover["claim_parity"]
+                                  and failover["sweep_equal"]
+                                  and failover["replica_cols_equal"]),
+        "shard_failover_ckpt_ok": (failover["ckpt_vector_match"]
+                                   and failover["ckpt_sweep_equal"]
+                                   and failover["ckpt_pre_kill_sweep_equal"]
+                                   and failover["ckpt_resumed_claims"] > 0),
+        "shard_failover_log_lag_drained": failover["promote_log_lag"],
         "claim_scale": scale_claim,
         "replica_scale": scale_replica,
     }
@@ -222,6 +256,10 @@ def main() -> None:
                     help="ceiling for the chaos drill's kill-to-drained "
                          "wall (worst of the single-primary and sharded "
                          "phases; 0 records without enforcing)")
+    ap.add_argument("--max-shard-failover-s", type=float, default=60.0,
+                    help="ceiling for e_shard_failover's first-kill-to-"
+                         "drained wall across two shard-primary promotes "
+                         "(0 records without enforcing)")
     ap.add_argument("--min-compression", type=float, default=2.0,
                     help="floor for the varint codec's raw/compressed "
                          "hot-frame byte ratio on the bulk log "
@@ -251,7 +289,8 @@ def main() -> None:
               f" fanout_lag_ms={pt.get('fanout_lag_ms')}"
               f" compression={pt.get('compression_ratio')}"
               f" sharded_scaleup={pt.get('sharded_scaleup')}"
-              f" chaos_recovery_s={pt.get('chaos_recovery_s')}")
+              f" chaos_recovery_s={pt.get('chaos_recovery_s')}"
+              f" shard_failover_s={pt.get('shard_failover_wall_s')}")
 
     failures = []
     if snap["claim_speedup_min"] < args.min_claim_speedup:
@@ -322,6 +361,29 @@ def main() -> None:
         failures.append(
             f"chaos recovery took {snap['chaos_recovery_s']}s from kill "
             f"to full drain — over the {args.max_recovery_s}s gate")
+    if not snap["chaos_resize_ok"]:
+        failures.append(
+            "kill-during-resize drill failed: reaped rows missed the "
+            "post-resize partition map or the heartbeat monitor kept "
+            "ghost beats")
+    if not (snap["shard_failover_conserved"]
+            and snap["shard_failover_parity"]
+            and snap["shard_failover_ckpt_ok"]):
+        failures.append(
+            f"shard failover failed: conserved="
+            f"{snap['shard_failover_conserved']} "
+            f"parity={snap['shard_failover_parity']} "
+            f"ckpt={snap['shard_failover_ckpt_ok']}")
+    if snap["shard_failover_survivor_min_claims"] <= 0:
+        failures.append(
+            "surviving shards' claim throughput hit zero during a "
+            "shard-primary dead window")
+    if args.max_shard_failover_s > 0 \
+            and snap["shard_failover_wall_s"] > args.max_shard_failover_s:
+        failures.append(
+            f"shard failover took {snap['shard_failover_wall_s']}s from "
+            f"first kill to full drain — over the "
+            f"{args.max_shard_failover_s}s gate")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)
@@ -348,7 +410,14 @@ def main() -> None:
           f"(gate {args.max_recovery_s}s, "
           f"{snap['chaos_workers_killed']} workers + "
           f"{snap['chaos_replicas_killed']} replica killed, "
-          f"{snap['chaos_reaped']} claims reaped) "
+          f"{snap['chaos_reaped']} claims reaped), "
+          f"shard_failover_s={snap['shard_failover_wall_s']} "
+          f"(gate {args.max_shard_failover_s}s, "
+          f"promote max {snap['shard_failover_promote_s_max']}s, "
+          f"survivor min claims "
+          f"{snap['shard_failover_survivor_min_claims']}, "
+          f"{snap['shard_failover_log_lag_drained']} WAL records "
+          f"drained) "
           f"[{snap['wire_transport']}/{snap['wire_codec']}]")
 
 

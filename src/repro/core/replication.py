@@ -144,6 +144,11 @@ def _apply_reap(store: ColumnStore, p: Dict) -> None:
         store.update(p["retry"], status=int(Status.READY),
                      claimed_at=np.nan, heartbeat_at=np.nan,
                      expires_at=np.nan)
+        # reaped retries are rehashed onto the CURRENT partition map (the
+        # reaper may run after a resize); older logs lack the key
+        new_worker = p.get("new_worker")
+        if new_worker is not None:
+            store.update(p["retry"], worker_id=new_worker)
     if len(p["dead"]):
         store.update(p["dead"], status=int(Status.FAILED),
                      end_time=p["now"])
@@ -450,6 +455,14 @@ def replay_runs(store: ColumnStore, runs) -> int:
 
 
 _replica_seq = itertools.count()
+
+
+class AllReplicasDeadError(RuntimeError):
+    """Raised by :meth:`ReplicaGroup.elect` / :meth:`ReplicaGroup.promote`
+    when every member's process is dead: there is no survivor whose live
+    state can be trusted past its last ack, so election would crown a
+    corpse. Callers that CAN restart from a durable snapshot should do so
+    explicitly (Checkpointer.restore), not through promote()."""
 
 
 class Replicator(abc.ABC):
@@ -1490,13 +1503,19 @@ class ReplicaGroup(Replicator):
     # ----------------------------------------------------------- failover
     def elect(self) -> ShippedDeltaReplicator:
         """The member ``promote`` would crown: most-caught-up (highest
-        acked offset, then replica version) among LIVE processes; if every
-        process is dead, the highest-acked one (its respawn snapshot is
-        guaranteed complete by the consumer floor)."""
+        acked offset, then replica version) among LIVE processes. When
+        every process is dead there is no electable member — a corpse's
+        store may trail its last ack arbitrarily — so this raises
+        :class:`AllReplicasDeadError` instead of crowning one."""
         def key(m: ShippedDeltaReplicator):
             alive = m.process is not None and m.process.is_alive()
             return (alive, m.offset, m.replica_version)
-        return max(self.members, key=key)
+        leader = max(self.members, key=key)
+        if not (leader.process is not None and leader.process.is_alive()):
+            raise AllReplicasDeadError(
+                f"all {len(self.members)} replica processes are dead; "
+                "nothing to promote — restore from a checkpoint instead")
+        return leader
 
     def recover(self) -> WorkQueue:
         """Failover WITHOUT releasing the group: the elected member drains

@@ -27,7 +27,18 @@ module reproduces the distribution layer:
   drain, :meth:`rebalance` pulls a batch from the richest sibling over a
   real ``Transport`` endpoint pair; the victim logs a prune and the thief
   logs a NORMAL insert (original task ids preserved), so each shard's
-  replicas replay to bit-parity without any new log record type.
+  replicas replay to bit-parity without any new log record type. The
+  hand-off is two-phase: the victim's prune is PROVISIONAL until the
+  thief's insert acks, and a transport death mid-steal rolls the chunk
+  back as a logged re-insert — no task is ever lost to a dead wire.
+* **shard-primary failover** — :meth:`fail_shard` marks a primary dead
+  (it stops serving claims/inserts/steals; the other shards keep
+  claiming), and :meth:`promote_shard` elects its most-caught-up replica
+  via the existing ``Replicator.promote()``, drains the surviving log
+  tail, requeues RUNNING rows, rebuilds the shard's WorkQueue around the
+  promoted store, re-registers a fresh replicator, and re-arms the
+  per-shard supervision (:meth:`attach_supervision`) with a bumped
+  generation — not one committed transaction on any shard is lost.
 
 Float caveat for bit-parity: merged Q6/Q7 means add per-shard partial sums
 in shard order while the oracle sums in row order. For workloads whose
@@ -56,14 +67,32 @@ _OPEN = (int(Status.READY), int(Status.RUNNING), int(Status.BLOCKED))
 _STEAL_CHUNK_ROWS = 256
 
 
+class UnrecoverableShardError(RuntimeError):
+    """A failed shard primary cannot be promoted: it has no replicator, or
+    every replica in its group is dead too. The shard's committed state is
+    only reachable through a durable checkpoint at this point."""
+
+
 @dataclass
 class Shard:
-    """One primary: private queue (own store + txn log) + its replicator."""
+    """One primary: private queue (own store + txn log) + its replicator.
+
+    ``alive`` is the serving flag — a dead shard keeps its (frozen) store
+    and txn log in place as the WAL a promoted replica drains, but stops
+    taking claims, inserts, reaps, and steals until :meth:`ShardRouter.
+    promote_shard` swaps in the recovered WorkQueue. ``supervisor`` /
+    ``secondary`` are the per-shard expansion pair installed by
+    :meth:`ShardRouter.attach_supervision`; the secondary survives the
+    primary's death and is promoted (generation bumped) with the shard.
+    """
     index: int
     wq: WorkQueue
     replicator: Optional[object] = None
     steals_in: int = 0
     steals_out: int = 0
+    alive: bool = True
+    supervisor: Optional[object] = None
+    secondary: Optional[object] = None
 
 
 @dataclass
@@ -71,6 +100,10 @@ class StealStats:
     batches: int = 0
     tasks: int = 0
     wire_bytes: int = 0
+    # two-phase hand-off: chunks whose transport died before the thief's
+    # insert ack, rolled back on the victim as a logged re-insert
+    rollbacks: int = 0
+    rolled_back_tasks: int = 0
     per_shard_in: Dict[int, int] = field(default_factory=dict)
 
 
@@ -93,6 +126,14 @@ class ShardRouter:
         self.workers_per_shard = workers_per_shard
         self.num_global_workers = num_shards * workers_per_shard
         self._next_task_id = 0
+        # replication policy, kept so promote_shard / from_checkpoint can
+        # re-arm a shard's replicator identically after a failover/restore
+        self._capacity = capacity
+        self._replicate = replicate
+        self._replicas = replicas
+        self._sync_every = sync_every
+        self._transport = transport
+        self._device_claim = device_claim
         self.shards: List[Shard] = []
         for s in range(num_shards):
             wq = WorkQueue(num_workers=workers_per_shard, capacity=capacity,
@@ -141,6 +182,10 @@ class ShardRouter:
             cnt = int(m.sum())
             if not cnt:
                 continue
+            if not sh.alive:
+                raise RuntimeError(
+                    f"shard {s} is down (failed primary, not yet "
+                    f"promoted) — cannot insert {cnt} tasks it owns")
             sh.wq.add_tasks(
                 activity_id, cnt, status=status,
                 duration_est=(float(dur) if dur.ndim == 0 else dur[m]),
@@ -157,10 +202,13 @@ class ShardRouter:
 
         ``rows`` index into that shard's store; ``steal`` here is the
         INTRA-shard redistribution the WorkQueue already does — cross-shard
-        stealing is :meth:`rebalance`.
+        stealing is :meth:`rebalance`. Dead shards are skipped: the
+        survivors' claim loops never stall on a failed sibling.
         """
         out: Dict[int, Tuple[int, np.ndarray]] = {}
         for s, sh in enumerate(self.shards):
+            if not sh.alive:
+                continue
             got = sh.wq.claim_all(k=k, now=now, steal=steal)
             for lw, rows in got.items():
                 out[int(self.global_worker(s, lw))] = (s, rows)
@@ -195,9 +243,10 @@ class ShardRouter:
         other record). Reaped rows re-enter their owning shard's READY
         counts, which is exactly what :meth:`rebalance` keys drained-shard
         stealing off — dead-worker backlog becomes stealable cross-shard
-        with no extra wiring. Returns total rows reaped."""
+        with no extra wiring. Dead shards are skipped (their frozen state
+        is recovered wholesale at promote). Returns total rows reaped."""
         return sum(sh.wq.reap_expired(now=now, max_trials=max_trials)
-                   for sh in self.shards)
+                   for sh in self.shards if sh.alive)
 
     def autoscale_signals(self, *, now: float = 0.0) -> Dict[str, float]:
         """Union autoscaling signals: counts sum across shards; ages and
@@ -219,17 +268,24 @@ class ShardRouter:
         The victim's half is marked PRUNED in a logged transaction and the
         thief re-inserts the identical tasks (original ids, original inputs)
         as a NORMAL logged insert — both shards' replicas replay their own
-        log to bit-parity, no new record type needed. Returns tasks moved.
+        log to bit-parity, no new record type needed. The prune is only
+        PROVISIONAL until the thief's insert acks: if the transport dies
+        mid-steal the chunk is rolled back on the victim as a logged
+        re-insert (see :meth:`_pull`), so a wire failure can delay a
+        migration but never lose a task. Returns tasks moved.
 
         Migration resets a task's retry counter and submit time (only READY
         rows travel, so no start/end history is lost); the victim keeps a
         PRUNED tombstone row under the same id — :meth:`live_task_ids`
         resolves ids to their live copy.
         """
-        totals = [int(sh.wq.ready_counts().sum()) for sh in self.shards]
+        # dead shards neither steal nor get robbed: -1 keeps them out of
+        # both the drained test and the richest-victim argmax
+        totals = [int(sh.wq.ready_counts().sum()) if sh.alive else -1
+                  for sh in self.shards]
         moved = 0
         for s, sh in enumerate(self.shards):
-            if totals[s] > 0:
+            if not sh.alive or totals[s] > 0:
                 continue
             victim = int(np.argmax(totals))
             if victim == s or totals[victim] < 2:
@@ -264,30 +320,55 @@ class ShardRouter:
                 "dom": np.stack([vst.col(c)[chunk] for c in in_cols], 1)
                 if in_cols else None,
             }
-            # tombstone the victim's copy FIRST (logged), then ship: a
-            # task is never claimable on two shards at once
+            # phase 1 — tombstone the victim's copy (logged) BEFORE the
+            # ship, so a task is never claimable on two shards at once.
+            # The tombstone is provisional: it only sticks once phase 2
+            # (the thief's insert) has the payload in hand.
             victim.wq.prune(chunk)
-            buf = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
-            self._steal_tx.send_bytes(buf)
-            wire = self._steal_rx.recv_bytes()
+            try:
+                buf = pickle.dumps(payload,
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+                self._steal_tx.send_bytes(buf)
+                wire = self._steal_rx.recv_bytes()
+            except (OSError, EOFError):
+                # the wire died before the thief acked this chunk: roll
+                # the provisional prune back as a NORMAL logged re-insert
+                # (same ids, same inputs), so the victim's replicas replay
+                # prune+insert to the same live rows and the chunk stays
+                # claimable where it was. Remaining chunks are abandoned —
+                # the transport is gone.
+                self._reinsert(victim, payload, now)
+                self.steal_stats.rollbacks += 1
+                self.steal_stats.rolled_back_tasks += len(chunk)
+                break
             self.steal_stats.wire_bytes += len(wire)
             p = pickle.loads(wire)
-            for a in np.unique(p["act"]):
-                m = p["act"] == a
-                thief.wq.add_tasks(
-                    int(a), int(m.sum()),
-                    duration_est=p["dur"][m],
-                    domain_in=None if p["dom"] is None else p["dom"][m],
-                    parent_task=p["parent"][m],
-                    now=now, task_ids=p["ids"][m])
+            # phase 2 — the thief's insert is the ack that commits the move
+            self._reinsert(thief, p, now)
             moved += len(chunk)
-        victim.steals_out += 1
-        thief.steals_in += 1
-        self.steal_stats.batches += 1
-        self.steal_stats.tasks += moved
-        self.steal_stats.per_shard_in[thief.index] = \
-            self.steal_stats.per_shard_in.get(thief.index, 0) + moved
+        if moved:
+            victim.steals_out += 1
+            thief.steals_in += 1
+            self.steal_stats.batches += 1
+            self.steal_stats.tasks += moved
+            self.steal_stats.per_shard_in[thief.index] = \
+                self.steal_stats.per_shard_in.get(thief.index, 0) + moved
         return moved
+
+    @staticmethod
+    def _reinsert(shard: Shard, payload: Dict, now: float) -> None:
+        """Materialize a steal payload on ``shard`` as normal logged
+        inserts (original ids preserved) — the thief's commit on success,
+        the victim's rollback on a dead transport."""
+        for a in np.unique(payload["act"]):
+            m = payload["act"] == a
+            shard.wq.add_tasks(
+                int(a), int(m.sum()),
+                duration_est=payload["dur"][m],
+                domain_in=None if payload["dom"] is None
+                else payload["dom"][m],
+                parent_task=payload["parent"][m],
+                now=now, task_ids=payload["ids"][m])
 
     # -------------------------------------------------- snapshots / replicas
     def version_vector(self) -> Tuple[int, ...]:
@@ -313,12 +394,14 @@ class ShardRouter:
 
     def sync_replicas(self) -> None:
         for sh in self.shards:
-            if sh.replicator is not None:
+            if sh.alive and sh.replicator is not None:
                 sh.replicator.sync()
 
     def compact(self) -> int:
-        """Per-shard log compaction (each shard's consumer floor governs)."""
-        return sum(sh.wq.compact_log() for sh in self.shards)
+        """Per-shard log compaction (each shard's consumer floor governs).
+        A dead shard's log is its WAL — frozen until promote drains it —
+        so compaction only runs on live shards."""
+        return sum(sh.wq.compact_log() for sh in self.shards if sh.alive)
 
     def consumer_lags(self) -> Dict[str, int]:
         """Union of per-shard consumer lags, keys namespaced by shard."""
@@ -327,6 +410,152 @@ class ShardRouter:
             for name, lag in sh.wq.consumer_lags().items():
                 out[f"shard{s}:{name}"] = lag
         return out
+
+    # ------------------------------------------------- supervision / failover
+    def attach_supervision(self, workflow, *, fanout: int = 1) -> None:
+        """Install a Supervisor + SecondarySupervisor pair on every shard,
+        so expansion state survives a primary promote (the ``expanded``
+        column rides the shard store, hence the replica, hence the
+        promoted WorkQueue — ``SecondarySupervisor.promote(wq)`` is exact).
+
+        Call :meth:`sync_secondaries` on the driving cadence so the shadow
+        cursors track the primaries. Cross-shard caveat: ``Supervisor``
+        allocates ids from the SHARD-LOCAL counter, which breaks global
+        hash routing for seeding and for multi-activity expansion — seed
+        through :meth:`add_tasks` and keep sharded workflows
+        single-activity (:meth:`expand_all` enforces this; cross-shard
+        child routing is a documented ROADMAP residual)."""
+        from repro.core.supervisor import SecondarySupervisor, Supervisor
+        for sh in self.shards:
+            sh.supervisor = Supervisor(sh.wq, workflow, fanout=fanout)
+            sh.secondary = SecondarySupervisor(sh.supervisor)
+
+    def sync_secondaries(self) -> None:
+        """Refresh every live shard's shadow supervisor state."""
+        for sh in self.shards:
+            if sh.alive and sh.secondary is not None:
+                sh.secondary.sync()
+
+    def expand_all(self, *, now: float = 0.0) -> int:
+        """Run dependency expansion on every live shard's supervisor."""
+        total = 0
+        for sh in self.shards:
+            if not sh.alive or sh.supervisor is None:
+                continue
+            if sh.supervisor.workflow.num_activities > 1:
+                raise ValueError(
+                    "per-shard expansion requires a single-activity "
+                    "workflow: Supervisor.expand allocates child ids from "
+                    "the shard-local counter, which breaks global hash "
+                    "routing — route children through ShardRouter."
+                    "add_tasks instead")
+            total += sh.supervisor.expand(now=now)
+        return total
+
+    def fail_shard(self, shard: int) -> None:
+        """Simulate shard ``shard``'s primary dying: the node stops serving
+        claims, inserts, reaps, steals, and replica syncs. Its in-memory
+        store is considered LOST; what survives is the txn log tail (the
+        node's WAL) and the replica state — exactly what
+        :meth:`promote_shard` recovers from. Its supervisor dies with it
+        (the secondary shadow survives). Idempotent; the other shards'
+        claim loops are untouched."""
+        sh = self.shards[shard]
+        sh.alive = False
+        if sh.supervisor is not None:
+            sh.supervisor.crash()
+
+    def promote_shard(self, shard: int) -> WorkQueue:
+        """Fail the shard over onto its most-caught-up replica: elect via
+        the existing ``Replicator.promote()`` (which drains the surviving
+        log tail, so not one committed transaction is lost, and requeues
+        RUNNING rows — their workers died with the primary), rebuild the
+        shard's WorkQueue around the promoted store, re-register a fresh
+        replicator from the router's replication policy, and promote the
+        shard's SecondarySupervisor (generation bumped) onto the new
+        queue. Returns the promoted WorkQueue; the shard is serving again
+        when this returns.
+
+        Raises :class:`UnrecoverableShardError` when there is nothing to
+        promote — no replicator, or every replica in the group is dead
+        (``AllReplicasDeadError``); a durable checkpoint is the only way
+        back at that point."""
+        from repro.core.replication import AllReplicasDeadError
+        sh = self.shards[shard]
+        if sh.replicator is None:
+            raise UnrecoverableShardError(
+                f"shard {shard} has no replicator to promote "
+                "(construct the router with replicate=...)")
+        try:
+            new_wq = sh.replicator.promote()
+        except AllReplicasDeadError as e:
+            raise UnrecoverableShardError(
+                f"shard {shard} lost its primary and every replica — "
+                f"restore from a checkpoint: {e}") from e
+        sh.replicator = None          # promote() already closed it
+        self._adopt(sh, new_wq)
+        return new_wq
+
+    def _adopt(self, sh: Shard, wq: WorkQueue) -> None:
+        """Swap a shard's primary for a promoted/restored WorkQueue:
+        re-arm its replicator from the router's replication policy and
+        promote its secondary supervisor onto the new queue."""
+        if sh.replicator is not None:
+            sh.replicator.close()
+        sh.wq = wq
+        sh.replicator = None
+        if self._replicate is not None:
+            from repro.core.replication import make_replicator
+            sh.replicator = make_replicator(
+                wq, self._replicate, replicas=self._replicas,
+                sync_every=self._sync_every, transport=self._transport,
+                account_encoded=False)
+        sh.alive = True
+        if sh.secondary is not None:
+            from repro.core.supervisor import SecondarySupervisor
+            sh.supervisor = sh.secondary.promote(wq)
+            sh.secondary = SecondarySupervisor(sh.supervisor)
+
+    @classmethod
+    def from_checkpoint(cls, shard_states, *,
+                        replicate: Optional[str] = None,
+                        replicas: int = 1,
+                        sync_every: int = 64,
+                        transport: Optional[str] = None,
+                        device_claim: Optional[bool] = None,
+                        capacity: int = 1 << 16) -> "ShardRouter":
+        """Rebuild a router from per-shard restored state, in shard order:
+        ``shard_states`` is one ``(store, meta)`` pair per shard as cut by
+        ``Checkpointer.save`` (meta carries ``num_workers`` / ``version`` /
+        ``log_len``). Each shard's WorkQueue resumes with its log offset
+        and compaction horizon pinned at the checkpoint's version vector,
+        and replicators are re-armed from the given policy — the restored
+        run's scatter-gather sweeps are bit-identical to the pre-crash cut.
+        """
+        if not shard_states:
+            raise ValueError("from_checkpoint needs at least one shard")
+        wps = int(shard_states[0][1]["num_workers"])
+        r = cls(len(shard_states), wps, capacity=capacity,
+                replicate=None, device_claim=device_claim)
+        r._replicate = replicate
+        r._replicas = replicas
+        r._sync_every = sync_every
+        r._transport = transport
+        next_id = 0
+        for sh, (store, meta) in zip(r.shards, shard_states):
+            if int(meta["num_workers"]) != wps:
+                raise ValueError("shards disagree on workers_per_shard")
+            wq = WorkQueue(wps, store=store, device_claim=device_claim)
+            used = store.col("status") != int(Status.EMPTY)
+            if used.any():
+                mx = int(store.col("task_id")[used].max())
+                wq._next_task_id = mx + 1
+                next_id = max(next_id, mx + 1)
+            wq.log.base = int(meta["log_len"])
+            wq.log.horizon_version = int(meta["version"])
+            r._adopt(sh, wq)
+        r._next_task_id = next_id
+        return r
 
     # ------------------------------------------------ scatter-gather sweep
     def run_all(self, now: float,

@@ -650,7 +650,14 @@ class WorkQueue:
         no supervisor round-trip, and the record replays on replicas and
         per-shard stores through the ordinary cold log path. NaN
         ``expires_at`` (no lease taken) never matches the mask, so rows
-        claimed by legacy paths are left alone. Returns rows reaped.
+        claimed by legacy paths are left alone.
+
+        Requeued rows are rehashed onto the CURRENT partition map
+        (``assign_workers`` at today's ``num_workers``): the dead worker's
+        partition may no longer exist after a :meth:`resize`, and a stale
+        ``worker_id`` would strand the row outside every live scan range.
+        The assignment rides the log record (``new_worker``) so replicas
+        land the rows identically. Returns rows reaped.
         """
         with self.store.txn():
             st = self.store.col("status")
@@ -665,18 +672,21 @@ class WorkQueue:
             self._check_transition(retry, Status.READY)
             self._check_transition(dead, Status.FAILED)
             self.store.update(idx, fail_trials=trials)
+            new_worker = None
             if len(retry):
+                new_worker = assign_workers(
+                    self.store.col("task_id")[retry], self.num_workers)
                 self.store.update(retry, status=int(Status.READY),
                                   claimed_at=np.nan, heartbeat_at=np.nan,
-                                  expires_at=np.nan)
-                self._lower_cursors(retry,
-                                    self.store.col("worker_id")[retry])
-                self._ready_delta(self.store.col("worker_id")[retry], +1)
+                                  expires_at=np.nan, worker_id=new_worker)
+                self._lower_cursors(retry, new_worker)
+                self._ready_delta(new_worker, +1)
             if len(dead):
                 self.store.update(dead, status=int(Status.FAILED),
                                   end_time=now)
             self._append_log("reap", {"rows": idx, "retry": retry,
                                       "dead": dead, "trials": trials,
+                                      "new_worker": new_worker,
                                       "now": now})
             return len(idx)
 

@@ -68,22 +68,27 @@ class TrainExecutor:
         if shards > 1 and num_workers % shards:
             raise ValueError(f"num_workers={num_workers} must divide "
                              f"evenly across shards={shards}")
-        if shards > 1 and checkpointer is not None:
-            raise ValueError("checkpointing requires a single-shard "
-                             "executor (one durable store)")
+        self.workflow = WorkflowConfig(name="train-sweep",
+                                       activities=("train_step",))
         self.router: Optional[ShardRouter] = None
         if shards > 1:
+            # checkpointing a sharded run is supported since PR 9: the
+            # Checkpointer cuts one store-lock-consistent snapshot per
+            # shard plus the version vector into a single atomic manifest
             self.router = ShardRouter(
                 shards, num_workers // shards,
                 replicate=None if analyst == "snapshot" else analyst,
                 replicas=replicas, lease_s=lease_s)
+            # per-shard supervision: each Shard gets a Supervisor +
+            # SecondarySupervisor so expansion state survives a
+            # promote_shard (the single-activity training workflow keeps
+            # shard-local id allocation safe)
+            self.router.attach_supervision(self.workflow)
             self.wq = self.router.shards[0].wq   # compat: a primary handle
             self.supervisor = self.secondary = None
             self.steering = None
         else:
             self.wq = WorkQueue(num_workers=num_workers, lease_s=lease_s)
-        self.workflow = WorkflowConfig(name="train-sweep",
-                                       activities=("train_step",))
         if self.router is None:
             self.supervisor = Supervisor(self.wq, self.workflow)
             self.secondary = SecondarySupervisor(self.supervisor)
@@ -179,7 +184,12 @@ class TrainExecutor:
                 metrics_out = rec
         if self.checkpointer and self.checkpoint_every \
                 and self.step and self.step % self.checkpoint_every == 0:
-            self.checkpointer.save(self.step, self.state, self.wq)
+            if self.router is not None:
+                self.router.sync_secondaries()
+                self.checkpointer.save(self.step, self.state,
+                                       router=self.router)
+            else:
+                self.checkpointer.save(self.step, self.state, self.wq)
             self._maybe_compact_log()
         if self._steer_future is not None and self._steer_future.done():
             self.last_steering = self._steer_future.result()
@@ -240,6 +250,11 @@ class TrainExecutor:
         (base snapshot = the checkpoint). Without a checkpoint consumer the
         log is left whole — genesis time-travel stays available and memory
         is bounded by the caller's own `wq.compact_log()` policy instead."""
+        if self.router is not None:
+            for sh in self.router.shards:
+                if sh.alive and sh.wq.log.has_consumer("checkpointer"):
+                    sh.wq.compact_log()
+            return
         if self.wq.log.has_consumer("checkpointer"):
             self.wq.compact_log()
 
@@ -297,13 +312,42 @@ class TrainExecutor:
             return sh.wq.requeue_worker(worker_id % L)
         return self.wq.requeue_worker(worker_id)
 
-    def promote_secondary(self) -> None:
-        if self.supervisor is None:
-            raise ValueError("sharded executors run supervisor-less "
-                             "(single-activity workflow per shard)")
+    def promote_secondary(self, shard: Optional[int] = None) -> None:
+        """Fail the supervisor over to its shadow. Sharded runs promote
+        per shard (``shard=None`` promotes every shard's secondary) — each
+        promoted supervisor gets a bumped generation and resumes expansion
+        exactly via the store's ``expanded`` column."""
+        if self.router is not None:
+            shards = (range(self.router.num_shards) if shard is None
+                      else [shard])
+            for s in shards:
+                sh = self.router.shards[s]
+                if sh.secondary is None:
+                    raise ValueError(f"shard {s} has no supervision "
+                                     "attached")
+                sh.supervisor.crash()
+                sh.supervisor = sh.secondary.promote()
+                sh.secondary = SecondarySupervisor(sh.supervisor)
+            return
         self.supervisor.crash()
         self.supervisor = self.secondary.promote()
         self.secondary = SecondarySupervisor(self.supervisor)
+
+    def fail_shard(self, shard: int) -> None:
+        """Kill a shard primary mid-run (sharded executors only)."""
+        if self.router is None:
+            raise ValueError("fail_shard requires a sharded executor")
+        self.router.fail_shard(shard)
+
+    def promote_shard(self, shard: int):
+        """Fail a dead shard over onto its most-caught-up replica; the
+        compat ``self.wq`` handle tracks shard 0's promoted queue."""
+        if self.router is None:
+            raise ValueError("promote_shard requires a sharded executor")
+        wq = self.router.promote_shard(shard)
+        if shard == 0:
+            self.wq = wq
+        return wq
 
 
 class ServeExecutor:
