@@ -307,9 +307,16 @@ def exp_sharded(scale: float = 1.0) -> List[Dict]:
     cross-shard stealing moves a non-empty batch, conserves the live
     task-id multiset, leaves the drained shard claimable, and keeps every
     shard's replica at bit-parity (the steal is ordinary logged traffic).
-    The weak-scaling ``scaleup`` number itself is gated in
-    ``scripts/bench_trajectory.py`` (``--min-sharded-scaleup``), not here —
-    the smoke scale is too small for a stable wall-clock ratio.
+    The steering fan-out phase (d) scatters the FULL Q1-Q7 sweep through
+    per-shard replica PROCESSES (``sweep_partials`` remotely,
+    ``merge_partials`` on the router) and HARD-FAILS unless the remote
+    merged result is bit-identical to the local ``run_all`` and to the
+    single-primary oracle at the same pinned version vector (across a
+    per-shard log truncate), and the concurrent scatter equals the serial
+    loop. The weak-scaling ``scaleup`` and ``steer_fanout_speedup``
+    numbers themselves are gated in ``scripts/bench_trajectory.py``
+    (``--min-sharded-scaleup`` / ``--min-steer-fanout-speedup``), not
+    here — the smoke scale is too small for stable wall-clock ratios.
     """
     n = max(int(4_000 * scale), 200)
     thr = max(int(20_000 * scale), 2_000)
@@ -345,6 +352,21 @@ def exp_sharded(scale: float = 1.0) -> List[Dict]:
         raise AssertionError(
             "a shard replica diverged after the steal — the victim prune "
             "or thief insert is not replaying as ordinary logged traffic")
+    if not (r["steer_remote_sweep_equal"] and r["steer_remote_matches_local"]):
+        raise AssertionError(
+            f"remote merged sweep diverged at version vector "
+            f"{r['steer_version_vector']}: vs_oracle="
+            f"{r['steer_remote_sweep_equal']} "
+            f"vs_local_run_all={r['steer_remote_matches_local']} — the "
+            "shipped partial aggregation is not bit-identical")
+    if not r["steer_scatter_equal"]:
+        raise AssertionError(
+            "concurrent remote scatter returned a different merged sweep "
+            "than the serial shard loop")
+    if not r["steer_log_truncated"]:
+        raise AssertionError(
+            "the steering fan-out drill never truncated a shard log — the "
+            "remote parity check must cross a per-shard compaction")
     return [{"exp": "e_sharded", **{
         k: (round(v, 5) if isinstance(v, float) else v)
         for k, v in r.items()}}]

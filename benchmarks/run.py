@@ -46,7 +46,10 @@ DESCRIPTIONS = {
                  "parity vs a single-primary oracle, cross-shard steal "
                  "conservation + per-shard replica parity (hard-checked), "
                  "weak-scaling claim throughput (the "
-                 "--min-sharded-scaleup gate)",
+                 "--min-sharded-scaleup gate), concurrent remote steering "
+                 "scatter with per-shard partial sweeps in replica "
+                 "processes (bit-checked; the --min-steer-fanout-speedup "
+                 "gate)",
     "e_chaos": "kill-drill: >=2 workers go silent + replica process "
                "killed mid-run (one batch DURING a pool resize); lease "
                "reap + steal + snapshot respawn must conserve the "
@@ -186,7 +189,9 @@ def _headline(name: str, rows) -> str:
             return (f"scaleup={r['scaleup']}x@{r['shards']}shards;"
                     f"sweep_equal={r['sweep_equal']};"
                     f"steal_moved={r['steal_moved']};"
-                    f"steal_conserved={r['steal_conserved']}")
+                    f"steal_conserved={r['steal_conserved']};"
+                    f"steer_fanout={r['steer_fanout_speedup']}x;"
+                    f"steer_remote_parity={r['steer_remote_sweep_equal']}")
         if name == "e_chaos":
             r = rows[0]
             return (f"recovery_s={r['recovery_s']};"

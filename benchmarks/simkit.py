@@ -695,7 +695,7 @@ def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
                 *, activities: int = 3, sync_every: int = 64,
                 thr_tasks: Optional[int] = None, thr_k: int = 4,
                 repeats: int = 2, seed: int = 0) -> Dict:
-    """Sharded multi-primary drill (ShardRouter), three phases:
+    """Sharded multi-primary drill (ShardRouter), four phases:
 
     **A. Oracle parity.** The identical deterministic workload (inserts
     with provenance chains, claims, retries, finishes, a Q8 patch, a
@@ -726,6 +726,23 @@ def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
     accounting the rest of simkit uses. ``scaleup`` = aggregate sharded
     throughput / single-primary throughput (the ``--min-sharded-scaleup``
     CI gate); best-of-``repeats`` per arm.
+
+    **D. Parallel steering plane (remote scatter).** A fresh router with
+    SHIPPED replicas (one OS process per shard; pipe transport by
+    default, TCP under ``REPRO_WIRE_TRANSPORT=tcp``) runs a
+    provenance-chained workload mirrored on a single-primary oracle
+    across a mid-drill log truncation, then bulk-loads filler rows so
+    per-shard sweeps carry real reduction work. The remote merged Q1-Q7
+    sweep (``sweep_partials`` inside each replica process,
+    ``merge_partials`` on the router) is hard-checked bit-identical to
+    the local ``run_all`` AND to the oracle at the same pinned version
+    vector, concurrent scatter == serial loop, and the serial-vs-
+    concurrent scatter walls are timed under the paper's modeled
+    per-shard data-node RPC latency (``steer_rpc_delay_s``, slept inside
+    each replica process — the ``run_baseline`` ``access_latency_s``
+    regime) — ``steer_fanout_speedup`` feeds the
+    ``--min-steer-fanout-speedup`` CI gate, with per-shard walls and the
+    straggler spread recorded alongside.
     """
     from repro.core.sharding_router import ShardRouter
 
@@ -924,6 +941,141 @@ def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
         if tS > thr_S:
             thr_S, wall_S = tS, wS
 
+    # ------------------- phase D: parallel steering plane (remote scatter)
+    # The paper's analyst plane is distributed: every shard is a data NODE
+    # whose replica lives in its own OS process. Rebuild the router with
+    # SHIPPED replicas (pipe transport by default, TCP under
+    # REPRO_WIRE_TRANSPORT=tcp), drive a provenance-chained workload
+    # mirrored on a single-primary oracle ACROSS a mid-drill log
+    # truncation, then bulk-load filler rows so the per-shard sweeps carry
+    # real reduction work. Hard-checked: the remote merged Q1-Q7 sweep
+    # (sweep_partials inside each replica process, merge_partials here) is
+    # bit-identical to the local run_all AND to the oracle at the same
+    # version vector, and the concurrent scatter equals the serial loop.
+    # Timed: serial-vs-concurrent scatter walls under the paper's modeled
+    # per-shard data-node RPC latency (steer_rpc_delay_s, slept inside
+    # each replica process — run_baseline's access_latency_s regime:
+    # remote shards answer over a NIC, and only a concurrent scatter can
+    # overlap those round trips). Best-of-``repeats``; per-shard walls and
+    # the straggler spread ride along.
+    steer_fill = max(2 * T, 4 * W)
+    steer_rtt_s = 0.01
+    n_chain = activities * per_act
+    router2 = ShardRouter(
+        S, L, capacity=max(1 << 14, 2 * (n_chain + steer_fill) // S),
+        replicate="shipped", sync_every=sync_every)
+    oracle2 = WorkQueue(num_workers=W,
+                        capacity=max(1 << 14, 2 * (n_chain + steer_fill)))
+    osteer2 = SteeringEngine(oracle2)
+    prev = None
+    for a in range(activities):
+        ids = np.arange(a * per_act, (a + 1) * per_act, dtype=np.int64)
+        kw = dict(domain_in=dom_in(ids), duration_est=1.0, now=0.0)
+        if prev is not None:
+            kw["parent_task"] = prev
+        router2.add_tasks(a, per_act, **kw)
+        oracle2.add_tasks(a, per_act, **kw)
+        prev = ids
+
+    def shard_rows2(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        out = []
+        owner = router2.shard_of(ids)
+        for s in range(S):
+            m = owner == s
+            if not m.any():
+                continue
+            tid = router2.shards[s].wq.store.col("task_id")
+            pos = np.searchsorted(tid, ids[m])
+            assert np.array_equal(tid[pos], ids[m])
+            out.append((s, pos))
+        return out
+
+    clock2 = 1.0
+    for rnd in range(12):
+        rc = router2.claim_all(k=2, now=clock2, steal=False)
+        oc = oracle2.claim_all(k=2, now=clock2, steal=False)
+        o_ids = {g: np.sort(oracle2.store.col("task_id")[rows])
+                 for g, rows in oc.items() if len(rows)}
+        del rc
+        if not o_ids:
+            break
+        all_ids = np.sort(np.concatenate(list(o_ids.values())))
+        fail_ids = all_ids[::7] if rnd % 3 == 2 else all_ids[:0]
+        fin = np.setdiff1d(all_ids, fail_ids)
+        fa, fb = fin[fin % 2 == 0], fin[fin % 2 == 1]
+        if len(fail_ids):
+            oracle2.fail(fail_ids, now=clock2 + 0.25)
+            for s, pos in shard_rows2(fail_ids):
+                router2.shards[s].wq.fail(pos, now=clock2 + 0.25)
+        for ids_, dt in ((fa, 1.0), (fb, 1.5)):
+            if not len(ids_):
+                continue
+            oracle2.finish(ids_, now=clock2 + dt, domain_out=dom_out(ids_))
+            for s, pos in shard_rows2(ids_):
+                tid = router2.shards[s].wq.store.col("task_id")[pos]
+                router2.shards[s].wq.finish(pos, now=clock2 + dt,
+                                            domain_out=dom_out(tid))
+        if rnd == 3:
+            osteer2.q8_patch_ready(0, "in0", 9.5,
+                                   predicate=lambda v: v > 0.8)
+            for sh in router2.shards:
+                SteeringEngine(sh.wq).q8_patch_ready(
+                    0, "in0", 9.5, predicate=lambda v: v > 0.8)
+        if rnd == 5:
+            osteer2.prune("in1", 0.0, 0.02)
+            for sh in router2.shards:
+                SteeringEngine(sh.wq).prune("in1", 0.0, 0.02)
+        router2.sync_replicas()       # acks advance the consumer floor...
+        router2.compact()             # ...so the catch-up crosses truncates
+        clock2 += 2.0
+    steer_log_truncated = all(sh.wq.log.base > 0 for sh in router2.shards)
+
+    fill_ids = np.arange(n_chain, n_chain + steer_fill, dtype=np.int64)
+    router2.add_tasks(0, steer_fill, domain_in=dom_in(fill_ids),
+                      duration_est=1.0, now=clock2)
+    oracle2.add_tasks(0, steer_fill, domain_in=dom_in(fill_ids),
+                      duration_est=1.0, now=clock2)
+
+    vec2 = router2.sync_replicas()
+    views2 = router2.snapshot_vector()
+    oview2 = oracle2.store.snapshot_view()
+    t0 = time.perf_counter()
+    res_conc = router2.remote_sweep(clock2, versions=vec2, sync=False)
+    steer_conc_raw = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_serial = router2.remote_sweep(clock2, versions=vec2, sync=False,
+                                      concurrent_scatter=False)
+    steer_serial_raw = time.perf_counter() - t0
+    local2 = router2.run_all(clock2, views=views2)
+    onorm2 = ShardRouter.oracle_normalize(
+        osteer2.run_all(clock2, view=oview2), oview2)
+    steer_remote_matches_local = (_sweep_fingerprint(res_conc)
+                                  == _sweep_fingerprint(local2))
+    steer_remote_sweep_equal = (
+        _sweep_fingerprint(ShardRouter.comparable(res_conc))
+        == _sweep_fingerprint(onorm2))
+    steer_scatter_equal = (_sweep_fingerprint(res_conc)
+                           == _sweep_fingerprint(res_serial))
+
+    rtt = [steer_rtt_s] * S
+    steer_conc = steer_serial = float("inf")
+    steer_walls: List[float] = []
+    steer_spread = 0.0
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        router2.remote_sweep(clock2, versions=vec2, sync=False,
+                             shard_delay_s=rtt)
+        wc = time.perf_counter() - t0
+        if wc < steer_conc:
+            steer_conc = wc
+            steer_walls = [round(w, 5) for w in router2.last_scatter_wall_s]
+            steer_spread = router2.scatter_spread_s()
+        t0 = time.perf_counter()
+        router2.remote_sweep(clock2, versions=vec2, sync=False,
+                             concurrent_scatter=False, shard_delay_s=rtt)
+        steer_serial = min(steer_serial, time.perf_counter() - t0)
+    router2.close()
+
     return {
         "shards": S, "workers_per_shard": L, "global_workers": W,
         "parity_rounds": rounds,
@@ -945,6 +1097,21 @@ def run_sharded(num_shards: int, workers_per_shard: int, num_tasks: int,
         "claim_wall_single_s": round(wall_1, 4),
         "claim_wall_sharded_max_s": round(wall_S, 4),
         "scaleup": round(thr_S / thr_1, 2) if thr_1 else 0.0,
+        "steer_rows": int(n_chain + steer_fill),
+        "steer_rpc_delay_s": steer_rtt_s,
+        "steer_serial_wall_s": round(steer_serial, 5),
+        "steer_concurrent_wall_s": round(steer_conc, 5),
+        "steer_fanout_speedup": round(steer_serial / steer_conc, 2)
+        if steer_conc else 0.0,
+        "steer_shard_walls_s": steer_walls,
+        "steer_spread_s": round(steer_spread, 5),
+        "steer_serial_raw_wall_s": round(steer_serial_raw, 5),
+        "steer_concurrent_raw_wall_s": round(steer_conc_raw, 5),
+        "steer_remote_sweep_equal": bool(steer_remote_sweep_equal),
+        "steer_remote_matches_local": bool(steer_remote_matches_local),
+        "steer_scatter_equal": bool(steer_scatter_equal),
+        "steer_log_truncated": bool(steer_log_truncated),
+        "steer_version_vector": [int(v) for v in vec2],
     }
 
 

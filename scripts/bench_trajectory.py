@@ -32,6 +32,15 @@ the enforced floors regresses:
   single-primary oracle at the same version vector and cross-shard work
   stealing conserving the live task-id multiset (both hard-checked inside
   the experiment)
+- parallel steering plane (e_sharded phase D): the 4-shard remote scatter
+  ships per-shard Q1-Q7 partial aggregates out of the replica PROCESSES
+  (sweep_partials remotely, merge_partials on the router), hard-checked
+  bit-identical to the local run_all and the single-primary oracle at the
+  same pinned version vector (across a per-shard log truncate); under the
+  paper's modeled per-shard data-node RPC latency the CONCURRENT scatter
+  wall must beat the serial shard loop by --min-steer-fanout-speedup
+  (>=2x at 4 shards) and stay under --max-steer-wall-ms, with per-shard
+  walls and the straggler spread recorded
 - chaos kill-drill (e_chaos): >=2 workers silently killed + the shipped
   replica process killed mid-run; lease expiry + the vectorized reaper +
   work stealing + snapshot respawn must conserve the live task-id set,
@@ -164,6 +173,19 @@ def measure(scale_claim: float, scale_replica: float) -> dict:
                                     and sharded["steal_moved"] > 0
                                     and sharded["steal_replica_parity"]),
         "sharded_steal_moved": sharded["steal_moved"],
+        "steer_fanout_speedup": sharded["steer_fanout_speedup"],
+        "steer_wall_ms": round(sharded["steer_concurrent_wall_s"] * 1e3, 2),
+        "steer_serial_wall_ms": round(sharded["steer_serial_wall_s"] * 1e3,
+                                      2),
+        "steer_shard_walls_ms": [round(w * 1e3, 2)
+                                 for w in sharded["steer_shard_walls_s"]],
+        "steer_spread_ms": round(sharded["steer_spread_s"] * 1e3, 2),
+        "steer_rpc_delay_ms": round(sharded["steer_rpc_delay_s"] * 1e3, 2),
+        "steer_rows": sharded["steer_rows"],
+        "steer_remote_parity": (sharded["steer_remote_sweep_equal"]
+                                and sharded["steer_remote_matches_local"]
+                                and sharded["steer_scatter_equal"]
+                                and sharded["steer_log_truncated"]),
         "chaos_recovery_s": max(chaos["recovery_s"],
                                 chaos["sharded_recovery_s"]),
         "chaos_conserved": (chaos["conserved"]
@@ -252,6 +274,16 @@ def main() -> None:
                     help="floor for e_sharded's weak-scaling aggregate "
                          "claim throughput at 4 shards vs 1 (0 records "
                          "without enforcing)")
+    ap.add_argument("--min-steer-fanout-speedup", type=float, default=2.0,
+                    help="floor for e_sharded's concurrent-vs-serial "
+                         "remote steering scatter wall ratio at 4 shards "
+                         "under the modeled per-shard RPC latency "
+                         "(0 records without enforcing)")
+    ap.add_argument("--max-steer-wall-ms", type=float, default=50.0,
+                    help="ceiling for the concurrent remote steering "
+                         "scatter wall — it must track the slowest shard "
+                         "plus one modeled RPC round trip, not the serial "
+                         "shard sum (0 records without enforcing)")
     ap.add_argument("--max-recovery-s", type=float, default=60.0,
                     help="ceiling for the chaos drill's kill-to-drained "
                          "wall (worst of the single-primary and sharded "
@@ -289,6 +321,7 @@ def main() -> None:
               f" fanout_lag_ms={pt.get('fanout_lag_ms')}"
               f" compression={pt.get('compression_ratio')}"
               f" sharded_scaleup={pt.get('sharded_scaleup')}"
+              f" steer_fanout={pt.get('steer_fanout_speedup')}"
               f" chaos_recovery_s={pt.get('chaos_recovery_s')}"
               f" shard_failover_s={pt.get('shard_failover_wall_s')}")
 
@@ -350,6 +383,26 @@ def main() -> None:
     if not snap["sharded_steal_conserved"]:
         failures.append("cross-shard work stealing lost or duplicated "
                         "tasks (or broke replica parity)")
+    if not snap["steer_remote_parity"]:
+        failures.append("remote merged steering sweep lost bit-parity "
+                        "with the local run_all / single-primary oracle "
+                        "(or never crossed a per-shard truncate)")
+    if args.min_steer_fanout_speedup > 0 \
+            and snap["steer_fanout_speedup"] < args.min_steer_fanout_speedup:
+        failures.append(
+            f"concurrent steering scatter speedup "
+            f"{snap['steer_fanout_speedup']}x at "
+            f"{snap['sharded_shards']} shards is below the "
+            f"{args.min_steer_fanout_speedup}x gate (serial "
+            f"{snap['steer_serial_wall_ms']}ms vs concurrent "
+            f"{snap['steer_wall_ms']}ms)")
+    if args.max_steer_wall_ms > 0 \
+            and snap["steer_wall_ms"] > args.max_steer_wall_ms:
+        failures.append(
+            f"concurrent steering scatter wall {snap['steer_wall_ms']}ms "
+            f"exceeds the {args.max_steer_wall_ms}ms gate (per-shard "
+            f"walls {snap['steer_shard_walls_ms']}ms, spread "
+            f"{snap['steer_spread_ms']}ms)")
     if not (snap["chaos_conserved"] and snap["chaos_drained"]
             and snap["chaos_replica_parity"]):
         failures.append(
@@ -406,6 +459,12 @@ def main() -> None:
           f"sharded_scaleup={snap['sharded_scaleup']}x@"
           f"{snap['sharded_shards']}shards "
           f"(gate {args.min_sharded_scaleup}x), "
+          f"steer_fanout={snap['steer_fanout_speedup']}x "
+          f"(gate {args.min_steer_fanout_speedup}x, concurrent "
+          f"{snap['steer_wall_ms']}ms vs serial "
+          f"{snap['steer_serial_wall_ms']}ms, "
+          f"gate {args.max_steer_wall_ms}ms, spread "
+          f"{snap['steer_spread_ms']}ms), "
           f"chaos_recovery_s={snap['chaos_recovery_s']} "
           f"(gate {args.max_recovery_s}s, "
           f"{snap['chaos_workers_killed']} workers + "

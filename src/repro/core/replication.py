@@ -697,11 +697,11 @@ ReplicaSet = DeltaReplicator
 # serves over a multiprocessing pipe or a TCP socket (another host)
 # unchanged.
 #   parent -> child:  I init (snapshot + hello features)   D delta frames
-#                     S sweep request   X state fetch   P promote/recover
-#                     Q quit
+#                     S sweep request   G partial-sweep request
+#                     X state fetch   P promote/recover   Q quit
 #   child -> parent:  A ack(offset, version)[+ accepted features on init]
-#                     R sweep result   Y state   W recovered snapshot
-#                     E error (traceback)
+#                     R sweep result   H sweep partials (columnar)
+#                     Y state   W recovered snapshot   E error (traceback)
 _PIN_NONE = -(1 << 62)
 _DHDR = struct.Struct("<qqq")            # lo offset, hi offset, version pin
 _ACK = struct.Struct("<qq")              # absolute offset, store version
@@ -787,6 +787,22 @@ def _shipped_replica_main(spec) -> None:
                 res = engine.run_all(now, view=store.snapshot_view())
                 conn.send_bytes(b"R" + pickle.dumps(
                     res, protocol=pickle.HIGHEST_PROTOCOL))
+            elif tag == b"G":
+                # partial sweep: reduce HERE, ship only the aggregates.
+                # The shard merge (sharding_router.merge_partials) happens
+                # on the caller across every shard's reply. delay_s models
+                # the data-node RPC latency of the paper's multi-host
+                # regime (same role as run_baseline's access_latency_s) —
+                # slept HERE so concurrent scatters genuinely overlap it
+                # and a serial shard loop genuinely pays it per shard;
+                # 0.0 (the production value) is a no-op.
+                now_, horizon_, delay_ = struct.unpack_from("<ddd", body)
+                if delay_ > 0.0:
+                    time.sleep(delay_)
+                from repro.core.steering import sweep_partials
+                part = sweep_partials(store.snapshot_view(), num_workers,
+                                      now_, horizon_)
+                conn.send_bytes(b"H" + wire.encode_sweep_partial(part))
             elif tag == b"X":
                 conn.send_bytes(b"Y" + pickle.dumps(
                     {"snapshot": store.snapshot(), "pid": os.getpid(),
@@ -1273,6 +1289,25 @@ class ShippedDeltaReplicator(Replicator):
             reply = self._request(b"S" + struct.pack("<d", float(now)))
             return pickle.loads(reply[1:])
 
+    def remote_sweep_partials(self, now: float, horizon: float = 60.0,
+                              delay_s: float = 0.0) -> Dict[str, object]:
+        """Run `steering.sweep_partials` IN the replica process and return
+        the decoded partial aggregates (bincount slabs + scalars + compact
+        ancestry columns) — the shard-parallel steering plane's unit of
+        work, merged across shards by `sharding_router.merge_partials`.
+        Pipelined shippers drain first, so the partial is pinned at the
+        last synced version (the caller hard-checks it). ``delay_s`` is
+        slept remotely before the sweep — modeled data-node RPC latency
+        for the latency-regime benchmarks; leave 0 in production."""
+        self.flush()
+        with self._mu:
+            if self.process is None or not self.process.is_alive():
+                self._spawn()
+            reply = self._request(
+                b"G" + struct.pack("<ddd", float(now), float(horizon),
+                                   float(delay_s)))
+            return wire.decode_sweep_partial(reply[1:])
+
     def fetch_remote_state(self) -> Dict[str, object]:
         """{snapshot, pid, num_workers, offset} straight from the replica
         process — the bit-parity and process-isolation evidence the
@@ -1499,6 +1534,15 @@ class ReplicaGroup(Replicator):
         m = self.members[self._rr % len(self.members)]
         self._rr += 1
         return m.remote_sweep(now)
+
+    def remote_sweep_partials(self, now: float, horizon: float = 60.0,
+                              delay_s: float = 0.0) -> Dict[str, object]:
+        """Partial sweep on the next member, round-robin — same analyst
+        load-spreading as :meth:`remote_sweep`, shipping only the partial
+        aggregates (the sharded steering plane merges them)."""
+        m = self.members[self._rr % len(self.members)]
+        self._rr += 1
+        return m.remote_sweep_partials(now, horizon, delay_s)
 
     # ----------------------------------------------------------- failover
     def elect(self) -> ShippedDeltaReplicator:

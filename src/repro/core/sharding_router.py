@@ -48,13 +48,16 @@ reassociation error.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import pickle
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.schema import Status
+from repro.core.steering import Q7_ACT_A, sweep_partials
 from repro.core.store import SnapshotView
 from repro.core.transport import TCPTransport
 from repro.core.workqueue import WorkQueue
@@ -71,6 +74,168 @@ class UnrecoverableShardError(RuntimeError):
     """A failed shard primary cannot be promoted: it has no replicator, or
     every replica in its group is dead too. The shard's committed state is
     only reachable through a durable checkpoint at this point."""
+
+
+class DeadShardError(RuntimeError):
+    """A remote sweep targeted a failed shard primary. A merged Q1-Q7
+    result that silently excluded a shard would misreport global state, so
+    the scatter refuses instead: ``promote_shard`` the dead primary first,
+    or run :meth:`ShardRouter.run_all` over explicitly pinned snapshots of
+    the frozen stores."""
+
+
+def merge_partials(partials: Iterable[Dict[str, object]]
+                   ) -> Dict[str, object]:
+    """Combine per-shard :func:`~repro.core.steering.sweep_partials` into
+    the single-primary Q1-Q7 result shape — the pure merge half of the
+    distributed sweep.
+
+    Shard index is list position; worker slabs land in disjoint global
+    slots (``lo = sum of preceding shards' n_workers``), Q5/Q6 segment
+    partials add in shard order (bit-stable for dyadic times), Q6 maxima
+    combine by elementwise max, and Q7 filters each shard's candidate
+    hits against the GLOBAL duration mean before the cross-shard parent
+    walk. ``q7`` holds sorted global task ids and ``version`` the version
+    vector, exactly as :meth:`ShardRouter.run_all` documents.
+    """
+    partials = list(partials)
+    if not partials:
+        raise ValueError("merge_partials needs at least one partial")
+    sizes = [int(p["n_workers"]) for p in partials]
+    W = sum(sizes)
+    started = np.zeros(W, np.int64)
+    finished = np.zeros(W, np.int64)
+    failures = np.zeros(W, np.int64)
+    fail_counts = np.zeros(W, np.int64)
+    q4 = 0
+    q5_counts = np.zeros(1, np.int64)
+    q6_cnt = np.zeros(1, np.int64)
+    q6_sum = np.zeros(1, np.float64)
+    q6_max = np.full(1, -np.inf)
+    q6_open: set = set()
+    q7_sum, q7_cnt, q7_any = 0.0, 0, False
+
+    def grow(arr, n, fill=0):
+        if n <= arr.size:
+            return arr
+        out = np.full(n, fill, arr.dtype)
+        out[:arr.size] = arr
+        return out
+
+    lo = 0
+    for p, L in zip(partials, sizes):
+        started[lo:lo + L] += p["started"]
+        finished[lo:lo + L] += p["finished"]
+        failures[lo:lo + L] += p["failures"]
+        fail_counts[lo:lo + L] += p["fail_counts"]
+        lo += L
+        q4 += int(p["q4"])
+        bc = p["q5_counts"]
+        if bc.size:
+            q5_counts = grow(q5_counts, bc.size)
+            q5_counts[:bc.size] += bc
+        q6_open.update(np.asarray(p["q6_open"]).tolist())
+        n_act = p["q6_cnt"].size
+        if n_act:
+            q6_cnt = grow(q6_cnt, n_act)
+            q6_sum = grow(q6_sum, n_act)
+            q6_max = grow(q6_max, n_act, -np.inf)
+            q6_cnt[:n_act] += p["q6_cnt"]
+            q6_sum[:n_act] += p["q6_sum"]
+            q6_max[:n_act] = np.maximum(q6_max[:n_act], p["q6_max"])
+        if p["q7_any"]:
+            q7_any = True
+            q7_sum += float(p["q7_sum"])
+            q7_cnt += int(p["q7_cnt"])
+
+    q1 = {int(w): {"started": int(started[w]),
+                   "finished": int(finished[w]),
+                   "failures": int(failures[w])}
+          for w in np.nonzero(started)[0]}
+    q3 = (np.nonzero(fail_counts == fail_counts.max())[0].tolist()
+          if fail_counts.any() else [])
+    q5 = ((int(np.argmax(q5_counts)), int(q5_counts.max()))
+          if q5_counts.any() else (-1, 0))
+    q6 = {}
+    if q6_cnt.any() and q6_open:
+        for a in np.nonzero(q6_cnt)[0]:
+            if int(a) in q6_open:
+                q6[int(a)] = (float(q6_sum[a] / q6_cnt[a]),
+                              float(q6_max[a]))
+        q6 = dict(sorted(q6.items(), key=lambda kv: -kv[1][0]))
+    q7 = _merge_q7(partials, q7_any, q7_sum, q7_cnt)
+    return {"q1": q1, "q3": q3, "q4": q4, "q5": q5, "q6": q6, "q7": q7,
+            "version": [int(p["version"]) for p in partials]}
+
+
+def _merge_q7(partials: Sequence[Dict[str, object]], any_fin_b: bool,
+              dsum: float, dcnt: int) -> List[int]:
+    """Cross-shard provenance walk over the partials' compact ancestry
+    arrays: per-shard candidate hits filtered against the GLOBAL mean,
+    then parent edges chased through an id -> (shard, compact row) map
+    (live copies shadow PRUNED tombstones). Returns sorted task ids —
+    the multiset a single primary's row-index result maps to."""
+    if not any_fin_b or dcnt == 0:
+        return []
+    mean = dsum / dcnt
+    max_id = -1
+    for p in partials:
+        if p["anc_ids"].size:
+            max_id = max(max_id, int(p["anc_ids"].max()))
+    if max_id < 0:
+        return []
+    shard_of = np.full(max_id + 1, -1, np.int32)
+    row_of = np.full(max_id + 1, -1, np.int64)
+    for prefer_live in (False, True):       # live rows overwrite PRUNED
+        for s, p in enumerate(partials):
+            ids = p["anc_ids"]
+            if prefer_live:
+                keep = ~p["anc_pruned"]
+                r = np.nonzero(keep)[0]
+                ids = ids[keep]
+            else:
+                r = np.arange(ids.size, dtype=np.int64)
+            shard_of[ids] = s
+            row_of[ids] = r
+    hits_s, hits_r = [], []
+    for s, p in enumerate(partials):
+        h = p["hit_idx"][p["hit_dur"] > mean]
+        hits_s.append(np.full(len(h), s, np.int32))
+        hits_r.append(h.astype(np.int64))
+    cur_s = np.concatenate(hits_s)
+    cur_r = np.concatenate(hits_r)
+    if not len(cur_r):
+        return []
+    acts = [p["anc_act"] for p in partials]
+    parents = [p["anc_parent"] for p in partials]
+    while True:
+        a = np.full(len(cur_r), -1, np.int64)
+        pp = np.full(len(cur_r), -1, np.int64)
+        for s in range(len(partials)):
+            m = (cur_r >= 0) & (cur_s == s)
+            if m.any():
+                a[m] = acts[s][cur_r[m]]
+                pp[m] = parents[s][cur_r[m]]
+        walk = (cur_r >= 0) & (a > Q7_ACT_A) & (pp >= 0)
+        if not walk.any():
+            break
+        pid = pp[walk]
+        inb = pid <= max_id
+        pid_c = np.minimum(pid, max_id)
+        ns = np.where(inb, shard_of[pid_c], -1)
+        nr = np.where(inb & (ns >= 0), row_of[pid_c], -1)
+        cur_s[walk] = ns.astype(np.int32)
+        cur_r[walk] = nr
+    out = []
+    for s, p in enumerate(partials):
+        m = (cur_r >= 0) & (cur_s == s)
+        if m.any():
+            rows = cur_r[m]
+            ok = acts[s][rows] == Q7_ACT_A
+            out.append(p["anc_ids"][rows[ok]])
+    if not out:
+        return []
+    return np.sort(np.concatenate(out)).tolist()
 
 
 @dataclass
@@ -117,7 +282,8 @@ class ShardRouter:
                  sync_every: int = 64,
                  transport: Optional[str] = None,
                  device_claim: Optional[bool] = None,
-                 lease_s: Optional[float] = None):
+                 lease_s: Optional[float] = None,
+                 steal_recv_timeout: Optional[float] = 30.0):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         if workers_per_shard < 1:
@@ -148,9 +314,24 @@ class ShardRouter:
             self.shards.append(Shard(index=s, wq=wq, replicator=rep))
         # the steal hop: one connected endpoint pair shared by all shards
         # (in-process stand-in for the victim->thief socket; the frames on
-        # it are the real wire payloads)
-        self._steal_tx, self._steal_rx = TCPTransport.pair()
+        # it are the real wire payloads). The recv deadline turns a wedged
+        # sibling into a TransportError — which _pull's two-phase rollback
+        # already handles — instead of a rebalance hung in recv forever.
+        self._steal_tx, self._steal_rx = TCPTransport.pair(
+            recv_timeout=steal_recv_timeout)
         self.steal_stats = StealStats()
+        # persistent scatter pool: remote_sweep / sync_replicas /
+        # replica_vector issue their per-shard requests concurrently, so
+        # the analyst wall tracks max(shard), not the serial sum (the
+        # ReplicaGroup fan-out pattern, one level up)
+        self._scatter: Optional[concurrent.futures.ThreadPoolExecutor] = \
+            concurrent.futures.ThreadPoolExecutor(
+                max_workers=num_shards,
+                thread_name_prefix="shard-scatter") \
+            if num_shards > 1 else None
+        self.last_scatter_wall_s: List[float] = [0.0] * num_shards
+        self.last_scatter_total_s = 0.0
+        self._closed = False
 
     # ------------------------------------------------------------- routing
     def shard_of(self, task_ids: np.ndarray) -> np.ndarray:
@@ -380,22 +561,51 @@ class ShardRouter:
         ``SteeringEngine.snapshot_scope``)."""
         return tuple(sh.wq.store.snapshot_view() for sh in self.shards)
 
-    def replica_vector(self) -> Tuple[SnapshotView, ...]:
+    def _scatter_map(self, fn: Callable[[int], object],
+                     concurrent_scatter: bool = True) -> List[object]:
+        """Run ``fn(shard_index)`` for every shard — on the persistent
+        scatter pool when available (wall ≈ max(shard)), else serially.
+        The caller blocks until every shard returned, so per-shard log
+        staging on pool threads happens while the producer thread is
+        parked — the TxnLog single-producer contract holds per shard."""
+        idxs = range(self.num_shards)
+        if self._scatter is None or not concurrent_scatter:
+            return [fn(s) for s in idxs]
+        return list(self._scatter.map(fn, idxs))
+
+    def replica_vector(self, *, concurrent_scatter: bool = True
+                       ) -> Tuple[SnapshotView, ...]:
         """Snapshot vector cut from the per-shard REPLICAS (analyst-side
-        HTAP: sweeps run off the primaries' claim path)."""
-        views = []
-        for sh in self.shards:
+        HTAP: sweeps run off the primaries' claim path). The per-shard
+        sync+snapshot requests scatter concurrently — independent
+        replicators, disjoint logs."""
+        def one(s: int) -> SnapshotView:
+            sh = self.shards[s]
             if sh.replicator is None:
                 raise ValueError("shard has no replicator "
                                  "(construct with replicate=...)")
             sh.replicator.sync()
-            views.append(sh.replicator.snapshot_view())
-        return tuple(views)
+            return sh.replicator.snapshot_view()
+        return tuple(self._scatter_map(one, concurrent_scatter))
 
-    def sync_replicas(self) -> None:
-        for sh in self.shards:
+    def sync_replicas(self, *, concurrent_scatter: bool = True
+                      ) -> Tuple[int, ...]:
+        """Catch every live shard's replicas up CONCURRENTLY, pinned at
+        the version vector cut on the calling thread before the scatter.
+        Returns that vector — the consistent cut a subsequent
+        ``remote_sweep(..., versions=vec, sync=False)`` analyzes (how the
+        executor splits the producer-thread sync from the analyst-thread
+        scatter). Dead shards are skipped exactly as :meth:`compact`
+        skips them (their frozen log is the promote WAL), but keep their
+        version entry."""
+        versions = self.version_vector()
+
+        def one(s: int) -> None:
+            sh = self.shards[s]
             if sh.alive and sh.replicator is not None:
-                sh.replicator.sync()
+                sh.replicator.sync(upto_version=versions[s])
+        self._scatter_map(one, concurrent_scatter)
+        return versions
 
     def compact(self) -> int:
         """Per-shard log compaction (each shard's consumer floor governs).
@@ -570,179 +780,21 @@ class ShardRouter:
         shard-local and meaningless globally — and ``version`` is the
         version vector (a list). Everything else is bit-identical to a
         W-worker single primary over the same data.
+
+        The reduction is split into two PURE pieces so the per-shard half
+        can run anywhere (an analyst thread here, or inside a replica
+        process via :meth:`remote_sweep`):
+        :func:`repro.core.steering.sweep_partials` per view, then
+        :func:`merge_partials` over the results.
         """
         if views is None:
             views = self.snapshot_vector()
         if len(views) != self.num_shards:
             raise ValueError(f"version vector has {len(views)} entries, "
                              f"expected {self.num_shards}")
-        L, W = self.workers_per_shard, self.num_global_workers
-        cols = [
-            {n: v.col(n) for n in
-             ("status", "worker_id", "start_time", "end_time",
-              "activity_id", "fail_trials", "task_id", "parent_task",
-              "out0")}
-            for v in views]
-
-        # Q1: per-shard bincounts land in disjoint global-worker slots
-        started = np.zeros(W, np.int64)
-        finished = np.zeros(W, np.int64)
-        failures = np.zeros(W, np.int64)
-        # Q3: FAILED-recently counts per global worker
-        fail_counts = np.zeros(W, np.int64)
-        q4 = 0
-        q5_counts = np.zeros(1, np.int64)
-        # Q6 partials per activity: finished count / duration sum / max
-        q6_cnt = np.zeros(1, np.int64)
-        q6_sum = np.zeros(1, np.float64)
-        q6_max = np.full(1, -np.inf)
-        q6_open: set = set()
-        # Q7 partials: global mean over finished act_b rows
-        q7_act_a, q7_act_b, q7_thr = 0, 2, 0.5
-        q7_sum, q7_cnt, q7_any = 0.0, 0, False
-
-        def grow(arr, n, fill=0):
-            if n <= arr.size:
-                return arr
-            out = np.full(n, fill, arr.dtype)
-            out[:arr.size] = arr
-            return out
-
-        for s, c in enumerate(cols):
-            st, wid, t0, t1 = (c["status"], c["worker_id"],
-                               c["start_time"], c["end_time"])
-            act = c["activity_id"]
-            lo = s * L
-            recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
-            rw = wid[recent]
-            if rw.size:
-                started[lo:lo + L] += np.bincount(rw, minlength=L)
-                finished[lo:lo + L] += np.bincount(
-                    rw, weights=(st[recent] == int(Status.FINISHED)),
-                    minlength=L).astype(np.int64)
-                failures[lo:lo + L] += np.bincount(
-                    rw, weights=c["fail_trials"][recent],
-                    minlength=L).astype(np.int64)
-            m3 = (st == int(Status.FAILED)) & (t1 >= now - horizon)
-            if m3.any():
-                fail_counts[lo:lo + L] += np.bincount(wid[m3], minlength=L)
-            mo = np.isin(st, _OPEN)
-            q4 += int(mo.sum())
-            if mo.any():
-                bc = np.bincount(act[mo])
-                q5_counts = grow(q5_counts, bc.size)
-                q5_counts[:bc.size] += bc
-            fin = st == int(Status.FINISHED)
-            q6_open.update(np.unique(act[np.isin(
-                st, [int(Status.READY), int(Status.RUNNING)])]).tolist())
-            af = act[fin]
-            if af.size:
-                d = t1[fin] - t0[fin]
-                n_act = int(af.max()) + 1
-                q6_cnt = grow(q6_cnt, n_act)
-                q6_sum = grow(q6_sum, n_act)
-                q6_max = grow(q6_max, n_act, -np.inf)
-                q6_cnt[:n_act] += np.bincount(af, minlength=n_act)
-                q6_sum[:n_act] += np.bincount(af, weights=d,
-                                              minlength=n_act)
-                np.maximum.at(q6_max, af, d)
-            fb = fin & (act == q7_act_b)
-            if fb.any():
-                q7_any = True
-                db = (t1 - t0)[fb]
-                q7_sum += float(np.nansum(db))
-                q7_cnt += int((~np.isnan(db)).sum())
-
-        q1 = {int(w): {"started": int(started[w]),
-                       "finished": int(finished[w]),
-                       "failures": int(failures[w])}
-              for w in np.nonzero(started)[0]}
-        q3 = (np.nonzero(fail_counts == fail_counts.max())[0].tolist()
-              if fail_counts.any() else [])
-        q5 = ((int(np.argmax(q5_counts)), int(q5_counts.max()))
-              if q5_counts.any() else (-1, 0))
-        q6 = {}
-        if q6_cnt.any() and q6_open:
-            for a in np.nonzero(q6_cnt)[0]:
-                if int(a) in q6_open:
-                    q6[int(a)] = (float(q6_sum[a] / q6_cnt[a]),
-                                  float(q6_max[a]))
-            q6 = dict(sorted(q6.items(), key=lambda kv: -kv[1][0]))
-        q7 = self._q7_scatter(cols, q7_any, q7_sum, q7_cnt,
-                              q7_act_a, q7_act_b, q7_thr)
-        return {"q1": q1, "q3": q3, "q4": q4, "q5": q5, "q6": q6,
-                "q7": q7, "version": [v.version for v in views]}
-
-    def _q7_scatter(self, cols, any_fin_b: bool, dsum: float, dcnt: int,
-                    act_a: int, act_b: int, thr: float) -> List[int]:
-        """Cross-shard provenance walk: per-shard hits against the GLOBAL
-        mean, then parent edges chased through an id -> (shard, row) map
-        (live copies shadow PRUNED tombstones). Returns sorted task ids —
-        the multiset a single primary's row-index result maps to."""
-        if not any_fin_b or dcnt == 0:
-            return []
-        mean = dsum / dcnt
-        max_id = -1
-        for c in cols:
-            alive = c["status"] != int(Status.EMPTY)
-            if alive.any():
-                max_id = max(max_id, int(c["task_id"][alive].max()))
-        if max_id < 0:
-            return []
-        shard_of = np.full(max_id + 1, -1, np.int32)
-        row_of = np.full(max_id + 1, -1, np.int64)
-        for prefer_live in (False, True):       # live rows overwrite PRUNED
-            for s, c in enumerate(cols):
-                st = c["status"]
-                sel = (st != int(Status.EMPTY))
-                if prefer_live:
-                    sel &= (st != int(Status.PRUNED))
-                r = np.nonzero(sel)[0]
-                ids = c["task_id"][r]
-                shard_of[ids] = s
-                row_of[ids] = r
-        hits_s, hits_r = [], []
-        for s, c in enumerate(cols):
-            st, act = c["status"], c["activity_id"]
-            dur = c["end_time"] - c["start_time"]
-            fb = (st == int(Status.FINISHED)) & (act == act_b)
-            h = np.nonzero(fb & (c["out0"] > thr) & (dur > mean))[0]
-            hits_s.append(np.full(len(h), s, np.int32))
-            hits_r.append(h.astype(np.int64))
-        cur_s = np.concatenate(hits_s)
-        cur_r = np.concatenate(hits_r)
-        if not len(cur_r):
-            return []
-        acts = [c["activity_id"] for c in cols]
-        parents = [c["parent_task"] for c in cols]
-        while True:
-            a = np.full(len(cur_r), -1, np.int64)
-            p = np.full(len(cur_r), -1, np.int64)
-            for s in range(self.num_shards):
-                m = (cur_r >= 0) & (cur_s == s)
-                if m.any():
-                    a[m] = acts[s][cur_r[m]]
-                    p[m] = parents[s][cur_r[m]]
-            walk = (cur_r >= 0) & (a > act_a) & (p >= 0)
-            if not walk.any():
-                break
-            pid = p[walk]
-            inb = pid <= max_id
-            pid_c = np.minimum(pid, max_id)
-            ns = np.where(inb, shard_of[pid_c], -1)
-            nr = np.where(inb & (ns >= 0), row_of[pid_c], -1)
-            cur_s[walk] = ns.astype(np.int32)
-            cur_r[walk] = nr
-        out = []
-        for s in range(self.num_shards):
-            m = (cur_r >= 0) & (cur_s == s)
-            if m.any():
-                rows = cur_r[m]
-                ok = acts[s][rows] == act_a
-                out.append(cols[s]["task_id"][rows[ok]])
-        if not out:
-            return []
-        return np.sort(np.concatenate(out)).tolist()
+        return merge_partials(
+            sweep_partials(v, self.workers_per_shard, now, horizon)
+            for v in views)
 
     @staticmethod
     def comparable(result: Dict[str, object]) -> Dict[str, object]:
@@ -761,26 +813,87 @@ class ShardRouter:
         return out
 
     # ----------------------------------------------------- remote analysts
-    def remote_sweep(self, now: float) -> Dict[str, object]:
-        """Scatter a remote (in-replica-process) sweep across shards and
-        gather the union: Q1 merged into global-worker keys, Q4 summed,
-        full per-shard results kept under ``shards``. (Q3/Q5/Q6/Q7 merge
-        exactly only via :meth:`run_all`'s partial-aggregate path; remote
-        analysts get the per-shard views to merge downstream.)"""
-        per = []
-        for sh in self.shards:
-            if sh.replicator is None or \
-                    not hasattr(sh.replicator, "remote_sweep"):
-                raise ValueError("remote_sweep requires replicate='remote'")
-            per.append(sh.replicator.remote_sweep(now))
-        q1: Dict[int, Dict[str, int]] = {}
-        for s, r in enumerate(per):
-            for lw, v in r["q1"].items():
-                q1[int(self.global_worker(s, int(lw)))] = v
-        return {"q1": q1,
-                "q4": int(sum(r["q4"] for r in per)),
-                "shards": per,
-                "version": [r["version"] for r in per]}
+    def remote_sweep(self, now: float, *, horizon: float = 60.0,
+                     versions: Optional[Sequence[int]] = None,
+                     sync: bool = True,
+                     concurrent_scatter: bool = True,
+                     shard_delay_s: Optional[Sequence[float]] = None
+                     ) -> Dict[str, object]:
+        """Concurrent scatter-gather of the FULL Q1-Q7 sweep through the
+        per-shard replica processes: each shard's replicator runs
+        :func:`~repro.core.steering.sweep_partials` INSIDE its replica
+        process and ships back only the partial aggregates;
+        :func:`merge_partials` combines them here into a result
+        bit-identical to :meth:`run_all` (and hence to a single-primary
+        oracle) at the same version vector.
+
+        ``sync=True`` (default) pins ``versions`` to the current version
+        vector and catches each shard's replica up to it inside the
+        scatter. Callers that must keep log staging on the producer
+        thread (the executor's analyst pool) pass the vector returned by
+        :meth:`sync_replicas` with ``sync=False`` — the scatter then only
+        issues the log-free partial-sweep requests. Each partial's view
+        version is hard-checked against the pinned vector. Per-shard
+        walls land in ``last_scatter_wall_s`` (straggler spread via
+        :meth:`scatter_spread_s`); ``concurrent_scatter=False`` is the
+        serial baseline arm the e_sharded benchmark compares against.
+
+        ``shard_delay_s`` injects a per-shard modeled data-node RPC
+        latency, slept inside each replica process before its sweep —
+        the latency-regime knob of the e_sharded fan-out benchmark
+        (same role as ``run_baseline``'s ``access_latency_s``: the
+        paper's shards are separate hosts behind a NIC) and a straggler
+        injector for spread measurements. ``None`` (production) injects
+        nothing.
+
+        Raises :class:`DeadShardError` when any shard is down — a merged
+        result silently missing a shard would misreport global state —
+        and ``ValueError`` when a shard's replicator cannot run remote
+        partial sweeps (requires ``replicate='remote'`` or
+        ``'shipped'``)."""
+        for s, sh in enumerate(self.shards):
+            if not sh.alive:
+                raise DeadShardError(
+                    f"shard {s} is down (failed primary, not yet "
+                    f"promoted) — promote_shard({s}) before sweeping, or "
+                    "run_all over pinned snapshots of the frozen stores")
+            if sh.replicator is None or not hasattr(
+                    sh.replicator, "remote_sweep_partials"):
+                raise ValueError(
+                    "remote_sweep requires replicate='remote' (or "
+                    "'shipped'): the partial sweeps run inside per-shard "
+                    "replica processes")
+        if versions is None:
+            versions = self.version_vector()
+
+        def one(s: int) -> Tuple[Dict[str, object], float]:
+            t0 = time.perf_counter()
+            sh = self.shards[s]
+            if sync:
+                sh.replicator.sync(upto_version=versions[s])
+            part = sh.replicator.remote_sweep_partials(
+                now, horizon=horizon,
+                delay_s=0.0 if shard_delay_s is None
+                else float(shard_delay_s[s]))
+            return part, time.perf_counter() - t0
+        t0 = time.perf_counter()
+        results = self._scatter_map(one, concurrent_scatter)
+        self.last_scatter_total_s = time.perf_counter() - t0
+        self.last_scatter_wall_s = [w for _, w in results]
+        parts = [p for p, _ in results]
+        for s, p in enumerate(parts):
+            if int(p["version"]) != int(versions[s]):
+                raise RuntimeError(
+                    f"shard {s} replica answered the partial sweep at "
+                    f"v{p['version']}, expected pinned v{versions[s]}")
+        return merge_partials(parts)
+
+    def scatter_spread_s(self) -> float:
+        """Straggler signal of the last remote scatter: slowest minus
+        fastest per-shard wall (the shard-level analogue of
+        ``ReplicaGroup.member_spread_s``)."""
+        return (max(self.last_scatter_wall_s)
+                - min(self.last_scatter_wall_s))
 
     # -------------------------------------------------------------- teardown
     def check_invariants(self) -> None:
@@ -791,8 +904,21 @@ class ShardRouter:
             raise AssertionError("task id owned live by two shards")
 
     def close(self) -> None:
+        """Release every shard's replicator, the scatter pool, and the
+        steal endpoints. Idempotent — a second close is a no-op — and
+        safe after :meth:`fail_shard`/:meth:`promote_shard` (promote
+        releases the old replicator and re-arms a fresh one; each armed
+        replicator is detached before its single close, so nothing is
+        double-closed)."""
+        if self._closed:
+            return
+        self._closed = True
         for sh in self.shards:
-            if sh.replicator is not None:
-                sh.replicator.close()
+            rep, sh.replicator = sh.replicator, None
+            if rep is not None:
+                rep.close()
+        if self._scatter is not None:
+            self._scatter.shutdown(wait=False)
+            self._scatter = None
         self._steal_tx.close()
         self._steal_rx.close()

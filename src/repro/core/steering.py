@@ -29,6 +29,107 @@ from repro.core.store import SnapshotView
 from repro.core.workqueue import WorkQueue
 
 
+# Q7 join parameters — one definition shared by the single-primary query
+# (q7_provenance_join defaults), the distributed partial sweep below, and
+# ShardRouter's merge, so every sweep path answers the same question.
+Q7_ACT_A, Q7_ACT_B, Q7_THR = 0, 2, 0.5
+
+
+def sweep_partials(view: SnapshotView, num_workers: int, now: float,
+                   horizon: float = 60.0) -> Dict[str, object]:
+    """Per-shard half of the distributed Q1-Q7 sweep: PURE and picklable.
+
+    Reduces one pinned snapshot to the partial aggregates
+    ``ShardRouter.merge_partials`` combines into the single-primary result
+    — Q1/Q3 per-worker bincount slabs, the Q4 open count, Q5/Q6 segment
+    partials, Q7's duration sum/count, and the COMPACTED ancestry inputs
+    (ids/activity/parent/pruned of every materialized row, plus the
+    pre-mean Q7 candidate hits) the cross-shard provenance walk needs.
+    Rows are compact indices into the ``anc_*`` arrays, not store rows, so
+    a partial computed inside a replica process merges bit-identically
+    with one computed from a local view: nothing here depends on where
+    the snapshot lives. Every numpy reduction matches the single-primary
+    queries op-for-op — that is what keeps the merged result bit-identical
+    (dyadic times assumed, as everywhere in the parity drills).
+    """
+    st = view.col("status")
+    wid = view.col("worker_id")
+    t0 = view.col("start_time")
+    t1 = view.col("end_time")
+    act = view.col("activity_id")
+    L = int(num_workers)
+    empty_i = np.zeros(0, np.int64)
+    p: Dict[str, object] = {
+        "n_workers": L, "version": int(view.version),
+        "started": np.zeros(L, np.int64),
+        "finished": np.zeros(L, np.int64),
+        "failures": np.zeros(L, np.int64),
+        "fail_counts": np.zeros(L, np.int64),
+        "q5_counts": empty_i,
+        "q6_cnt": empty_i, "q6_sum": np.zeros(0, np.float64),
+        "q6_max": np.zeros(0, np.float64),
+        "q7_sum": 0.0, "q7_cnt": 0, "q7_any": False,
+    }
+    # Q1 slab: recent rows bucketed by local worker id
+    recent = (t0 >= now - horizon) & (st != int(Status.EMPTY))
+    rw = wid[recent]
+    if rw.size:
+        p["started"] = np.bincount(rw, minlength=L)
+        p["finished"] = np.bincount(
+            rw, weights=(st[recent] == int(Status.FINISHED)),
+            minlength=L).astype(np.int64)
+        p["failures"] = np.bincount(
+            rw, weights=view.col("fail_trials")[recent],
+            minlength=L).astype(np.int64)
+    # Q3 slab: FAILED-recently counts per local worker
+    m3 = (st == int(Status.FAILED)) & (t1 >= now - horizon)
+    if m3.any():
+        p["fail_counts"] = np.bincount(wid[m3], minlength=L)
+    # Q4 / Q5: open rows
+    mo = np.isin(st, [int(Status.READY), int(Status.RUNNING),
+                      int(Status.BLOCKED)])
+    p["q4"] = int(mo.sum())
+    if mo.any():
+        p["q5_counts"] = np.bincount(act[mo])
+    # Q6 partials per activity: finished count / duration sum / max
+    fin = st == int(Status.FINISHED)
+    p["q6_open"] = np.unique(act[np.isin(
+        st, [int(Status.READY), int(Status.RUNNING)])])
+    af = act[fin]
+    if af.size:
+        d = t1[fin] - t0[fin]
+        n_act = int(af.max()) + 1
+        p["q6_cnt"] = np.bincount(af, minlength=n_act)
+        p["q6_sum"] = np.bincount(af, weights=d, minlength=n_act)
+        q6_max = np.full(n_act, -np.inf)
+        np.maximum.at(q6_max, af, d)
+        p["q6_max"] = q6_max
+    # Q7 scalar partials: duration sum/count over finished act_b rows
+    # (the global mean only exists at merge time)
+    fb = fin & (act == Q7_ACT_B)
+    if fb.any():
+        db = (t1 - t0)[fb]
+        p["q7_any"] = True
+        p["q7_sum"] = float(np.nansum(db))
+        p["q7_cnt"] = int((~np.isnan(db)).sum())
+    # ancestry inputs: every materialized row, order-preserving compaction
+    # (PRUNED tombstones included — live rows shadow them at merge)
+    sel = st != int(Status.EMPTY)
+    p["anc_ids"] = view.col("task_id")[sel]
+    p["anc_act"] = act[sel]
+    p["anc_parent"] = view.col("parent_task")[sel]
+    p["anc_pruned"] = st[sel] == int(Status.PRUNED)
+    # Q7 candidate hits as COMPACT indices, durations kept for the
+    # merge-time global-mean filter
+    c_st = st[sel]
+    c_act = act[sel]
+    cand = (c_st == int(Status.FINISHED)) & (c_act == Q7_ACT_B) \
+        & (view.col("out0")[sel] > Q7_THR)
+    p["hit_idx"] = np.nonzero(cand)[0].astype(np.int64)
+    p["hit_dur"] = (t1 - t0)[sel][cand]
+    return p
+
+
 class SteeringEngine:
     def __init__(self, wq: WorkQueue, *, use_snapshots: bool = True):
         self.wq = wq

@@ -152,10 +152,13 @@ class TCPTransport(Transport):
         self.recv_timeout = recv_timeout
 
     @classmethod
-    def pair(cls) -> Tuple["TCPTransport", "TCPTransport"]:
-        """Connected loopback endpoints (socketpair) — the unit-test rig."""
+    def pair(cls, recv_timeout: Optional[float] = None
+             ) -> Tuple["TCPTransport", "TCPTransport"]:
+        """Connected loopback endpoints (socketpair) — the unit-test rig.
+        ``recv_timeout`` applies to both ends: a wedged peer surfaces as a
+        ``TransportError`` on recv instead of a hung thread."""
         a, b = socket.socketpair()
-        return cls(a), cls(b)
+        return cls(a, recv_timeout=recv_timeout), cls(b, recv_timeout=recv_timeout)
 
     def send_bytes(self, buf) -> None:
         n = len(buf)

@@ -934,3 +934,59 @@ def decode_delta(buf) -> List[WireTxn]:
     for run in _parse_frames(buf):
         out.extend(run.recs if run.recs is not None else run.materialize())
     return out
+
+
+# ---------------------------------------------------------------------------
+# Sweep-partial codec (PR 10): ship per-shard steering partials, not views
+# ---------------------------------------------------------------------------
+#
+# The remote steering op (`G` request in repro.core.replication) runs
+# `steering.sweep_partials` INSIDE the replica process and ships back only
+# the partial aggregates — bincount slabs, a few scalars, and compact
+# ancestry columns — instead of a whole snapshot or a pickled result dict.
+# Layout: `u32 header_len | pickle((meta, descs)) | raw array bytes...`
+# where `meta` holds the scalar fields and `descs` is a list of
+# `(key, dtype_str, shape)` for each ndarray field, whose C-contiguous
+# bytes follow in order. Decode is `np.frombuffer` over the received
+# buffer — the arrays alias the wire bytes (zero-copy), same discipline as
+# the hot-frame codec above. The merge (`sharding_router.merge_partials`)
+# only reads the arrays, so aliasing read-only wire memory is safe.
+
+_PARTIAL_HDR = struct.Struct("<I")
+
+
+def encode_sweep_partial(partial: Dict[str, Any]) -> bytes:
+    """Serialize a `steering.sweep_partials` dict into one wire buffer."""
+    meta: Dict[str, Any] = {}
+    descs: List[Any] = []
+    chunks: List[bytes] = []
+    for key, val in partial.items():
+        if isinstance(val, np.ndarray):
+            arr = np.ascontiguousarray(val)
+            descs.append((key, arr.dtype.str, arr.shape))
+            chunks.append(arr.tobytes())
+        else:
+            meta[key] = val
+    head = pickle.dumps((meta, descs), protocol=pickle.HIGHEST_PROTOCOL)
+    return b"".join([_PARTIAL_HDR.pack(len(head)), head] + chunks)
+
+
+def decode_sweep_partial(buf) -> Dict[str, Any]:
+    """Inverse of :func:`encode_sweep_partial`; arrays alias ``buf``."""
+    mv = memoryview(buf)
+    (head_len,) = _PARTIAL_HDR.unpack_from(mv, 0)
+    pos = _PARTIAL_HDR.size
+    meta, descs = pickle.loads(mv[pos:pos + head_len])
+    pos += head_len
+    out: Dict[str, Any] = dict(meta)
+    for key, dtype_str, shape in descs:
+        dt = np.dtype(dtype_str)
+        n = int(np.prod(shape)) if shape else 1
+        nbytes = dt.itemsize * n
+        out[key] = np.frombuffer(mv, dtype=dt, count=n,
+                                 offset=pos).reshape(shape)
+        pos += nbytes
+    if pos != len(mv):
+        raise WireError(
+            f"sweep partial body mismatch: parsed {pos} != {len(mv)}")
+    return out

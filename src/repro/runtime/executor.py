@@ -208,8 +208,16 @@ class TrainExecutor:
                 # analyst thread; "remote" scatters the sweep into the
                 # per-shard replica processes instead
                 if self.analyst == "remote":
+                    # pin + ship on THIS (producer) thread — sync_replicas
+                    # settles every shard's replica exactly at this tick's
+                    # version vector — then scatter the partial sweeps into
+                    # the per-shard replica processes from the analyst
+                    # thread (sync=False: only log-free sweep requests ride
+                    # the pipes, so the producer keeps claiming meanwhile)
+                    vec = self.router.sync_replicas()
                     self._steer_future = self._steer_pool.submit(
-                        self.router.remote_sweep, time.time())
+                        self.router.remote_sweep, time.time(),
+                        versions=vec, sync=False)
                 else:
                     views = (self.router.replica_vector()
                              if self.analyst == "replica"

@@ -1,0 +1,323 @@
+"""Parallel steering plane (PR 10): sweep partials + remote scatter.
+
+The invariants under test: ``run_all``'s two pure pieces compose exactly —
+``merge_partials(map(sweep_partials, views))`` is bit-identical to a
+single-primary oracle on random workloads (Q8 patches and prunes
+interleaved, version-vector pinned), and computing the partials
+concurrently changes nothing; the shipped-replica ``G`` op runs
+``sweep_partials`` INSIDE the replica process and the merged remote sweep
+is bit-identical to the local path at the same pinned version vector
+(across a log truncate); dead shards surface as :class:`DeadShardError`,
+not AttributeError; a wedged steal sibling rolls back via the transport
+recv timeout; and ``close()`` is idempotent across failover."""
+import concurrent.futures
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schema import Status
+from repro.core.sharding_router import (DeadShardError, ShardRouter,
+                                        merge_partials)
+from repro.core.steering import SteeringEngine, sweep_partials
+from repro.core.transport import TCPTransport
+from repro.core.workqueue import WorkQueue
+
+S, L = 4, 4
+W = S * L
+
+
+def _fp(x):
+    return json.dumps(x, sort_keys=True, default=str)
+
+
+def _dom(ids):
+    h = (ids * 2654435761) % (1 << 10)
+    return np.stack([(h % 977) / 976.0, ((h * 3) % 911) / 910.0,
+                     ((h * 7) % 1013) / 1012.0], 1)
+
+
+def _dom_out(ids):
+    # dyadic denominators: exact in float64, so merged sums are bit-stable
+    return np.stack([(ids % 7) / 8.0, (ids % 5) / 4.0, (ids % 3) / 2.0], 1)
+
+
+def _paired(n_per_act=40, activities=3, **router_kw):
+    r = ShardRouter(S, L, **router_kw)
+    o = WorkQueue(num_workers=W)
+    prev = None
+    for a in range(activities):
+        ids = np.arange(a * n_per_act, (a + 1) * n_per_act, dtype=np.int64)
+        kw = dict(domain_in=_dom(ids), duration_est=1.0, now=0.0)
+        if prev is not None:
+            kw["parent_task"] = prev
+        r.add_tasks(a, n_per_act, **kw)
+        o.add_tasks(a, n_per_act, **kw)
+        prev = ids
+    return r, o
+
+
+def _shard_rows(r, ids):
+    out = []
+    owner = r.shard_of(ids)
+    for s in range(S):
+        m = owner == s
+        if not m.any():
+            continue
+        tid = r.shards[s].wq.store.col("task_id")
+        pos = np.searchsorted(tid, ids[m])
+        assert np.array_equal(tid[pos], ids[m])
+        out.append((s, pos))
+    return out
+
+
+def _drive(r, o, rng, rounds):
+    """Random mirrored claims/fails/finishes with Q8 patches and prunes
+    interleaved at random rounds; dyadic times keep merged sums exact."""
+    clock = 1.0
+    patch_rnd = int(rng.integers(0, max(rounds, 1)))
+    prune_rnd = int(rng.integers(0, max(rounds, 1)))
+    for rnd in range(rounds):
+        k = int(rng.integers(1, 4))
+        oc = o.claim_all(k=k, now=clock, steal=False)
+        r.claim_all(k=k, now=clock, steal=False)
+        o_ids = {g: np.sort(o.store.col("task_id")[rows])
+                 for g, rows in oc.items() if len(rows)}
+        if o_ids:
+            all_ids = np.sort(np.concatenate(list(o_ids.values())))
+            stride = int(rng.integers(3, 9))
+            fail_ids = all_ids[::stride] if rng.random() < 0.4 \
+                else all_ids[:0]
+            fin = np.setdiff1d(all_ids, fail_ids)
+            fa, fb = fin[fin % 2 == 0], fin[fin % 2 == 1]
+            if len(fail_ids):
+                o.fail(fail_ids, now=clock + 0.25)
+                for s, pos in _shard_rows(r, fail_ids):
+                    r.shards[s].wq.fail(pos, now=clock + 0.25)
+            for ids_, dt in ((fa, 1.0), (fb, 1.5)):
+                if not len(ids_):
+                    continue
+                o.finish(ids_, now=clock + dt, domain_out=_dom_out(ids_))
+                for s, pos in _shard_rows(r, ids_):
+                    tid = r.shards[s].wq.store.col("task_id")[pos]
+                    r.shards[s].wq.finish(pos, now=clock + dt,
+                                          domain_out=_dom_out(tid))
+        if rnd == patch_rnd:
+            SteeringEngine(o).q8_patch_ready(0, "in0", 9.5,
+                                             predicate=lambda v: v > 0.8)
+            for sh in r.shards:
+                SteeringEngine(sh.wq).q8_patch_ready(
+                    0, "in0", 9.5, predicate=lambda v: v > 0.8)
+        if rnd == prune_rnd:
+            SteeringEngine(o).prune("in1", 0.0, 0.05)
+            for sh in r.shards:
+                SteeringEngine(sh.wq).prune("in1", 0.0, 0.05)
+        clock += 2.0
+    return clock
+
+
+# ------------------------------------------------ partials decomposition
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), rounds=st.integers(1, 8),
+       n_per_act=st.integers(8, 48))
+def test_merged_partials_bit_identical_to_oracle(seed, rounds, n_per_act):
+    """merge_partials(map(sweep_partials, views)) at a pinned version
+    vector == the single-primary oracle, on random workloads with Q8
+    patches + prunes interleaved — the refactor's bit-parity property."""
+    rng = np.random.default_rng(seed)
+    r, o = _paired(n_per_act=n_per_act)
+    clock = _drive(r, o, rng, rounds)
+    views = r.snapshot_vector()
+    merged = merge_partials(
+        [sweep_partials(v, L, clock) for v in views])
+    assert merged["version"] == [v.version for v in views]
+    via_run_all = r.run_all(clock, views=views)
+    assert _fp(merged) == _fp(via_run_all)
+    oview = o.store.snapshot_view()
+    onorm = ShardRouter.oracle_normalize(
+        SteeringEngine(o).run_all(clock, view=oview), oview)
+    assert _fp(ShardRouter.comparable(merged)) == _fp(onorm)
+    # concurrent partials (one thread per shard) merge identically: the
+    # partials are pure functions of pinned COW views
+    with concurrent.futures.ThreadPoolExecutor(max_workers=S) as pool:
+        conc = list(pool.map(lambda v: sweep_partials(v, L, clock), views))
+    assert _fp(merge_partials(conc)) == _fp(merged)
+    r.close()
+
+
+def test_merge_partials_rejects_empty():
+    with pytest.raises(ValueError):
+        merge_partials([])
+
+
+# ------------------------------------------------- remote partial sweeps
+def test_remote_sweep_merges_full_q1_q7_across_truncate():
+    """The shipped G op: per-shard sweep_partials INSIDE the replica
+    processes, merged result bit-identical to the local run_all and the
+    single-primary oracle at the same pinned vector — across a per-shard
+    log truncate — and the concurrent scatter equals the serial one."""
+    rng = np.random.default_rng(7)
+    r, o = _paired(replicate="shipped", sync_every=8)
+    clock = _drive(r, o, rng, rounds=4)
+    r.sync_replicas()
+    assert r.compact() > 0                     # acked -> per-shard truncate
+    clock = max(clock, _drive(r, o, rng, rounds=3))  # ship ACROSS it
+    vec = r.sync_replicas()
+    views = r.snapshot_vector()
+    assert tuple(vec) == tuple(v.version for v in views)
+    res = r.remote_sweep(clock, versions=vec, sync=False)
+    assert set(res) == {"q1", "q3", "q4", "q5", "q6", "q7", "version"}
+    assert res["version"] == [int(v) for v in vec]
+    assert _fp(res) == _fp(r.run_all(clock, views=views))
+    oview = o.store.snapshot_view()
+    onorm = ShardRouter.oracle_normalize(
+        SteeringEngine(o).run_all(clock, view=oview), oview)
+    assert _fp(ShardRouter.comparable(res)) == _fp(onorm)
+    serial = r.remote_sweep(clock, versions=vec, sync=False,
+                            concurrent_scatter=False)
+    assert _fp(serial) == _fp(res)
+    assert len(r.last_scatter_wall_s) == S
+    assert all(w > 0 for w in r.last_scatter_wall_s)
+    assert r.scatter_spread_s() >= 0.0
+    # a stale pinned vector is a hard error, not a silent mismatch
+    with pytest.raises(RuntimeError, match="expected pinned"):
+        r.remote_sweep(clock, versions=[v + 1 for v in vec], sync=False)
+    r.close()
+
+
+def test_remote_sweep_default_sync_pins_current_vector():
+    rng = np.random.default_rng(11)
+    r, o = _paired(replicate="shipped", sync_every=4)
+    clock = _drive(r, o, rng, rounds=3)
+    res = r.remote_sweep(clock)                # sync=True: pins + catches up
+    assert res["version"] == [int(v) for v in r.version_vector()]
+    assert _fp(res) == _fp(r.run_all(clock))
+    r.close()
+
+
+def test_remote_sweep_requires_process_replicas_and_live_shards():
+    r = ShardRouter(2, 2, replicate="delta")
+    r.add_tasks(0, 8, now=0.0)
+    with pytest.raises(ValueError, match="replicate='remote'"):
+        r.remote_sweep(1.0)
+    r.close()
+    r2 = ShardRouter(2, 2)
+    r2.add_tasks(0, 8, now=0.0)
+    with pytest.raises(ValueError, match="replicate="):
+        r2.remote_sweep(1.0)
+    r2.close()
+
+
+def test_remote_sweep_dead_shard_raises_dead_shard_error():
+    r, _ = _paired(replicate="shipped")
+    r.fail_shard(1)
+    with pytest.raises(DeadShardError, match="shard 1 is down"):
+        r.remote_sweep(1.0)
+    r.promote_shard(1)                        # failover re-arms the shard
+    res = r.remote_sweep(1.0)                 # ...and sweeps work again
+    assert _fp(res) == _fp(r.run_all(1.0))
+    r.close()
+
+
+def test_concurrent_sync_and_replica_vector_match_serial():
+    rng = np.random.default_rng(13)
+    r, o = _paired(replicate="delta", sync_every=4)
+    _drive(r, o, rng, rounds=3)
+    vec = r.sync_replicas()
+    assert tuple(vec) == r.version_vector()
+    serial_vec = r.sync_replicas(concurrent_scatter=False)
+    assert tuple(serial_vec) == tuple(vec)
+    views_c = r.replica_vector()
+    views_s = r.replica_vector(concurrent_scatter=False)
+    assert [v.version for v in views_c] == [v.version for v in views_s]
+    assert _fp(r.run_all(9.0, views=views_c)) \
+        == _fp(r.run_all(9.0, views=views_s))
+    r.close()
+
+
+# ------------------------------------------------------- steal timeout
+def test_wedged_steal_sibling_times_out_and_rolls_back():
+    """A sibling that never acks turns the steal into a TransportError
+    (the PR 8 recv_timeout knob, now armed on the steal pair) and the
+    two-phase rollback re-inserts the pruned chunk — no hung recv, no
+    lost task."""
+    r = ShardRouter(2, 2, steal_recv_timeout=0.2)
+    r.add_tasks(0, 16, now=0.0)
+    # drain shard 0 so rebalance will steal from shard 1
+    sh0 = r.shards[0]
+    got = sh0.wq.claim_all(k=16, now=1.0)
+    rows = np.concatenate([v for v in got.values() if len(v)])
+    sh0.wq.finish(rows, now=2.0)
+    # wedge the wire: tx now feeds a foreign endpoint, so the thief-side
+    # ack never reaches _steal_rx and the recv must hit its deadline
+    wedged_a, wedged_b = TCPTransport.pair()
+    real_tx = r._steal_tx
+    r._steal_tx = wedged_a
+    live = r.live_task_ids()
+    assert r.rebalance(now=3.0) == 0
+    assert r.steal_stats.rollbacks == 1
+    assert r.steal_stats.rolled_back_tasks > 0
+    assert np.array_equal(live, r.live_task_ids())   # rollback conserved
+    ready = r.shards[1].wq.store.col("status") == int(Status.READY)
+    assert ready.sum() > 0                           # chunk claimable again
+    r._steal_tx = real_tx
+    wedged_a.close()
+    wedged_b.close()
+    r.check_invariants()
+    r.close()
+
+
+# --------------------------------------------------------- close safety
+def test_close_is_idempotent():
+    r = ShardRouter(2, 2, replicate="delta")
+    r.add_tasks(0, 4, now=0.0)
+    r.close()
+    r.close()                                  # second close: no-op
+
+
+def test_close_safe_after_fail_and_promote():
+    r, _ = _paired(n_per_act=8, replicate="shipped")
+    r.fail_shard(0)                            # frozen replica still armed
+    r.close()
+    r.close()
+    r2, _ = _paired(n_per_act=8, replicate="shipped")
+    r2.fail_shard(1)
+    r2.promote_shard(1)                        # re-arms a fresh replicator
+    r2.close()
+    r2.close()
+
+
+def test_close_noop_single_shard_without_scatter_pool():
+    r = ShardRouter(1, 2)
+    assert r._scatter is None                  # no pool to shut down
+    r.add_tasks(0, 2, now=0.0)
+    r.close()
+    r.close()
+
+
+# ------------------------------------------------------------ executor
+def test_train_executor_sharded_remote_analyst_merged_sweep():
+    """analyst='remote' + shards: the producer thread pins the vector via
+    sync_replicas, the analyst pool scatters the partial sweeps into the
+    replica processes, and last_steering carries the FULL merged Q1-Q7
+    result (not the old Q1/Q4 union)."""
+    from repro.configs import smoke_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.executor import TrainExecutor
+    cfg = smoke_config("qwen2-0.5b")
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4)
+    ex = TrainExecutor(cfg, num_workers=4, shards=2, data_cfg=data,
+                       steer_every=4, analyst="remote")
+    ex.submit_steps(12)
+    hist = ex.run()
+    ex.close()
+    assert len(hist) == 12
+    assert ex.router.tasks_left() == 0
+    assert ex.last_steering is not None
+    assert set(ex.last_steering) \
+        == {"q1", "q3", "q4", "q5", "q6", "q7", "version"}
+    assert ex.last_steering["q4"] == 0
+    assert isinstance(ex.last_steering["version"], list)
+    assert len(ex.last_steering["version"]) == 2

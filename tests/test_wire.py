@@ -480,3 +480,59 @@ def test_shipped_remote_error_surfaces_and_respawns():
         assert np.array_equal(view.col(name), state["snapshot"]["cols"][name],
                               equal_nan=True), name
     rep.close()
+
+
+# ------------------------------------------------- sweep-partial codec
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(0, 64))
+def test_sweep_partial_codec_round_trip(seed, n):
+    """encode/decode of steering sweep partials is bit-exact: scalars by
+    value, arrays (any dtype, empty included) by bytes."""
+    rng = np.random.default_rng(seed)
+    part = {
+        "n_workers": int(rng.integers(1, 9)),
+        "version": int(rng.integers(0, 1 << 40)),
+        "started": rng.integers(0, 99, 4).astype(np.int64),
+        "q4": int(rng.integers(0, 99)),
+        "q7_sum": float(rng.uniform(-1e6, 1e6)),
+        "q7_any": bool(rng.integers(0, 2)),
+        "hit_dur": rng.uniform(0, 9, n),
+        "anc_ids": rng.integers(0, 1 << 30, n).astype(np.int64),
+        "anc_pruned": rng.integers(0, 2, n).astype(bool),
+        "q5_counts": np.empty(0, np.int64),
+        "q6_max": np.full(3, -np.inf),
+    }
+    buf = wire.encode_sweep_partial(part)
+    back = wire.decode_sweep_partial(buf)
+    assert set(back) == set(part)
+    for k, v in part.items():
+        if isinstance(v, np.ndarray):
+            assert back[k].dtype == v.dtype and back[k].shape == v.shape
+            assert np.array_equal(back[k], v, equal_nan=True), k
+        else:
+            assert back[k] == v and type(back[k]) is type(v), k
+    # decoded arrays alias the wire buffer: no copy on the analyst path
+    if n:
+        assert back["anc_ids"].base is not None
+
+
+def test_sweep_partial_codec_rejects_trailing_garbage():
+    buf = wire.encode_sweep_partial({"version": 1,
+                                     "xs": np.arange(3, dtype=np.int64)})
+    with pytest.raises(wire.WireError, match="body mismatch"):
+        wire.decode_sweep_partial(buf + b"\x00")
+
+
+def test_sweep_partial_of_real_view_round_trips():
+    """Partials of an actual store view survive the wire bit-exactly and
+    merge to the same result as the un-shipped partials."""
+    from repro.core.sharding_router import merge_partials
+    from repro.core.steering import sweep_partials
+    rng = np.random.default_rng(21)
+    wq = WorkQueue(num_workers=4)
+    wq.add_tasks(0, 24, domain_in=rng.uniform(0, 1, (24, 3)))
+    mixed_workload(wq, rng, rounds=4)
+    part = sweep_partials(wq.store.snapshot_view(), 4, 50.0)
+    back = wire.decode_sweep_partial(wire.encode_sweep_partial(part))
+    assert sweep_key(merge_partials([back])) \
+        == sweep_key(merge_partials([part]))
